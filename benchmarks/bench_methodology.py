@@ -1,0 +1,104 @@
+"""Paper Fig. 4 + Fig. 5: the 3-stage policy-design methodology.
+
+Stage 1: AWGN perturbation sweep (rho in [0,2], paper Eq. 3) through the
+MMSE-only pipeline (Fig. 3 harness) recording downstream KPMs.
+Stage 2: monotonicity filtering (Spearman |r| >= 0.8).
+Stage 3: Pearson + hierarchical clustering redundancy reduction at 0.8.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import SLOT_CFG, fmt_row, get_pipeline
+from repro.core.methodology import (
+    design_policy_inputs,
+    monotonicity_filter,
+    sensitivity_sweep,
+)
+from repro.phy.pipeline import LinkState
+from repro.phy.scenario import GOOD
+
+AERIAL_KPMS = ("code_rate", "sinr", "qam_order", "mcs_index", "tb_size",
+               "n_code_blocks", "pdu_length", "ndi", "rsrp")
+OAI_KPMS = ("snr", "mac_throughput", "lcid4_throughput", "mac_rx_bytes",
+            "lcid4_rx_bytes")
+
+
+def run(n_trials: int = 4, rho_step: float = 0.2) -> dict:
+    pipe = get_pipeline()
+    rhos = tuple(np.round(np.arange(0.0, 2.0 + 1e-9, rho_step), 3))
+
+    state = {"link": LinkState(), "i": 0}
+
+    def eval_fn(rho, key):
+        state["i"] += 1
+        link, out, kpms = pipe.run_slot(
+            jax.random.fold_in(key, state["i"]), 1, state["link"], GOOD,
+            perturb_rho=rho,
+        )
+        state["link"] = link
+        return {**kpms["aerial"], **kpms["oai"]}
+
+    # Stage 1 — Fig. 4
+    sweep = sensitivity_sweep(eval_fn, rhos=rhos, n_trials=n_trials)
+    print("\n== Stage 1: KPM degradation vs rho (paper Fig. 4) ==")
+    print(fmt_row("kpm", "rho=0", "rho=1", "rho=2", "trend"))
+    for k, name in enumerate(sweep.kpm_names):
+        m = sweep.means[:, k]
+        trend = "down" if m[-1] < m[0] else ("up" if m[-1] > m[0] else "flat")
+        print(fmt_row(name, f"{m[0]:.4g}", f"{m[len(m)//2]:.4g}",
+                      f"{m[-1]:.4g}", trend))
+
+    # Stage 2 — monotonicity
+    kept = monotonicity_filter(sweep, min_abs_spearman=0.8)
+    print("\n== Stage 2: monotonicity filter (|Spearman| >= 0.8) ==")
+    for name, r in sorted(kept.items(), key=lambda kv: kv[1]):
+        print(fmt_row(name, f"spearman={r:+.3f}"))
+    dropped = [n for n in sweep.kpm_names if n not in kept]
+    print(fmt_row("dropped", ", ".join(dropped) if dropped else "(none)", w=60))
+
+    # Stage 3 — Fig. 5 (clustering on raw per-slot samples across the sweep)
+    flat = {  # (R*T,) per KPM
+        name: sweep.samples[:, :, k].reshape(-1)
+        for k, name in enumerate(sweep.kpm_names)
+    }
+    aerial = {n: flat[n] for n in AERIAL_KPMS if n in flat}
+    oai = {n: flat[n] for n in OAI_KPMS if n in flat}
+    selected, a_res, o_res = design_policy_inputs(aerial, oai)
+
+    print("\n== Stage 3: redundancy reduction (threshold 0.8, paper Fig. 5) ==")
+    print("Aerial clusters:")
+    for c in sorted(set(a_res.labels)):
+        members = [a_res.names[i] for i in range(len(a_res.names))
+                   if a_res.labels[i] == c]
+        print(fmt_row(f"  cluster {c}", ", ".join(members), w=70))
+    print("OAI clusters:")
+    for c in sorted(set(o_res.labels)):
+        members = [o_res.names[i] for i in range(len(o_res.names))
+                   if o_res.labels[i] == c]
+        print(fmt_row(f"  cluster {c}", ", ".join(members), w=70))
+    print("\nSelected policy inputs:", ", ".join(selected))
+
+    # link-adaptation block check (paper: code_rate..n_code_blocks cluster)
+    la = ["mcs_index", "tb_size", "qam_order", "code_rate"]
+    la_pairs = []
+    for i, a in enumerate(la):
+        for b in la[i + 1:]:
+            ia, ib = a_res.names.index(a), a_res.names.index(b)
+            la_pairs.append(abs(a_res.corr[ia, ib]))
+    print(f"link-adaptation block |corr| range: "
+          f"{min(la_pairs):.2f}..{max(la_pairs):.2f} (paper: 0.81..1.00)")
+
+    return {
+        "monotone_kpms": kept,
+        "selected": selected,
+        "la_corr_min": min(la_pairs),
+        "n_aerial_clusters": len(set(a_res.labels)),
+        "n_oai_clusters": len(set(o_res.labels)),
+    }
+
+
+if __name__ == "__main__":
+    run()

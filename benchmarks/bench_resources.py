@@ -1,0 +1,106 @@
+"""Paper Fig. 11: GPU power / utilization / CPU memory per expert.
+
+This container has no power rails, so the proxy model maps each expert's
+static compute profile (FLOPs + HBM bytes per slot, from the bank's cost
+model) onto the paper's measured GH200 envelope:
+
+    util  = busy_time / slot_time,  busy_time = max(flops/peak, bytes/bw)
+    power = idle_power + (max_power - idle_power) * util
+
+calibrated so that unconditional-AI execution under good conditions
+reproduces the paper's 164.2 W / 67% and MMSE its 148.4 W / 50%.  What the
+proxy then *predicts* — the power gap between experts per condition, and the
+saving ARCHES realizes by defaulting to MMSE — is the deliverable, mirroring
+the paper's performance-per-watt argument.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import NET, SLOT_CFG, campaign, fmt_row, get_pipeline, median
+from repro.core.expert_bank import ExecutionMode
+from repro.phy.estimators import estimator_flops
+
+# paper Fig. 11 anchors (GH200, good conditions)
+PAPER = {
+    "ai_power_w": 164.2, "mmse_power_w": 148.4,
+    "ai_util": 0.67, "mmse_util": 0.50,
+    "poor_ai_util": 0.36, "poor_mmse_util": 0.35,
+}
+
+
+def _calibrate():
+    """Solve the 2-point linear model from the paper's good-condition data."""
+    f_ai = NET.flops(SLOT_CFG) + estimator_flops(SLOT_CFG)  # concurrent: both
+    f_mmse = estimator_flops(SLOT_CFG)
+    # busy-time proxy: FLOPs dominate for the CNN; normalize by slot budget
+    u_ai, u_mmse = PAPER["ai_util"], PAPER["mmse_util"]
+    # util = base_util + k * flops  (base = PHY pipeline minus estimator)
+    k = (u_ai - u_mmse) / (f_ai - f_mmse)
+    base_util = u_mmse - k * f_mmse
+    # power = idle + c * util
+    c = (PAPER["ai_power_w"] - PAPER["mmse_power_w"]) / (u_ai - u_mmse)
+    idle = PAPER["ai_power_w"] - c * u_ai
+    return k, base_util, c, idle
+
+
+def _load_scale(cond: str) -> float:
+    """Scheduling-grant duty factor: poor conditions lower the GPU load
+    (paper: 'reduced scheduling grants lower overall GPU load')."""
+    tput_good = median(campaign(1, "good")["phy_throughput"])
+    tput = median(campaign(1, cond)["phy_throughput"])
+    return 0.35 + 0.65 * (tput / tput_good)
+
+
+def run() -> dict:
+    k, base_util, c, idle = _calibrate()
+    f_mmse = estimator_flops(SLOT_CFG)
+    f_ai_only = NET.flops(SLOT_CFG)
+
+    def model(flops, cond):
+        util = (base_util + k * flops) * _load_scale(cond)
+        return util, idle + c * util
+
+    print("\n== GPU power/utilization proxy (paper Fig. 11) ==")
+    print(fmt_row("condition", "expert", "util (ours)", "power W (ours)",
+                  "paper util/W"))
+    rows = {}
+    for cond in ("good", "poor"):
+        for name, fl in (("AI", f_ai_only + f_mmse), ("MMSE", f_mmse)):
+            u, p = model(fl, cond)
+            paper_ref = {
+                ("good", "AI"): "67% / 164.2", ("good", "MMSE"): "50% / 148.4",
+                ("poor", "AI"): "36% / ~149", ("poor", "MMSE"): "35% / ~148",
+            }[(cond, name)]
+            print(fmt_row(cond, name, f"{u*100:.0f}%", f"{p:.1f}", paper_ref))
+            rows[(cond, name)] = (u, p)
+
+    d_good = rows[("good", "AI")][1] - rows[("good", "MMSE")][1]
+    d_poor = rows[("poor", "AI")][1] - rows[("poor", "MMSE")][1]
+    du_good = (rows[("good", "AI")][0] - rows[("good", "MMSE")][0]) * 100
+    print("\nDefaulting to MMSE in good conditions saves "
+          f"{d_good:.1f} W and {du_good:.0f} pp utilization "
+          "(paper: 15.8 W, 17 pp)")
+    print(f"Power gap shrinks to {d_poor:.1f} W under poor conditions "
+          "(paper: ~1 W)")
+
+    # selected-only vs concurrent mode energy (beyond-paper quantification)
+    pipe_c = get_pipeline()
+    pipe_s = get_pipeline(execution_mode=ExecutionMode.SELECTED_ONLY)
+    f_conc = pipe_c.bank.flops_for()
+    f_sel_mmse = pipe_s.bank.flops_for(1)
+    print("\nExecution-mode energy (FLOPs/slot):")
+    print(fmt_row("concurrent (both)", f"{f_conc:.3g}"))
+    print(fmt_row("selected-only (MMSE)", f"{f_sel_mmse:.3g}",
+                  f"saves {(1 - f_sel_mmse / f_conc) * 100:.0f}%"))
+    return {
+        "power_saving_good_w": d_good,
+        "util_saving_good_pp": du_good,
+        "power_gap_poor_w": d_poor,
+        "selected_only_flop_saving": 1 - f_sel_mmse / f_conc,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Paper Fig. 8: runtime statistics of the switching mechanism components.
+
+Measures wall-time on this host for: the switch kernel no-op path (mode=0),
+the copy path (mode=1), decision-tree inference (single + batched), the MMSE
+kernel, and the AI estimator — and reports the *structural* quantities that
+transfer to the TPU target (bytes moved per path, FLOPs per expert, expected
+path asymmetry). The paper's GH200 microseconds are printed alongside.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import NET, SLOT_CFG, fmt_row, get_ai_params
+from repro.core.policy import DecisionTreePolicy, fit_decision_tree
+from repro.kernels.switch_select import switch_select
+from repro.phy.ai_estimator import ai_estimate_from_ls
+from repro.phy.estimators import WienerInterpolator, estimator_flops
+from repro.kernels.mmse_interp import mmse_interp
+from repro.core.telemetry import SELECTED_KPMS
+
+
+def _time(fn, *args, reps=30, warmup=3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run() -> dict:
+    cfg = SLOT_CFG
+    params, _ = get_ai_params()
+    shape = (cfg.n_ant, cfg.n_layers, cfg.n_sc, cfg.n_dmrs_sym)
+    key = jax.random.PRNGKey(0)
+    h_ai = (jax.random.normal(key, shape) + 1j * jax.random.normal(key, shape)).astype(jnp.complex64)
+    h_mmse = h_ai * 0.9
+
+    sw = jax.jit(lambda m: switch_select(m, [h_ai, h_mmse]))
+    t_noop = _time(sw, jnp.int32(0))
+    t_copy = _time(sw, jnp.int32(1))
+
+    # decision tree (trained on synthetic data, depth 2 x 10 KPMs, paper cfg)
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(512, len(SELECTED_KPMS))).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.int32)
+    tree = fit_decision_tree(X, y, depth=2)
+    pol = DecisionTreePolicy(tree, SELECTED_KPMS)
+    xj = jnp.asarray(X[0])
+    t_tree = _time(lambda v: pol(v), xj)
+    xb = jnp.asarray(X)
+    t_tree_batch = _time(lambda v: pol.batch(v), xb) / len(X)
+
+    # experts
+    wi = WienerInterpolator.build(cfg)
+    h_ls = (jax.random.normal(key, (cfg.n_ant, cfg.n_dmrs_sym, cfg.n_pilot_sc))
+            + 1j * jax.random.normal(key, (cfg.n_ant, cfg.n_dmrs_sym, cfg.n_pilot_sc))
+            ).astype(jnp.complex64)
+    mmse_fn = jax.jit(lambda h: mmse_interp(h, wi.w))
+    t_mmse = _time(mmse_fn, h_ls)
+    ai_fn = jax.jit(lambda h: ai_estimate_from_ls(params, h))
+    t_ai = _time(ai_fn, h_ls, reps=10)
+
+    buf_bytes = int(np.prod(shape)) * 8  # complex64
+    print("\n== Switching-mechanism runtimes (paper Fig. 8) ==")
+    print(fmt_row("component", "this host (us)", "paper GH200 (us)"))
+    print(fmt_row("switch kernel noop(AI)", f"{t_noop:.1f}", "3.36"))
+    print(fmt_row("switch kernel copy(MMSE)", f"{t_copy:.1f}", "4.89"))
+    print(fmt_row("decision tree (single)", f"{t_tree:.2f}", "0.41"))
+    print(fmt_row("decision tree (batched)", f"{t_tree_batch:.4f}", "-"))
+    print(fmt_row("MMSE expert", f"{t_mmse:.1f}", "5.04"))
+    print(fmt_row("AI expert", f"{t_ai:.1f}", "432"))
+    print(fmt_row("AI/MMSE latency ratio", f"{t_ai/t_mmse:.1f}x", "85x"))
+    print(fmt_row("switch buffer", f"{buf_bytes/1024:.0f} KiB", "-"))
+
+    flops_ai = NET.flops(cfg)
+    flops_mmse = estimator_flops(cfg)
+    print(fmt_row("AI expert FLOPs/slot", f"{flops_ai:.3g}", "-"))
+    print(fmt_row("MMSE expert FLOPs/slot", f"{flops_mmse:.3g}", "-"))
+    print(fmt_row("AI/MMSE FLOP ratio", f"{flops_ai/flops_mmse:.1f}x", "-"))
+
+    return {
+        "t_noop_us": t_noop, "t_copy_us": t_copy,
+        "t_tree_us": t_tree, "t_tree_batch_us": t_tree_batch,
+        "t_mmse_us": t_mmse, "t_ai_us": t_ai,
+        "ai_mmse_latency_ratio": t_ai / t_mmse,
+        "ai_mmse_flop_ratio": flops_ai / flops_mmse,
+    }
+
+
+if __name__ == "__main__":
+    run()

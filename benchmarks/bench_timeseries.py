@@ -1,0 +1,98 @@
+"""Paper Fig. 9: PHY throughput over time across good -> poor -> good,
+under continuous AI, continuous MMSE, and ARCHES switching."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import N_SLOTS, fmt_row, get_pipeline
+from repro.core.dapp import DApp, connect_dapp
+from repro.core.e3 import E3Agent
+from repro.core.policy import DecisionTreePolicy, fit_decision_tree
+from repro.core.runtime import ArchesRuntime
+from repro.core.telemetry import SELECTED_KPMS
+from repro.phy.pipeline import LinkState
+from repro.phy.scenario import good_poor_good_schedule
+
+
+def _static_run(pipe, schedule, mode, n):
+    link = LinkState()
+    tput = []
+    for i in range(n):
+        link, out, kpms = pipe.run_slot(
+            jax.random.PRNGKey(i), mode, link, schedule(i)
+        )
+        tput.append(out["phy_bits_per_s"])
+    return np.asarray(tput)
+
+
+def run(n_phase: int | None = None) -> dict:
+    n_phase = n_phase or max(N_SLOTS // 3, 10)
+    n = 3 * n_phase
+    pipe = get_pipeline()
+    schedule = good_poor_good_schedule(poor_start=n_phase, poor_end=2 * n_phase)
+
+    # dashed lines: continuous execution of each expert
+    tput_ai = _static_run(pipe, schedule, 0, n)
+    tput_mmse = _static_run(pipe, schedule, 1, n)
+
+    # train the switching policy on profiled data from both experts
+    X, y = [], []
+    for mode in (0, 1):
+        link = LinkState()
+        for i in range(n):
+            link, out, kpms = pipe.run_slot(
+                jax.random.PRNGKey(10_000 + i), mode, link, schedule(i)
+            )
+            flat = {**kpms["aerial"], **kpms["oai"]}
+            X.append([flat[k] for k in SELECTED_KPMS])
+            y.append(0 if schedule(i).interference else 1)
+    tree = fit_decision_tree(np.asarray(X, np.float32), np.asarray(y), depth=2)
+    policy = DecisionTreePolicy(tree, SELECTED_KPMS)
+
+    # solid line: ARCHES
+    agent = E3Agent()
+    dapp = DApp(policy, SELECTED_KPMS, window_slots=2)
+    connect_dapp(agent, dapp)
+    runtime = ArchesRuntime(
+        pipe.make_slot_fn(schedule), agent, default_mode=1, fail_safe_mode=1,
+        ttl_slots=8, keep_outputs=True,
+    )
+    hist = runtime.run(range(n))
+    tput_arches = np.asarray([r.output["phy_bits_per_s"] for r in hist.records])
+    modes = hist.modes
+
+    def phase(x, lo, hi):
+        return float(np.mean(x[lo:hi])) / 1e6
+
+    g1, p, g2 = (2, n_phase), (n_phase + 2, 2 * n_phase), (2 * n_phase + 2, n)
+    print("\n== PHY throughput time series (paper Fig. 9) ==")
+    print(fmt_row("phase", "AI (Mbps)", "MMSE (Mbps)", "ARCHES (Mbps)",
+                  "ARCHES mode"))
+    for name, (lo, hi) in (("good#1", g1), ("poor", p), ("good#2", g2)):
+        frac_ai = float(np.mean(modes[lo:hi] == 0))
+        print(fmt_row(name, f"{phase(tput_ai, lo, hi):.1f}",
+                      f"{phase(tput_mmse, lo, hi):.1f}",
+                      f"{phase(tput_arches, lo, hi):.1f}",
+                      f"{frac_ai*100:.0f}% AI"))
+    n_sw = int(hist.final_state.n_switches)
+    print(fmt_row("mode switches", n_sw, "(transitions at slot boundaries)"))
+
+    # ARCHES must track the better expert in each phase
+    ok = (
+        np.mean(modes[slice(*p)] == 0) > 0.5
+        and np.mean(modes[slice(*g1)] == 1) > 0.5
+    )
+    print(fmt_row("tracks conditions", "yes" if ok else "NO"))
+    return {
+        "tput_ai_poor": phase(tput_ai, *p),
+        "tput_mmse_poor": phase(tput_mmse, *p),
+        "tput_arches_poor": phase(tput_arches, *p),
+        "n_switches": n_sw,
+        "tracks": bool(ok),
+    }
+
+
+if __name__ == "__main__":
+    run()

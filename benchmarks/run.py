@@ -1,0 +1,77 @@
+"""Benchmark driver: one section per paper table/figure + roofline.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweeps (CI smoke)")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_control_loop,
+        bench_kpm_cdfs,
+        bench_methodology,
+        bench_policy,
+        bench_resources,
+        bench_switch,
+        bench_timeseries,
+        roofline,
+    )
+
+    sections = [
+        ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
+        ("6.1     control-loop latency", None, {}),  # uses Fig. 8 stats
+        ("Fig. 4+5 policy-design methodology", bench_methodology.run,
+         {"n_trials": 2 if args.fast else 4,
+          "rho_step": 0.5 if args.fast else 0.2}),
+        ("Table 1 decision-tree performance", bench_policy.run, {}),
+        ("Fig. 9  throughput time series", bench_timeseries.run,
+         {"n_phase": 10 if args.fast else None}),
+        ("Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
+        ("Fig. 11 GPU resources proxy", bench_resources.run, {}),
+        ("Roofline (from dry-run)", roofline.run,
+         {"path": args.dryrun_json}),
+    ]
+
+    results, failures = {}, []
+    switch_stats = None
+    for title, fn, kw in sections:
+        print("\n" + "=" * 78)
+        print("##", title)
+        print("=" * 78)
+        t0 = time.time()
+        try:
+            if title.startswith("6.1"):
+                out = bench_control_loop.run(switch_stats)
+            else:
+                out = fn(**kw)
+            if title.startswith("Fig. 8"):
+                switch_stats = out
+            results[title] = "ok"
+        except Exception:
+            traceback.print_exc()
+            failures.append(title)
+            results[title] = "FAILED"
+        print(f"[{title.split()[0]}] {results[title]} in {time.time()-t0:.0f}s")
+
+    print("\n" + "=" * 78)
+    print("## Summary")
+    for title, status in results.items():
+        print(f"  {status:7s} {title}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

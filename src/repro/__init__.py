@@ -1,0 +1,4 @@
+"""repro: ARCHES (real-time expert switching for the RAN) as a production
+JAX/Pallas framework.  See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

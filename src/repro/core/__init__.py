@@ -1,0 +1,47 @@
+"""ARCHES core: the paper's contribution as composable JAX modules."""
+
+from repro.core.dapp import ControlLoopLatency, DApp, Decision, connect_dapp
+from repro.core.e3 import (
+    E3Agent,
+    E3ControlMessage,
+    E3IndicationMessage,
+    E3Manager,
+    E3Subscription,
+)
+from repro.core.expert_bank import BankOutput, ExecutionMode, Expert, ExpertBank
+from repro.core.methodology import (
+    ClusterResult,
+    SweepResult,
+    design_policy_inputs,
+    monotonicity_filter,
+    perturb_estimate,
+    redundancy_reduction,
+    sensitivity_sweep,
+)
+from repro.core.policy import (
+    DecisionTreePolicy,
+    FittedTree,
+    ThresholdPolicy,
+    classification_metrics,
+    fit_decision_tree,
+)
+from repro.core.runtime import ArchesRuntime, RunHistory, SlotRecord
+from repro.core.switch import (
+    SlotSwitchState,
+    commit_decision,
+    init_switch_state,
+    slot_boundary,
+)
+from repro.core.telemetry import (
+    AERIAL_CANDIDATE_KPMS,
+    AERIAL_CUMULATIVE_KPMS,
+    ALL_CANDIDATE_KPMS,
+    OAI_CANDIDATE_KPMS,
+    SELECTED_KPMS,
+    KPMRing,
+    kpm_vector,
+    ring_init,
+    ring_matrix,
+    ring_push,
+    ring_window_mean,
+)

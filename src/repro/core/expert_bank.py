@@ -1,0 +1,125 @@
+"""Switchable expert bank (paper 2, 3.1).
+
+A bank of N experts executes on the same input; a switch selects the
+designated output.  Two execution modes:
+
+* ``CONCURRENT`` — every expert runs each slot and the Pallas switch kernel
+  (``repro.kernels.switch_select``) selects the output.  Zero switching
+  latency; exposes all expert outputs for online benchmarking (this is the
+  mode the paper uses for all experiments).
+* ``SELECTED_ONLY`` — only the active expert executes, via ``jax.lax.switch``
+  (XLA conditional: exactly one branch runs).  Saves compute/energy at the
+  cost of at least a one-slot activation delay — quantified by the
+  ``cost_model`` below.
+
+Mode numbering follows the paper: the bank is constructed with the
+*designated* expert first (mode 0 == its output is already in the downstream
+buffer; for the channel-estimation case study that is the AI estimator) and
+the fail-safe conventional expert is whatever index the caller passes as
+``default_mode`` (mode 1 == MMSE in the case study).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.switch_select import switch_select
+
+
+class ExecutionMode(enum.Enum):
+    CONCURRENT = "concurrent"
+    SELECTED_ONLY = "selected_only"
+
+
+@dataclasses.dataclass(frozen=True)
+class Expert:
+    """One entry of the bank.
+
+    ``fn(params, *inputs) -> output`` must return structurally identical
+    pytrees across all experts in a bank (the uniform downstream interface).
+    ``flops``/``bytes_hbm`` are static per-call costs used by the
+    energy/utilization proxy (DESIGN.md 2).
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    params: Any = None
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BankOutput:
+    selected: Any  # pytree — contents of the designated buffer post-switch
+    all_outputs: tuple | None  # per-expert outputs (concurrent mode only)
+    mode: jax.Array
+
+
+class ExpertBank:
+    """N-expert switchable bank with a uniform downstream interface."""
+
+    def __init__(
+        self,
+        experts: Sequence[Expert],
+        *,
+        default_mode: int = 1,
+        execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
+        use_pallas_switch: bool = True,
+    ):
+        if len(experts) < 2:
+            raise ValueError("an expert bank needs at least 2 experts")
+        if not 0 <= default_mode < len(experts):
+            raise ValueError(f"default_mode {default_mode} out of range")
+        self.experts = tuple(experts)
+        self.default_mode = default_mode
+        self.execution_mode = execution_mode
+        self.use_pallas_switch = use_pallas_switch
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.experts)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(e.name for e in self.experts)
+
+    def __call__(self, mode: jax.Array, *inputs) -> BankOutput:
+        mode = jnp.asarray(mode, jnp.int32)
+        if self.execution_mode is ExecutionMode.CONCURRENT:
+            return self._run_concurrent(mode, *inputs)
+        return self._run_selected(mode, *inputs)
+
+    def _run_concurrent(self, mode: jax.Array, *inputs) -> BankOutput:
+        outputs = tuple(e.fn(e.params, *inputs) for e in self.experts)
+        if self.use_pallas_switch:
+            selected = switch_select(mode, list(outputs))
+        else:  # oracle path (used by the property tests)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outputs)
+            selected = jax.tree.map(lambda s: jnp.take(s, mode, axis=0), stacked)
+        return BankOutput(selected=selected, all_outputs=outputs, mode=mode)
+
+    def _run_selected(self, mode: jax.Array, *inputs) -> BankOutput:
+        branches = [
+            (lambda e: (lambda *xs: e.fn(e.params, *xs)))(e) for e in self.experts
+        ]
+        selected = jax.lax.switch(mode, branches, *inputs)
+        return BankOutput(selected=selected, all_outputs=None, mode=mode)
+
+    # ---- static cost model (drives the energy/utilization proxy) ----
+    def flops_for(self, mode: int | None = None) -> float:
+        """FLOPs per slot: all experts (concurrent) or one (selected-only)."""
+        if self.execution_mode is ExecutionMode.CONCURRENT:
+            return float(sum(e.flops for e in self.experts))
+        assert mode is not None
+        return float(self.experts[mode].flops)
+
+    def bytes_for(self, mode: int | None = None) -> float:
+        if self.execution_mode is ExecutionMode.CONCURRENT:
+            return float(sum(e.bytes_hbm for e in self.experts))
+        assert mode is not None
+        return float(self.experts[mode].bytes_hbm)

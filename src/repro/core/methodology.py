@@ -1,0 +1,194 @@
+"""The reusable 3-stage telemetry-selection / policy-design process (paper 4).
+
+Stage 1 — *controlled perturbation*: inject calibrated complex AWGN into one
+expert's output (Eq. 3) and record downstream KPMs as a function of the
+intensity rho in [0, 2] (steps of 0.1 by default, as in the paper).
+
+Stage 2 — *monotonicity filtering*: keep KPMs whose mean response is
+consistently monotonic in rho (Spearman rank correlation against rho).
+
+Stage 3 — *redundancy reduction*: Pearson correlation across the surviving
+KPMs, average-linkage hierarchical clustering on ``1 - |r|``, cut at the
+paper's 0.8 threshold, one representative per cluster (the paper keeps MCS
+index for the link-adaptation cluster; priorities are configurable).
+
+All three stages are function-agnostic: the channel-estimation case study
+plugs in its own ``eval_fn``, the same code drives any other expert bank.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.cluster.hierarchy import fcluster, linkage
+from scipy.spatial.distance import squareform
+from scipy.stats import spearmanr
+
+# -- Stage 1: controlled perturbation -----------------------------------------
+
+
+def perturb_estimate(h_est: jax.Array, rho: jax.Array | float, key: jax.Array):
+    """Paper Eq. (3): ``h + rho * E[|h|] * CN(0, 1)``."""
+    kr, ki = jax.random.split(key)
+    scale = jnp.mean(jnp.abs(h_est))
+    # CN(0,1): unit-variance complex normal -> each component var 1/2
+    noise = (
+        jax.random.normal(kr, h_est.shape) + 1j * jax.random.normal(ki, h_est.shape)
+    ) / jnp.sqrt(2.0)
+    return h_est + jnp.asarray(rho) * scale * noise.astype(h_est.dtype)
+
+
+DEFAULT_RHOS = tuple(np.round(np.arange(0.0, 2.0 + 1e-9, 0.1), 3))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    rhos: np.ndarray  # (R,)
+    kpm_names: tuple[str, ...]
+    means: np.ndarray  # (R, K)
+    ci95: np.ndarray  # (R, K)
+    samples: np.ndarray  # (R, trials, K) raw per-trial values
+
+
+def sensitivity_sweep(
+    eval_fn: Callable[[float, jax.Array], Mapping[str, float]],
+    *,
+    rhos: Sequence[float] = DEFAULT_RHOS,
+    n_trials: int = 8,
+    key: jax.Array | None = None,
+) -> SweepResult:
+    """Run ``eval_fn(rho, key) -> {kpm: value}`` over the rho grid."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    names: tuple[str, ...] | None = None
+    all_vals = []
+    for rho in rhos:
+        trial_vals = []
+        for t in range(n_trials):
+            key, sub = jax.random.split(key)
+            kpms = eval_fn(float(rho), sub)
+            if names is None:
+                names = tuple(kpms.keys())
+            trial_vals.append([float(kpms[n]) for n in names])
+        all_vals.append(trial_vals)
+    samples = np.asarray(all_vals)  # (R, T, K)
+    means = samples.mean(axis=1)
+    std = samples.std(axis=1, ddof=1) if n_trials > 1 else np.zeros_like(means)
+    ci95 = 1.96 * std / np.sqrt(max(n_trials, 1))
+    assert names is not None
+    return SweepResult(
+        rhos=np.asarray(rhos), kpm_names=names, means=means, ci95=ci95, samples=samples
+    )
+
+
+# -- Stage 2: monotonicity filtering -------------------------------------------
+
+
+def monotonicity_filter(
+    sweep: SweepResult, *, min_abs_spearman: float = 0.8
+) -> dict[str, float]:
+    """KPM -> Spearman(rho, mean response); keeps ``|r| >= threshold``."""
+    kept = {}
+    for k, name in enumerate(sweep.kpm_names):
+        r, _ = spearmanr(sweep.rhos, sweep.means[:, k])
+        if np.isfinite(r) and abs(r) >= min_abs_spearman:
+            kept[name] = float(r)
+    return kept
+
+
+# -- Stage 3: redundancy reduction ---------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    names: tuple[str, ...]
+    corr: np.ndarray  # (K, K) Pearson matrix
+    labels: np.ndarray  # (K,) cluster ids
+    representatives: tuple[str, ...]
+    order: np.ndarray  # leaf order for block-diagonal display (paper Fig. 5)
+
+
+def redundancy_reduction(
+    samples: Mapping[str, np.ndarray],
+    *,
+    threshold: float = 0.8,
+    representative_priority: Sequence[str] = ("mcs_index",),
+) -> ClusterResult:
+    """Pearson + average-linkage clustering at ``1 - threshold`` distance.
+
+    ``samples`` maps KPM name -> 1-D array of per-slot observations (all the
+    same length).  Within each cluster the representative is the first match
+    in ``representative_priority``; otherwise the member with the largest
+    mean |correlation| to its cluster (the most central one).
+    """
+    names = tuple(samples.keys())
+    mat = np.stack([np.asarray(samples[n], np.float64) for n in names], axis=0)
+    # guard: zero-variance KPMs correlate as 0 with everything
+    std = mat.std(axis=1)
+    std_safe = np.where(std > 0, std, 1.0)
+    centered = (mat - mat.mean(axis=1, keepdims=True)) / std_safe[:, None]
+    corr = centered @ centered.T / mat.shape[1]
+    corr[std == 0, :] = 0.0
+    corr[:, std == 0] = 0.0
+    np.fill_diagonal(corr, 1.0)
+
+    # sanitize: zero-variance / degenerate KPMs can leave non-finite entries
+    corr = np.clip(np.nan_to_num(corr, nan=0.0, posinf=1.0, neginf=-1.0), -1.0, 1.0)
+    np.fill_diagonal(corr, 1.0)
+
+    dist = 1.0 - np.abs(corr)
+    np.fill_diagonal(dist, 0.0)
+    dist = np.clip((dist + dist.T) / 2, 0.0, 1.0)  # numerical symmetry
+    z = linkage(squareform(dist, checks=False), method="average")
+    labels = fcluster(z, t=1.0 - threshold, criterion="distance")
+
+    # display order: traverse the dendrogram (block structure of Fig. 5)
+    from scipy.cluster.hierarchy import leaves_list
+
+    order = leaves_list(z)
+
+    reps = []
+    for c in sorted(set(labels)):
+        members = [i for i in range(len(names)) if labels[i] == c]
+        rep = None
+        for p in representative_priority:
+            if p in (names[i] for i in members):
+                rep = p
+                break
+        if rep is None:
+            centrality = [np.mean(np.abs(corr[i, members])) for i in members]
+            rep = names[members[int(np.argmax(centrality))]]
+        reps.append(rep)
+    return ClusterResult(
+        names=names,
+        corr=corr,
+        labels=labels,
+        representatives=tuple(reps),
+        order=order,
+    )
+
+
+def design_policy_inputs(
+    aerial_samples: Mapping[str, np.ndarray],
+    oai_samples: Mapping[str, np.ndarray],
+    *,
+    threshold: float = 0.8,
+    always_include: Sequence[str] = ("phy_throughput",),
+) -> tuple[tuple[str, ...], ClusterResult, ClusterResult]:
+    """Full Stage-3 as the paper runs it: Aerial and OAI clustered separately,
+    PHY throughput re-added afterwards (it is excluded from correlation due to
+    its cumulative computation)."""
+    aerial = redundancy_reduction(aerial_samples, threshold=threshold)
+    oai = redundancy_reduction(oai_samples, threshold=threshold)
+    selected = tuple(always_include) + aerial.representatives + oai.representatives
+    # stable de-dup
+    seen, final = set(), []
+    for s in selected:
+        if s not in seen:
+            seen.add(s)
+            final.append(s)
+    return tuple(final), aerial, oai

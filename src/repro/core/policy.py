@@ -1,0 +1,221 @@
+"""Switching policies (paper 5.3) + trainer + Table-1 metrics.
+
+``fit_decision_tree`` is a self-contained greedy Gini trainer (depth-limited,
+complete-tree layout) so the whole policy-design loop runs inside this
+framework with no sklearn dependency.  ``DecisionTreePolicy`` evaluates
+either through the Pallas ``tree_infer`` kernel (batched, MXU path) or the
+literal tree walk (scalar host path); both are tested against each other.
+
+``ThresholdPolicy`` implements the paper's proposed-future-work comparison
+("threshold-based gating"), extended with hysteresis so the policy cannot
+flap across a noisy boundary — a beyond-paper robustness addition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tree_infer import pack_tree, tree_infer, tree_infer_ref
+
+
+# -- trainer -----------------------------------------------------------------
+
+
+def _gini(y: np.ndarray) -> float:
+    if y.size == 0:
+        return 0.0
+    p = np.bincount(y, minlength=2) / y.size
+    return float(1.0 - np.sum(p**2))
+
+
+def _best_split(x: np.ndarray, y: np.ndarray):
+    """Best (feature, threshold, impurity_decrease) for one node."""
+    n, f = x.shape
+    base = _gini(y)
+    best = (0, np.inf, 0.0)  # feature, threshold, decrease
+    for j in range(f):
+        order = np.argsort(x[:, j], kind="stable")
+        xs, ys = x[order, j], y[order]
+        # candidate thresholds: midpoints between distinct consecutive values
+        distinct = np.nonzero(np.diff(xs) > 0)[0]
+        for i in distinct:
+            t = 0.5 * (xs[i] + xs[i + 1])
+            left, right = ys[: i + 1], ys[i + 1 :]
+            w = (left.size * _gini(left) + right.size * _gini(right)) / n
+            dec = base - w
+            if dec > best[2] + 1e-12:
+                best = (j, float(t), float(dec))
+    return best
+
+
+@dataclasses.dataclass
+class FittedTree:
+    feature: np.ndarray  # (2**d - 1,) int32, level order
+    threshold: np.ndarray  # (2**d - 1,) float32 (+inf for pass-through nodes)
+    leaf_values: np.ndarray  # (2**d,) float32
+    depth: int
+    n_features: int
+    importances: np.ndarray  # (n_features,) normalized impurity decrease
+
+
+def fit_decision_tree(
+    x: np.ndarray, y: np.ndarray, *, depth: int = 2, min_samples: int = 2
+) -> FittedTree:
+    """Greedy Gini trainer producing a complete (padded) binary tree.
+
+    Unreached/pure nodes become pass-through (threshold=+inf -> always left)
+    with the majority label propagated to all their descendant leaves.
+    """
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.int64)
+    n_nodes = 2**depth - 1
+    n_leaves = 2**depth
+    feature = np.zeros(n_nodes, np.int32)
+    threshold = np.full(n_nodes, np.inf, np.float32)
+    leaf_values = np.zeros(n_leaves, np.float32)
+    importances = np.zeros(x.shape[1], np.float64)
+    n_total = max(len(y), 1)
+
+    def majority(yy):
+        return float(np.bincount(yy, minlength=2).argmax()) if yy.size else 0.0
+
+    # level-order recursion over the complete tree
+    node_data = {0: (x, y)}
+    for node in range(n_nodes):
+        xx, yy = node_data.get(node, (x[:0], y[:0]))
+        left_child, right_child = 2 * node + 1, 2 * node + 2
+        split = None
+        if yy.size >= min_samples and _gini(yy) > 0:
+            j, t, dec = _best_split(xx, yy)
+            if np.isfinite(t) and dec > 0:
+                split = (j, t, dec)
+        if split is None:
+            # pass-through: everything goes left
+            node_data[left_child] = (xx, yy)
+            node_data[right_child] = (xx[:0], yy[:0])
+        else:
+            j, t, dec = split
+            feature[node] = j
+            threshold[node] = t
+            importances[j] += dec * yy.size / n_total
+            mask = xx[:, j] > t
+            node_data[left_child] = (xx[~mask], yy[~mask])
+            node_data[right_child] = (xx[mask], yy[mask])
+
+    # leaves occupy level-order ids [n_nodes, n_nodes + n_leaves)
+    for leaf in range(n_leaves):
+        xx, yy = node_data.get(n_nodes + leaf, (x[:0], y[:0]))
+        if yy.size == 0:
+            # inherit from nearest populated ancestor
+            anc = (n_nodes + leaf - 1) // 2
+            while anc > 0 and node_data.get(anc, (None, y[:0]))[1].size == 0:
+                anc = (anc - 1) // 2
+            yy = node_data.get(anc, (x, y))[1]
+        leaf_values[leaf] = majority(yy)
+
+    total = importances.sum()
+    if total > 0:
+        importances = importances / total
+    return FittedTree(
+        feature=feature,
+        threshold=threshold,
+        leaf_values=leaf_values,
+        depth=depth,
+        n_features=x.shape[1],
+        importances=importances.astype(np.float32),
+    )
+
+
+# -- policies ----------------------------------------------------------------
+
+
+class DecisionTreePolicy:
+    """The paper's switching policy: depth-2 Gini tree over 10 KPMs."""
+
+    def __init__(self, tree: FittedTree, feature_names: Sequence[str]):
+        if len(feature_names) != tree.n_features:
+            raise ValueError("feature_names/tree mismatch")
+        self.tree = tree
+        self.feature_names = tuple(feature_names)
+        self.packed = pack_tree(
+            tree.feature, tree.threshold, tree.leaf_values, tree.n_features, tree.depth
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Single KPM vector ``(F,)`` -> int32 mode (literal walk, host path)."""
+        out = tree_infer_ref(
+            jnp.asarray(x, jnp.float32)[None, :],
+            jnp.asarray(self.tree.feature),
+            jnp.asarray(self.tree.threshold),
+            jnp.asarray(self.tree.leaf_values),
+            self.tree.depth,
+        )
+        return out[0].astype(jnp.int32)
+
+    def batch(self, x: jax.Array) -> jax.Array:
+        """Batched ``(B, F)`` inference through the Pallas kernel."""
+        return tree_infer(jnp.asarray(x, jnp.float32), self.packed).astype(jnp.int32)
+
+    def predict_from_kpms(self, kpms: Mapping[str, float]) -> int:
+        vec = jnp.asarray([float(kpms[n]) for n in self.feature_names], jnp.float32)
+        return int(self(vec))
+
+
+@dataclasses.dataclass
+class ThresholdPolicy:
+    """Single-KPM gate with hysteresis (paper 9 'threshold-based gating')."""
+
+    feature_idx: int
+    threshold: float
+    hysteresis: float = 0.0
+    mode_above: int = 1  # e.g. good conditions -> MMSE
+    mode_below: int = 0  # e.g. degraded -> AI
+
+    def __call__(self, x: jax.Array, prev_mode: jax.Array | int = 1) -> jax.Array:
+        v = jnp.asarray(x)[self.feature_idx]
+        prev = jnp.asarray(prev_mode, jnp.int32)
+        hi = self.threshold + self.hysteresis
+        lo = self.threshold - self.hysteresis
+        above = v > hi
+        below = v < lo
+        keep = jnp.logical_not(jnp.logical_or(above, below))
+        return jnp.where(
+            keep,
+            prev,
+            jnp.where(above, jnp.int32(self.mode_above), jnp.int32(self.mode_below)),
+        )
+
+
+# -- Table-1 metrics -----------------------------------------------------------
+
+
+def classification_metrics(y_true: np.ndarray, y_pred: np.ndarray) -> dict:
+    """Accuracy / precision / specificity / F1 for the positive class 0 (AI).
+
+    The paper labels interference slots mode=0 (AI).  We treat mode=0 as the
+    positive class, matching Table 1.
+    """
+    y_true = np.asarray(y_true).astype(int)
+    y_pred = np.asarray(y_pred).astype(int)
+    pos = 0
+    tp = int(np.sum((y_pred == pos) & (y_true == pos)))
+    fp = int(np.sum((y_pred == pos) & (y_true != pos)))
+    tn = int(np.sum((y_pred != pos) & (y_true != pos)))
+    fn = int(np.sum((y_pred != pos) & (y_true == pos)))
+    acc = (tp + tn) / max(tp + tn + fp + fn, 1)
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    spec = tn / max(tn + fp, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-12)
+    return {
+        "accuracy": acc,
+        "precision": prec,
+        "recall": rec,
+        "specificity": spec,
+        "f1": f1,
+    }

@@ -1,0 +1,106 @@
+"""The ARCHES slot loop: pipeline on device, control plane on host (Fig. 1).
+
+Generic over the switched function: the channel-estimation case study and the
+LM serving integration both provide a ``slot_fn`` and reuse this loop.
+
+Per slot n (paper timing semantics, 2/3.3):
+  1. *slot setup*: poll the E3 control inbox; a decision generated during
+     slot n-1 is committed and becomes active now (slot boundary).  Stale
+     control planes decay to the fail-safe mode after ``ttl_slots``.
+  2. the pipeline executes with the active mode (ExpertBank + switch kernel
+     inside ``slot_fn``).
+  3. per-slot KPMs are indicated to the dApp via E3; any resulting decision
+     lands in the control inbox for slot n+1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import numpy as np
+
+from repro.core.e3 import E3Agent, E3IndicationMessage
+from repro.core.switch import (
+    SlotSwitchState,
+    commit_decision,
+    init_switch_state,
+    slot_boundary,
+)
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    slot: int
+    active_mode: int
+    kpms: dict[str, float]
+    output: Any = None
+
+
+@dataclasses.dataclass
+class RunHistory:
+    records: list[SlotRecord]
+    final_state: SlotSwitchState
+
+    @property
+    def modes(self) -> np.ndarray:
+        return np.asarray([r.active_mode for r in self.records])
+
+    def kpm_series(self, name: str) -> np.ndarray:
+        return np.asarray([r.kpms.get(name, np.nan) for r in self.records])
+
+
+class ArchesRuntime:
+    """Host-side slot loop wiring pipeline, E3 agent and switch register."""
+
+    def __init__(
+        self,
+        slot_fn: Callable[..., tuple[Any, Any, Mapping[str, Mapping[str, float]]]],
+        agent: E3Agent,
+        *,
+        default_mode: int = 1,
+        fail_safe_mode: int = 1,
+        ttl_slots: int = 16,
+        keep_outputs: bool = False,
+    ):
+        """``slot_fn(active_mode, carry, slot_input) ->
+        (carry, output, {source: {kpm: value}})``."""
+        self.slot_fn = slot_fn
+        self.agent = agent
+        self.default_mode = default_mode
+        self.fail_safe_mode = fail_safe_mode
+        self.ttl_slots = ttl_slots
+        self.keep_outputs = keep_outputs
+
+    def run(self, inputs: Iterable[Any], carry: Any = None) -> RunHistory:
+        state = init_switch_state(self.default_mode)
+        records: list[SlotRecord] = []
+        for slot, x in enumerate(inputs):
+            # -- slot setup phase --
+            ctrl = self.agent.poll_control()
+            if ctrl is not None:
+                state = commit_decision(state, ctrl.mode)
+            state = slot_boundary(
+                state, fail_safe_mode=self.fail_safe_mode, ttl_slots=self.ttl_slots
+            )
+            active = int(state.active_mode)
+            # -- pipeline execution --
+            carry, output, kpms_by_source = self.slot_fn(state.active_mode, carry, x)
+            # -- telemetry indication --
+            flat: dict[str, float] = {}
+            for source, kpms in kpms_by_source.items():
+                kpms_f = {k: float(v) for k, v in kpms.items()}
+                flat.update(kpms_f)
+                self.agent.indicate(
+                    E3IndicationMessage(slot=slot, source=source, kpms=kpms_f)
+                )
+            records.append(
+                SlotRecord(
+                    slot=slot,
+                    active_mode=active,
+                    kpms=flat,
+                    output=output if self.keep_outputs else None,
+                )
+            )
+        return RunHistory(records=records, final_state=state)

@@ -1,0 +1,71 @@
+"""Slot-boundary switching semantics and fail-safe defaults (paper 2, 3.3).
+
+The mode register is pure functional state threaded through the slot loop:
+
+* ``commit_decision`` — the dApp commits a decision *during* slot n.
+* ``slot_boundary``   — at the setup phase of slot n+1 the pending decision
+  becomes active.  Mid-slot updates are therefore deferred by construction.
+* **Fail-safe**: if no valid decision has been committed for ``ttl_slots``
+  slots (dApp crash, E3 stall), the active mode decays to the conventional
+  default — the system never depends on the control plane for baseline
+  operation.
+
+Everything is ``jnp.where``-based so the register can live inside a jitted
+slot step (the TPU analogue of the paper's host-to-device mode propagation:
+the register rides the step's donated carry).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotSwitchState(NamedTuple):
+    active_mode: jax.Array  # int32 — consumed by the pipeline this slot
+    pending_mode: jax.Array  # int32 — latest committed decision
+    slots_since_decision: jax.Array  # int32 — staleness counter
+    slot_index: jax.Array  # int32
+    n_switches: jax.Array  # int32 — observability: boundary transitions
+
+
+def init_switch_state(default_mode: int) -> SlotSwitchState:
+    d = jnp.int32(default_mode)
+    z = jnp.int32(0)
+    return SlotSwitchState(
+        active_mode=d,
+        pending_mode=d,
+        slots_since_decision=z,
+        slot_index=z,
+        n_switches=z,
+    )
+
+
+def commit_decision(
+    state: SlotSwitchState, mode: jax.Array, valid: jax.Array | bool = True
+) -> SlotSwitchState:
+    """dApp commits ``mode`` during the current slot (takes effect next slot)."""
+    mode = jnp.asarray(mode, jnp.int32)
+    valid = jnp.asarray(valid, jnp.bool_)
+    return state._replace(
+        pending_mode=jnp.where(valid, mode, state.pending_mode),
+        slots_since_decision=jnp.where(valid, 0, state.slots_since_decision),
+    )
+
+
+def slot_boundary(
+    state: SlotSwitchState, *, fail_safe_mode: int, ttl_slots: int
+) -> SlotSwitchState:
+    """Advance to slot n+1: apply the pending decision, enforce fail-safe."""
+    stale = state.slots_since_decision >= jnp.int32(ttl_slots)
+    new_active = jnp.where(stale, jnp.int32(fail_safe_mode), state.pending_mode)
+    switched = (new_active != state.active_mode).astype(jnp.int32)
+    return SlotSwitchState(
+        active_mode=new_active,
+        pending_mode=jnp.where(stale, jnp.int32(fail_safe_mode), state.pending_mode),
+        slots_since_decision=state.slots_since_decision + 1,
+        slot_index=state.slot_index + 1,
+        n_switches=state.n_switches + switched,
+    )

@@ -1,0 +1,115 @@
+"""Cross-layer KPM telemetry (paper 2, 4.3, 6).
+
+KPM names and layer attribution follow the paper exactly:
+
+* **Aerial Data Lake** (PHY, per-slot): code rate, SINR, QAM order, MCS
+  index, TB size, #code blocks, PDU length, NDI, RSRP — plus PHY throughput,
+  which is *cumulative* and therefore excluded from the correlation analysis
+  (paper 4.3) but retained as a policy input.
+* **OAI** (L2+): SNR, MAC throughput, LCID4 throughput, MAC RX bytes, LCID4
+  RX bytes.
+
+The final selected set (paper 4.3) is reproduced by the methodology in
+``repro.core.methodology``; ``SELECTED_KPMS`` records the paper's outcome and
+is validated against the methodology's output in the tests.
+
+``KPMRing`` is a fixed-capacity functional ring buffer so telemetry windows
+can live inside jitted slot loops.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# -- registry ---------------------------------------------------------------
+
+AERIAL_CANDIDATE_KPMS: tuple[str, ...] = (
+    "code_rate",
+    "sinr",
+    "qam_order",
+    "mcs_index",
+    "tb_size",
+    "num_cbs",
+    "pdu_length",
+    "ndi",
+    "rsrp",
+)
+AERIAL_CUMULATIVE_KPMS: tuple[str, ...] = ("phy_throughput",)
+OAI_CANDIDATE_KPMS: tuple[str, ...] = (
+    "snr",
+    "mac_throughput",
+    "lcid4_throughput",
+    "mac_rx_bytes",
+    "lcid4_rx_bytes",
+)
+
+#: The paper's final policy input set (4.3): 5 Aerial + 5 OAI KPMs.
+SELECTED_KPMS: tuple[str, ...] = (
+    "phy_throughput",
+    "mcs_index",
+    "pdu_length",
+    "ndi",
+    "rsrp",
+    "snr",
+    "mac_throughput",
+    "lcid4_throughput",
+    "mac_rx_bytes",
+    "lcid4_rx_bytes",
+)
+
+ALL_CANDIDATE_KPMS: tuple[str, ...] = AERIAL_CANDIDATE_KPMS + OAI_CANDIDATE_KPMS
+
+
+def kpm_vector(kpms: Mapping[str, jax.Array | float], names: Sequence[str]):
+    """Order a KPM mapping into a dense feature vector."""
+    return jnp.stack([jnp.asarray(kpms[n], jnp.float32) for n in names])
+
+
+# -- functional ring buffer ---------------------------------------------------
+
+
+class KPMRing(NamedTuple):
+    buf: jax.Array  # (capacity, n_kpms) float32
+    idx: jax.Array  # int32 — next write position
+    count: jax.Array  # int32 — total pushes (saturates at capacity for reads)
+
+
+def ring_init(capacity: int, n_kpms: int) -> KPMRing:
+    return KPMRing(
+        buf=jnp.zeros((capacity, n_kpms), jnp.float32),
+        idx=jnp.int32(0),
+        count=jnp.int32(0),
+    )
+
+
+def ring_push(ring: KPMRing, vec: jax.Array) -> KPMRing:
+    cap = ring.buf.shape[0]
+    buf = jax.lax.dynamic_update_slice(ring.buf, vec[None, :], (ring.idx, 0))
+    return KPMRing(
+        buf=buf,
+        idx=(ring.idx + 1) % cap,
+        count=jnp.minimum(ring.count + 1, jnp.int32(2**30)),
+    )
+
+
+def ring_window_mean(ring: KPMRing, window: int) -> jax.Array:
+    """Mean over the most recent ``min(window, count)`` entries."""
+    cap, n = ring.buf.shape
+    window = min(window, cap)
+    # positions of the last `window` writes, newest first
+    offsets = jnp.arange(1, window + 1, dtype=jnp.int32)
+    pos = (ring.idx - offsets) % cap
+    rows = ring.buf[pos]  # (window, n)
+    valid = (offsets <= ring.count)[:, None].astype(jnp.float32)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    return (rows * valid).sum(axis=0) / denom
+
+
+def ring_matrix(ring: KPMRing) -> tuple[jax.Array, jax.Array]:
+    """All valid rows (oldest->newest order not guaranteed) + validity mask."""
+    cap = ring.buf.shape[0]
+    valid = jnp.arange(cap) < ring.count
+    return ring.buf, valid

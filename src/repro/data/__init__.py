@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenStream, make_batch_specs
+
+__all__ = ["TokenStream", "make_batch_specs"]

@@ -1,0 +1,97 @@
+"""Deterministic synthetic token pipeline (sharded, restart-exact).
+
+The stream is a pure function of (seed, step), so a restarted training loop
+replays exactly the batches it would have seen — the data-side requirement
+for the checkpoint/restart fault-tolerance test to assert bit-identical
+continuation.  Tokens follow a Zipfian draw over the vocab (softmax losses
+see a realistic non-uniform distribution, which matters for the loss curve
+sanity checks) with a shifted-copy label structure so models can actually
+learn next-token prediction.
+
+At multi-host scale each host draws only its data-parallel shard
+(``host_slice``); in this container there is one host, so the slice is the
+identity — the API is the multi-host one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from repro.models.config import Family, ModelConfig, ShapeCell
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    host_index: int = 0
+    n_hosts: int = 1
+
+    def __post_init__(self):
+        assert self.global_batch % self.n_hosts == 0
+        rng = np.random.default_rng(self.seed)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        p = ranks**-self.zipf_a
+        self._probs = p / p.sum()
+        self._perm = rng.permutation(self.vocab)  # break rank/id correlation
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        """The (host-sliced) batch for a given global step.
+
+        The full global batch is drawn from the shared (seed, step) stream and
+        each host takes its contiguous row slice — hosts therefore see
+        *disjoint* shards whose union is exactly the global batch.
+        """
+        rng = np.random.default_rng((self.seed, step))
+        raw = rng.choice(
+            self.vocab, size=(self.global_batch, self.seq_len + 1), p=self._probs
+        )
+        b = self.global_batch // self.n_hosts
+        lo = self.host_index * b
+        toks = self._perm[raw[lo : lo + b]]
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch_specs(
+    cfg: ModelConfig, cell: ShapeCell, dtype=None
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one cell's inputs (dry-run input_specs).
+
+    ``train``   {tokens, labels} (B, S)          [+ encoder_frames for enc-dec]
+    ``prefill`` {tokens} (B, S)                  [+ encoder_frames]
+    ``decode``  {tokens} (B, 1) + the cache is supplied by the launcher
+    """
+    import jax.numpy as jnp
+
+    dtype = dtype or cfg.param_dtype()
+    b, s = cell.global_batch, cell.seq_len
+    itok = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if cell.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), itok)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), itok)
+    elif cell.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), itok)
+    elif cell.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), itok)
+    if cfg.family is Family.ENC_DEC and cell.kind in ("train", "prefill"):
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), dtype
+        )
+    return specs

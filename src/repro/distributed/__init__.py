@@ -1,0 +1,27 @@
+from repro.distributed.compression import (
+    ErrorFeedbackState,
+    compress_decompress,
+    init_error_feedback,
+)
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    constrain,
+    make_rules,
+    mesh_context,
+    named_sharding,
+    spec,
+)
+
+__all__ = [
+    "ErrorFeedbackState",
+    "compress_decompress",
+    "init_error_feedback",
+    "DEFAULT_RULES",
+    "ShardingRules",
+    "constrain",
+    "make_rules",
+    "mesh_context",
+    "named_sharding",
+    "spec",
+]

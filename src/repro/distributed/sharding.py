@@ -1,0 +1,154 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/EP) for the model zoo.
+
+Weights and activations are annotated with *logical* axis names; a rules
+table maps them to mesh axes.  The production meshes (launch/mesh.py):
+
+  single-pod  (16, 16)      axes ("data", "model")
+  multi-pod   (2, 16, 16)   axes ("pod", "data", "model")
+
+Default placement (MaxText-style 2-D sharding):
+  * "batch"    -> ("pod", "data")   pure DP across pods, DP within pod
+  * "embed"    -> "data"            FSDP: weight d_model dim sharded on data
+  * "heads"/"ff"/"experts"/"vocab" -> "model"   tensor/expert parallelism
+  * "kv_heads" -> "model" when divisible (GQA kv=8 < model=16 replicates)
+
+``spec`` drops any mapping that does not divide the dimension (e.g. batch=1
+long-context cells, kv_heads=8 on model=16), so every (arch x shape x mesh)
+cell builds a valid PartitionSpec without per-arch special-casing.
+
+``constrain`` applies ``with_sharding_constraint`` when a mesh context is
+active and is a no-op otherwise, so the same model code runs on CPU tests
+(no mesh) and in the dry-run (512-device mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = tuple[str, ...] | str | None
+
+DEFAULT_RULES: dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": "data",  # FSDP on weight d_model dims
+    "embed_act": None,  # activation d_model stays unsharded (TP on heads/ff)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "layers": None,
+    "frames": None,
+    "moe_tokens": ("pod", "data"),
+    "moe_cap": ("pod", "data"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Mapping[str, MeshAxes]
+
+    def mesh_axes_for(self, logical: str | None) -> MeshAxes:
+        if logical is None:
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.table[logical]
+
+
+def make_rules(overrides: Mapping[str, MeshAxes] | None = None) -> ShardingRules:
+    table = dict(DEFAULT_RULES)
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(table=table)
+
+
+def spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[str | None],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> P:
+    """Build a PartitionSpec, dropping non-divisible / absent mesh axes."""
+    if len(shape) != len(logical_axes):
+        raise ValueError(f"shape {shape} vs axes {logical_axes}")
+    used: set[str] = set()
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        mesh_axes = rules.mesh_axes_for(logical)
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = []
+        prod = 1
+        for ax in mesh_axes:
+            if ax not in mesh.shape or ax in used:
+                continue
+            n = mesh.shape[ax]
+            if dim % (prod * n) == 0:
+                picked.append(ax)
+                prod *= n
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def named_sharding(
+    shape: Sequence[int],
+    logical_axes: Sequence[str | None],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> NamedSharding:
+    return NamedSharding(mesh, spec(shape, logical_axes, mesh, rules))
+
+
+# -- mesh context so model code can constrain without plumbing ---------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: ShardingRules):
+    prev = getattr(_ctx, "value", None)
+    _ctx.value = (mesh, rules)
+    try:
+        # jax>=0.8 requires jax.set_mesh for PartitionSpec in_shardings; the
+        # plain `with mesh:` Mesh context no longer feeds jit.
+        with jax.set_mesh(mesh):
+            yield
+    finally:
+        _ctx.value = prev
+
+
+def current_mesh_rules() -> tuple[Mesh, ShardingRules] | None:
+    return getattr(_ctx, "value", None)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active (else no-op)."""
+    ctx = current_mesh_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    s = spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))

@@ -1,0 +1,5 @@
+from repro.kernels.mmse_interp.mmse_interp import mmse_interp_2d
+from repro.kernels.mmse_interp.ops import mmse_interp
+from repro.kernels.mmse_interp.ref import mmse_interp_ref
+
+__all__ = ["mmse_interp", "mmse_interp_2d", "mmse_interp_ref"]

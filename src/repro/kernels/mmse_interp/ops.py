@@ -1,0 +1,74 @@
+"""Jit'd public wrapper for the MMSE/Wiener interpolation kernel.
+
+Accepts complex pilot estimates of arbitrary leading batch shape, pads the
+pilot/subcarrier dims to lane multiples (zero padding is exact for a matmul)
+and dispatches to the Pallas kernel (interpret mode off-TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mmse_interp import mmse_interp as _k
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_gauss", "interpret"))
+def mmse_interp(
+    h_pilot: jax.Array,
+    w: jax.Array,
+    *,
+    use_gauss: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Wiener-interpolate pilot estimates to the full band.
+
+    Args:
+      h_pilot: complex ``(..., Np)`` pilot-position channel estimates.
+      w: complex ``(Np, Nsc)`` Wiener interpolation matrix.
+
+    Returns:
+      complex ``(..., Nsc)`` full-band estimates.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    batch_shape = h_pilot.shape[:-1]
+    np_ = h_pilot.shape[-1]
+    nsc = w.shape[1]
+    b = 1
+    for d in batch_shape:
+        b *= d
+
+    pad_b = (-b) % _SUBLANE
+    pad_p = (-np_) % _LANE
+    pad_n = (-nsc) % _LANE
+
+    h2 = h_pilot.reshape(b, np_)
+    h2 = jnp.pad(h2, ((0, pad_b), (0, pad_p)))
+    w2 = jnp.pad(w, ((0, pad_p), (0, pad_n)))
+
+    block_n = min(_k.DEFAULT_BLOCK_N, nsc + pad_n)
+    # shrink block until divisible (both are lane multiples)
+    while (nsc + pad_n) % block_n:
+        block_n //= 2
+    out_r, out_i = _k.mmse_interp_2d(
+        jnp.real(h2).astype(jnp.float32),
+        jnp.imag(h2).astype(jnp.float32),
+        jnp.real(w2).astype(jnp.float32),
+        jnp.imag(w2).astype(jnp.float32),
+        block_b=min(_k.DEFAULT_BLOCK_B, b + pad_b),
+        block_n=block_n,
+        use_gauss=use_gauss,
+        interpret=interpret,
+    )
+    out = (out_r + 1j * out_i).astype(h_pilot.dtype)
+    return out[:b, :nsc].reshape(*batch_shape, nsc)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the MMSE/Wiener interpolation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mmse_interp_ref(h_pilot: jax.Array, w: jax.Array) -> jax.Array:
+    """``h_pilot (..., Np) complex``, ``w (Np, Nsc) complex`` -> ``(..., Nsc)``."""
+    return jnp.einsum("...p,pn->...n", h_pilot, w)

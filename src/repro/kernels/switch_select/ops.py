@@ -1,0 +1,99 @@
+"""Jit'd public wrappers for the ARCHES switch kernel.
+
+Handles what the raw 2-D kernel does not: arbitrary shapes (flatten + pad to
+tile multiples), complex dtypes (viewed as float32 pairs), and per-expert
+pytrees (leaf-wise switching).  On non-TPU backends the kernel runs in Pallas
+interpret mode so the whole framework is testable on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.switch_select import switch_select as _k
+
+_PAD_BLOCK_ROWS = 128
+_PAD_BLOCK_COLS = 512
+_PAD_ELEMS = _PAD_BLOCK_ROWS * _PAD_BLOCK_COLS
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_real_view(x: jax.Array):
+    """View complex leaves as trailing float pairs; return (array, undo)."""
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        real_dtype = jnp.float32 if x.dtype == jnp.complex64 else jnp.float64
+        y = jnp.stack([x.real, x.imag], axis=-1).astype(real_dtype)
+
+        def undo(z):
+            z = z.reshape(x.shape + (2,))
+            return (z[..., 0] + 1j * z[..., 1]).astype(x.dtype)
+
+        return y, undo
+    return x, lambda z: z.reshape(x.shape)
+
+
+def switch_select_leaf(
+    mode: jax.Array,
+    alternatives: Sequence[jax.Array],
+    designated: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Switch a single array leaf. ``mode==0`` keeps ``designated``."""
+    if interpret is None:
+        interpret = _use_interpret()
+    des_view, undo = _to_real_view(designated)
+    alt_views = [_to_real_view(a)[0] for a in alternatives]
+
+    flat = des_view.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _PAD_ELEMS
+    rows = (n + pad) // _PAD_BLOCK_COLS
+
+    def prep(v):
+        f = v.reshape(-1)
+        f = jnp.pad(f, (0, pad))
+        return f.reshape(rows, _PAD_BLOCK_COLS)
+
+    des2 = prep(des_view)
+    alt2 = jnp.stack([prep(a) for a in alt_views], axis=0)
+    out2 = _k.switch_select_2d(
+        mode,
+        alt2,
+        des2,
+        block_rows=min(_PAD_BLOCK_ROWS, rows),
+        block_cols=_PAD_BLOCK_COLS,
+        interpret=interpret,
+    )
+    return undo(out2.reshape(-1)[:n])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def switch_select(mode, outputs: Sequence, designated_idx: int = 0, *, interpret=None):
+    """Switch over a list of per-expert pytrees (paper's N-expert bank).
+
+    Args:
+      mode: int32 scalar; ``0`` selects ``outputs[designated_idx]`` (no-op
+        path), ``k>0`` selects the k-th non-designated expert in bank order.
+      outputs: list of structurally identical pytrees, one per expert, with
+        the designated expert first (``designated_idx`` must be 0 — the bank
+        reorders before calling).
+
+    Returns:
+      The selected pytree, aliased onto the designated buffers.
+    """
+    if designated_idx != 0:
+        raise ValueError("bank must place the designated expert first")
+    designated, *alternatives = outputs
+    return jax.tree.map(
+        lambda d, *alts: switch_select_leaf(mode, alts, d, interpret=interpret),
+        designated,
+        *alternatives,
+    )

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the ARCHES switch kernel.
+
+Semantics (paper 3.2): downstream reads the designated buffer; after the
+switch, that buffer holds the output of the expert selected by ``mode``
+(``0`` = designated expert, ``k > 0`` = ``alternatives[k - 1]``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def switch_select_ref(
+    mode: jax.Array, alternatives: jax.Array, designated: jax.Array
+) -> jax.Array:
+    """Reference: the post-switch contents of the designated buffer."""
+    mode = jnp.asarray(mode, jnp.int32).reshape(())
+    stacked = jnp.concatenate([designated[None], alternatives], axis=0)
+    return jnp.take(stacked, mode, axis=0)
+
+
+def switch_select_tree_ref(mode: jax.Array, outputs: list) -> jax.Array:
+    """Reference over a list of per-expert pytrees: pick ``outputs[mode]``."""
+    mode = jnp.asarray(mode, jnp.int32).reshape(())
+    return jax.tree.map(
+        lambda *leaves: jnp.take(jnp.stack(leaves, axis=0), mode, axis=0),
+        *outputs,
+    )

@@ -1,0 +1,5 @@
+from repro.kernels.tree_infer.ops import PackedTree, pack_tree, tree_infer
+from repro.kernels.tree_infer.ref import tree_infer_ref
+from repro.kernels.tree_infer.tree_infer import tree_infer_2d
+
+__all__ = ["PackedTree", "pack_tree", "tree_infer", "tree_infer_2d", "tree_infer_ref"]

@@ -1,0 +1,114 @@
+"""Jit'd public wrapper for decision-tree inference.
+
+``pack_tree`` densifies a complete binary tree (level-order arrays, as
+produced by ``repro.core.policy.fit_decision_tree``) into the matmul operands
+the Pallas kernel consumes; ``tree_infer`` evaluates a batch of KPM vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tree_infer import tree_infer as _k
+
+_LANE = 128
+_SUBLANE = 8
+
+
+class PackedTree(NamedTuple):
+    t: jax.Array  # (F_pad, Nn_pad) one-hot feature gather
+    thr: jax.Array  # (1, Nn_pad)
+    a: jax.Array  # (Nn_pad, Nl_pad)  on * dir
+    b: jax.Array  # (Nn_pad, Nl_pad)  on * (1 - dir)
+    n_on: jax.Array  # (1, Nl_pad)  (-1 for padded leaves)
+    leaf_vals: jax.Array  # (1, Nl_pad)
+    n_features: int
+    depth: int
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_tree(
+    feature: np.ndarray,
+    threshold: np.ndarray,
+    leaf_values: np.ndarray,
+    n_features: int,
+    depth: int,
+) -> PackedTree:
+    """Densify level-order tree arrays into MXU-friendly operands."""
+    n_nodes = 2**depth - 1
+    n_leaves = 2**depth
+    assert feature.shape == (n_nodes,) and leaf_values.shape == (n_leaves,)
+
+    f_pad = max(_LANE, -(-n_features // _LANE) * _LANE)
+    nn_pad = max(_LANE, -(-n_nodes // _LANE) * _LANE)
+    nl_pad = max(_LANE, -(-n_leaves // _LANE) * _LANE)
+
+    t = np.zeros((f_pad, nn_pad), np.float32)
+    t[feature, np.arange(n_nodes)] = 1.0
+    thr = np.full((1, nn_pad), np.inf, np.float32)
+    thr[0, :n_nodes] = threshold
+
+    on = np.zeros((n_leaves, n_nodes), np.float32)
+    dr = np.zeros((n_leaves, n_nodes), np.float32)
+    for leaf in range(n_leaves):
+        node = 0
+        for level in range(depth):
+            d = (leaf >> (depth - 1 - level)) & 1
+            on[leaf, node] = 1.0
+            dr[leaf, node] = float(d)
+            node = 2 * node + 1 + d
+
+    a = np.zeros((nn_pad, nl_pad), np.float32)
+    b = np.zeros((nn_pad, nl_pad), np.float32)
+    a[:n_nodes, :n_leaves] = (on * dr).T
+    b[:n_nodes, :n_leaves] = (on * (1.0 - dr)).T
+    n_on = np.full((1, nl_pad), -1.0, np.float32)
+    n_on[0, :n_leaves] = on.sum(axis=1)
+    lv = np.zeros((1, nl_pad), np.float32)
+    lv[0, :n_leaves] = leaf_values
+
+    return PackedTree(
+        t=jnp.asarray(t),
+        thr=jnp.asarray(thr),
+        a=jnp.asarray(a),
+        b=jnp.asarray(b),
+        n_on=jnp.asarray(n_on),
+        leaf_vals=jnp.asarray(lv),
+        n_features=n_features,
+        depth=depth,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_infer(x: jax.Array, tree: PackedTree, *, interpret: bool | None = None):
+    """Evaluate the tree on ``x (B, F)``; returns float32 predictions ``(B,)``."""
+    if interpret is None:
+        interpret = _use_interpret()
+    bsz, f = x.shape
+    f_pad = tree.t.shape[0]
+    pad_b = (-bsz) % _SUBLANE
+    x2 = jnp.pad(x.astype(jnp.float32), ((0, pad_b), (0, f_pad - f)))
+    block_b = min(_k.DEFAULT_BLOCK_B, bsz + pad_b)
+    while (bsz + pad_b) % block_b:
+        block_b //= 2
+    scores = _k.tree_infer_2d(
+        x2,
+        tree.t,
+        tree.thr,
+        tree.a,
+        tree.b,
+        tree.n_on,
+        tree.leaf_vals,
+        block_b=block_b,
+        interpret=interpret,
+    )
+    # exactly one leaf matches per row -> the row sum is its value
+    return scores[:bsz].sum(axis=-1)

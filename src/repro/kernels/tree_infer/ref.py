@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for decision-tree inference: the literal tree walk."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_infer_ref(
+    x: jax.Array,
+    feature: jax.Array,
+    threshold: jax.Array,
+    leaf_values: jax.Array,
+    depth: int,
+) -> jax.Array:
+    """Descend a complete binary tree for each row of ``x``.
+
+    Args:
+      x: ``(B, F)`` feature vectors.
+      feature: ``(2**depth - 1,)`` int32 feature index per internal node
+        (level order: node 0 is the root, children of ``n`` are ``2n+1/2n+2``).
+      threshold: ``(2**depth - 1,)`` float32 split thresholds (go right if
+        ``x[f] > t``).
+      leaf_values: ``(2**depth,)`` predictions.
+      depth: static tree depth.
+
+    Returns:
+      ``(B,)`` predictions (same dtype as ``leaf_values``).
+    """
+    bsz = x.shape[0]
+    idx = jnp.zeros((bsz,), jnp.int32)
+    for _ in range(depth):
+        f = feature[idx]
+        t = threshold[idx]
+        go_right = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0] > t
+        idx = 2 * idx + 1 + go_right.astype(jnp.int32)
+    leaf = idx - (2**depth - 1)
+    return leaf_values[leaf]

@@ -1,0 +1,449 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the jitted step is ``.lower()``ed with ShapeDtypeStruct inputs and
+``.compile()``d against the production mesh; ``memory_analysis`` proves the
+per-device footprint, ``cost_analysis`` + HLO collective parsing feed the
+§Roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--jobs 4] [--out EXPERIMENTS_dryrun.json]
+
+Single-cell invocations print one JSON record to stdout; ``--all`` fans the
+cells out over subprocesses (isolation: one cell's compiler OOM cannot take
+down the sweep) and aggregates.
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production mesh.  Must run before ANY other
+# import — jax locks the device count on first init.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import functools
+import json
+import re
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import make_rules, mesh_context
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, get_config, shapes_for
+from repro.models.config import ALL_SHAPES, ARCH_IDS
+from repro.train.step import TrainConfig, train_step
+
+# -- HLO collective accounting ---------------------------------------------------
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape literal, e.g. 'bf16[256,4096]' (tuples summed)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from (SPMD-partitioned) HLO.
+
+    Operand sizes are read from each collective instruction's operand type
+    annotations (HLO prints callee types inline); output-only fallbacks use
+    the instruction's own shape.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    # instruction name -> shape string, for operand lookup
+    defs: dict[str, str] = {}
+    for m in re.finditer(r"%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))",
+                         hlo_text):
+        defs[m.group(1)] = m.group(2)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start|-done)?\(([^)]*)\)",
+            line,
+        )
+        if not m:
+            continue
+        _, out_type, kind, operands = m.groups()
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        op_bytes = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            name = op.split(" ")[-1].lstrip("%")
+            if name in defs:
+                op_bytes += _shape_bytes(defs[name])
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(out_type)
+        out[kind] += op_bytes
+    return out
+
+
+# -- cell lowering ------------------------------------------------------------------
+
+
+def calib_layer_counts(cfg) -> tuple[dict, dict, int, int]:
+    """Two reduced-layer overrides with identical per-layer math + (k1, k2).
+
+    XLA's cost model counts a ``while`` body once, so scanned-layer cells
+    under-report per-layer costs by ~n_layers.  Lowering two small *unrolled*
+    stacks recovers the exact per-layer slope; the caller extrapolates
+    ``corrected = f(k1) + (L - k1) * (f(k2) - f(k1)) / (k2 - k1)``.
+    The pairs respect each family's structural period (gemma2 local/global
+    pairs, zamba2 shared-attn groups, MoE dense prefixes, enc-dec stacks).
+    """
+    from repro.models.config import Family
+
+    if cfg.family is Family.ENC_DEC:
+        return ({"n_layers": 2, "n_encoder_layers": 2},
+                {"n_layers": 4, "n_encoder_layers": 4}, 2, 4)
+    if cfg.local_global_pattern:
+        return ({"n_layers": 2}, {"n_layers": 4}, 2, 4)
+    if cfg.family is Family.HYBRID and cfg.attn_every:
+        p = cfg.attn_every
+        return ({"n_layers": p}, {"n_layers": 2 * p}, p, 2 * p)
+    if cfg.family is Family.MOE and cfg.moe.first_k_dense:
+        f = cfg.moe.first_k_dense
+        return ({"n_layers": f + 1}, {"n_layers": f + 2}, f + 1, f + 2)
+    return ({"n_layers": 1}, {"n_layers": 2}, 1, 2)
+
+
+_EXTRAPOLATED_KEYS = ("flops_per_device", "bytes_accessed_per_device")
+
+
+def calibrate_cell(arch: str, shape_name: str, mesh_kind: str,
+                   rules_preset: str = "baseline") -> dict:
+    """Scan-corrected roofline terms via two unrolled reduced-layer lowerings."""
+    cfg = get_config(arch)
+    ov1, ov2, k1, k2 = calib_layer_counts(cfg)
+    r1 = lower_cell(arch, shape_name, mesh_kind,
+                    config_overrides={**ov1, "scan_layers": False},
+                    rules_preset=rules_preset)
+    r2 = lower_cell(arch, shape_name, mesh_kind,
+                    config_overrides={**ov2, "scan_layers": False},
+                    rules_preset=rules_preset)
+    if r1["status"] != "ok" or r2["status"] != "ok":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "calib_failed"}
+    L = cfg.n_layers
+    scale = (L - k1) / (k2 - k1)
+
+    def extrap(a, b):
+        return a + scale * (b - a)
+
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok", "calibrated": True, "k1": k1, "k2": k2,
+           "n_chips": r1["n_chips"],
+           "n_params": int(cfg.n_params()),
+           "n_active_params": int(cfg.n_active_params())}
+    for key in _EXTRAPOLATED_KEYS:
+        out[key] = float(extrap(r1[key], r2[key]))
+    coll = {}
+    for kind in _COLLECTIVES:
+        coll[kind] = int(max(extrap(
+            r1["collective_bytes_per_device"][kind],
+            r2["collective_bytes_per_device"][kind]), 0))
+    out["collective_bytes_per_device"] = coll
+    out["collective_bytes_total"] = int(sum(coll.values()))
+    return out
+
+
+# Named perf presets: sharding-rule overrides + config overrides
+# (EXPERIMENTS.md 'Perf' iterations).
+RULE_PRESETS: dict[str, dict] = {
+    "baseline": {"rules": {}, "config": {}},
+    # flash-decoding: shard the KV cache (and decode attention) over the
+    # model axis along kv_seq instead of replicating indivisible kv_heads
+    "seqkv": {"rules": {"kv_seq": "model", "kv_heads": None}, "config": {}},
+    # + drop activation checkpointing at inference (remat is training-only;
+    # in a decode step it only inserts recompute and extra HBM passes)
+    "seqkv_noremat": {"rules": {"kv_seq": "model", "kv_heads": None},
+                      "config": {"remat": "none"}},
+    "noremat": {"rules": {}, "config": {"remat": "none"}},
+    # mixed-precision attention: bf16 score/weight tensors, f32 row sums —
+    # halves the dominant S^2 HBM traffic of unfused train attention
+    "bf16attn": {"rules": {}, "config": {"attn_scores_bf16": True}},
+    # + mixed-precision norms: f32 only for the (...,1) variance statistics,
+    # killing the per-layer full-tensor f32 round-trips of the residual path
+    "bf16stream": {"rules": {},
+                   "config": {"attn_scores_bf16": True, "norms_bf16": True}},
+}
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str, *,
+               extra: dict | None = None, config_overrides: dict | None = None,
+               rules_preset: str = "baseline"):
+    """Lower+compile one cell; returns the dry-run record dict."""
+    cfg = get_config(arch)
+    preset = RULE_PRESETS[rules_preset]
+    if preset["config"]:
+        cfg = cfg.with_(**preset["config"])
+    if config_overrides:
+        cfg = cfg.with_(**config_overrides)
+    cell = {c.name: c for c in ALL_SHAPES}[shape_name]
+    if cell not in shapes_for(cfg):
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention "
+                      "(DESIGN.md Shape skips)",
+        }
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = make_rules(RULE_PRESETS[rules_preset]["rules"])
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    with mesh_context(mesh, rules):
+        batch_specs = S.input_specs(cfg, cell)
+        batch_ps = S.batch_pspecs(batch_specs, mesh, rules)
+
+        if cell.kind == "train":
+            tc = TrainConfig(**(extra or {}))
+            state_abs = S.train_state_abstract(model, tc)
+            state_ps = S.train_state_pspecs(model, state_abs, mesh, rules)
+            fn = functools.partial(train_step, model, tc)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(state_ps, batch_ps),
+                out_shardings=(state_ps, P()),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_abs, batch_specs)
+        elif cell.kind == "prefill":
+            cache_abs = S.cache_abstract(cfg, cell)
+            cache_ps = S.cache_pspecs(cache_abs, mesh, rules)
+            params_abs = model.abstract_params()
+            params_ps = model.param_pspecs(mesh, rules)
+
+            def prefill_fn(params, batch, cache):
+                return model.prefill(
+                    params, batch["tokens"], cache,
+                    **({"encoder_frames": batch["encoder_frames"]}
+                       if "encoder_frames" in batch else {}),
+                )
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(params_ps, batch_ps, cache_ps),
+                out_shardings=(P(), cache_ps),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, batch_specs, cache_abs)
+        else:  # decode
+            cache_abs = S.cache_abstract(cfg, cell)
+            cache_ps = S.cache_pspecs(cache_abs, mesh, rules)
+            params_abs = model.abstract_params()
+            params_ps = model.param_pspecs(mesh, rules)
+
+            def decode_fn(params, batch, cache):
+                return model.decode_step(params, batch["tokens"], cache)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(params_ps, batch_ps, cache_ps),
+                out_shardings=(P(), cache_ps),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, batch_specs, cache_abs)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "compile_s": round(time.time() - t0, 1),
+        "n_params": int(cfg.n_params()),
+        "n_active_params": int(cfg.n_active_params()),
+        # per-device numbers (post-SPMD-partitioning module)
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes_per_device": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_hbm_per_device": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        "collective_bytes_per_device": coll,
+        "collective_bytes_total": int(sum(coll.values())),
+    }
+    return record
+
+
+# -- orchestration --------------------------------------------------------------------
+
+
+def iter_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in ALL_SHAPES:
+            yield arch, cell.name, (cell in shapes_for(cfg))
+
+
+def run_all(jobs: int, out_path: str, meshes=("single", "multi")) -> list[dict]:
+    tasks = []
+    for arch, shape, eligible in iter_cells():
+        for mesh_kind in meshes:
+            tasks.append((arch, shape, mesh_kind, eligible))
+
+    def run_one(task):
+        arch, shape, mesh_kind, eligible = task
+        if not eligible:
+            return {
+                "arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention",
+            }
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+        ]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        try:
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=3600, env=env
+            )
+            if proc.returncode != 0:
+                return {
+                    "arch": arch, "shape": shape, "mesh": mesh_kind,
+                    "status": "error",
+                    "error": proc.stderr.strip().splitlines()[-12:],
+                }
+            return json.loads(proc.stdout.strip().splitlines()[-1])
+        except subprocess.TimeoutExpired:
+            return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                    "status": "timeout"}
+
+    results = []
+    with ThreadPoolExecutor(max_workers=jobs) as ex:
+        for rec in ex.map(run_one, tasks):
+            results.append(rec)
+            status = rec["status"]
+            tag = f"{rec['arch']} x {rec['shape']} x {rec['mesh']}"
+            print(f"[dryrun] {tag:60s} {status}", flush=True)
+            if out_path:
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    return results
+
+
+def calibrate_all(jobs: int, out_path: str, mesh_kind: str = "single") -> list[dict]:
+    """Scan-corrected terms for every eligible cell (subprocess-isolated)."""
+    tasks = [(arch, shape) for arch, shape, eligible in iter_cells() if eligible]
+
+    def run_one(task):
+        arch, shape = task
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--calibrate",
+               "--arch", arch, "--shape", shape, "--mesh", mesh_kind]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=3600, env=env)
+            if proc.returncode != 0:
+                return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "status": "error",
+                        "error": proc.stderr.strip().splitlines()[-8:]}
+            return json.loads(proc.stdout.strip().splitlines()[-1])
+        except subprocess.TimeoutExpired:
+            return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                    "status": "timeout"}
+
+    results = []
+    with ThreadPoolExecutor(max_workers=jobs) as ex:
+        for rec in ex.map(run_one, tasks):
+            results.append(rec)
+            print(f"[calib] {rec['arch']} x {rec['shape']}: {rec['status']}",
+                  flush=True)
+            if out_path:
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[c.name for c in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="scan-corrected terms for one cell")
+    ap.add_argument("--calibrate-all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--rules", default="baseline", choices=sorted(RULE_PRESETS))
+    args = ap.parse_args()
+
+    if args.all:
+        results = run_all(args.jobs, args.out)
+        ok = sum(r["status"] == "ok" for r in results)
+        skipped = sum(r["status"] == "skipped" for r in results)
+        bad = [r for r in results if r["status"] not in ("ok", "skipped")]
+        print(f"[dryrun] ok={ok} skipped={skipped} failed={len(bad)}")
+        for r in bad:
+            print("  FAILED:", r["arch"], r["shape"], r["mesh"])
+        sys.exit(1 if bad else 0)
+
+    if args.calibrate_all:
+        results = calibrate_all(args.jobs, args.out, args.mesh)
+        bad = [r for r in results if r["status"] != "ok"]
+        sys.exit(1 if bad else 0)
+
+    if args.calibrate:
+        record = calibrate_cell(args.arch, args.shape, args.mesh, args.rules)
+    else:
+        record = lower_cell(args.arch, args.shape, args.mesh,
+                            rules_preset=args.rules)
+    record["rules"] = args.rules
+    print(json.dumps(record))
+
+
+if __name__ == "__main__":
+    main()

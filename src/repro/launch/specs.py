@@ -1,0 +1,110 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins + PartitionSpec trees for
+every (arch x shape x mesh) cell — weak-type-correct, shardable, zero
+allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.data.tokens import make_batch_specs
+from repro.distributed.sharding import ShardingRules, spec as axis_spec
+from repro.models.config import Family, ModelConfig, ShapeCell
+from repro.models.decode import init_cache
+from repro.models.model import Model
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import TrainConfig, TrainState, init_train_state
+
+BATCH_AXES = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+              "encoder_frames": ("batch", "frames", "embed_act")}
+
+CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "cross_k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "cross_v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "conv": ("layers", "batch", "conv", "ssm_inner"),
+    "ssm": ("layers", "batch", "ssm_heads", None, "ssm_state"),
+    "index": (),
+}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one cell (tokens/labels/frames)."""
+    return make_batch_specs(cfg, cell)
+
+
+def batch_pspecs(
+    specs: dict[str, Any], mesh: Mesh, rules: ShardingRules
+) -> dict[str, P]:
+    return {
+        k: axis_spec(v.shape, BATCH_AXES[k], mesh, rules) for k, v in specs.items()
+    }
+
+
+def cache_abstract(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Abstract KV/SSM cache for decode cells (eval_shape — no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len, jnp.bfloat16)
+    )
+
+
+def cache_pspecs(
+    cache_abs: dict[str, Any], mesh: Mesh, rules: ShardingRules
+) -> dict[str, P]:
+    out = {}
+    for k, v in cache_abs.items():
+        axes = CACHE_AXES[k]
+        out[k] = axis_spec(v.shape, axes, mesh, rules) if v.shape else P()
+    return out
+
+
+def train_state_abstract(model: Model, tc: TrainConfig) -> TrainState:
+    """Abstract TrainState (params + optimizer moments, bf16/fp32)."""
+    return jax.eval_shape(
+        lambda: init_train_state(
+            model, model.init(jax.random.PRNGKey(0)), tc
+        )
+    )
+
+
+def train_state_pspecs(
+    model: Model, state_abs: TrainState, mesh: Mesh, rules: ShardingRules
+) -> TrainState:
+    """PartitionSpecs for TrainState: moments follow the param layout."""
+    p_specs = model.param_pspecs(mesh, rules)
+    flat_p, p_treedef = jax.tree.flatten(p_specs)
+    n_data = mesh.shape.get("data", 1)
+
+    def like_params(tree_abs):
+        # fp32 moments mirror the params tree exactly -> reuse param specs
+        flat_t = jax.tree.leaves(tree_abs)
+        if len(flat_t) == len(flat_p):
+            return jax.tree.unflatten(p_treedef, flat_p)
+
+        # quantized moments: _Q8(q (nblocks, 128) int8, scale (nblocks, 1))
+        # per param — shard the block axis on "data" (FSDP-style) when it
+        # divides, else replicate
+        def leaf_spec(x):
+            if x.ndim >= 1 and x.shape[0] % n_data == 0 and x.shape[0] >= n_data:
+                return P("data", *([None] * (x.ndim - 1)))
+            return P(*([None] * x.ndim))
+
+        return jax.tree.map(leaf_spec, tree_abs)
+
+    return TrainState(
+        step=P(),
+        params=p_specs,
+        opt=type(state_abs.opt)(
+            step=P(),
+            m=like_params(state_abs.opt.m),
+            v=like_params(state_abs.opt.v),
+        ),
+        ef=None
+        if state_abs.ef is None
+        else type(state_abs.ef)(residual=jax.tree.unflatten(p_treedef, flat_p)),
+    )

@@ -1,0 +1,439 @@
+"""KV/SSM-cache serving paths: prefill + single-token decode, per family.
+
+Cache layouts (all stacked over layers, scanned):
+
+  dense/moe/vlm  {"k","v"}: (L, B, S_max, KV, hd), plus scalar ``index``
+  ssm            {"conv": (L, B, K-1, C), "ssm": (L, B, H, P, N)} — O(1) in
+                 sequence length (what makes long_500k feasible)
+  hybrid         ssm caches + per-invocation shared-attn KV caches
+                 (G, B, S_max, KV, hd) for the G shared-block call sites
+  enc_dec        decoder self KV + precomputed cross K/V (L, B, S_enc, KV, hd)
+
+``prefill`` consumes the prompt and returns last-position logits only —
+materializing (B, S, V) logits for the 32k-prefill cells would be hundreds
+of GB (EXPERIMENTS.md Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MoE
+from repro.models.config import Family, ModelConfig
+from repro.models.transformer import (
+    _dense_block,
+    _mamba_block_apply,
+    _moe_block,
+    embed,
+    encode,
+    unembed,
+)
+
+KV_AXES = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> dict[str, Any]:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    c: dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        c["k"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype)
+        c["v"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype)
+    elif cfg.family is Family.SSM:
+        s = cfg.ssm
+        d_in = s.d_inner(cfg.d_model)
+        conv_dim = d_in + 2 * s.n_groups * s.d_state
+        nh = s.n_heads(cfg.d_model)
+        c["conv"] = jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, conv_dim), dtype)
+        c["ssm"] = jnp.zeros((cfg.n_layers, batch, nh, s.head_dim, s.d_state), dtype)
+    elif cfg.family is Family.HYBRID:
+        s = cfg.ssm
+        d_in = s.d_inner(cfg.d_model)
+        conv_dim = d_in + 2 * s.n_groups * s.d_state
+        nh = s.n_heads(cfg.d_model)
+        g = cfg.n_layers // cfg.attn_every
+        c["conv"] = jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, conv_dim), dtype)
+        c["ssm"] = jnp.zeros((cfg.n_layers, batch, nh, s.head_dim, s.d_state), dtype)
+        c["k"] = jnp.zeros((g, batch, max_seq, kv, hd), dtype)
+        c["v"] = jnp.zeros((g, batch, max_seq, kv, hd), dtype)
+    elif cfg.family is Family.ENC_DEC:
+        c["k"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype)
+        c["v"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype)
+        c["cross_k"] = jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, kv, hd), dtype)
+        c["cross_v"] = jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, kv, hd), dtype)
+    return c
+
+
+def _constrain_cache(c: dict) -> dict:
+    out = dict(c)
+    for name in ("k", "v", "cross_k", "cross_v"):
+        if name in c:
+            out[name] = constrain(c[name], KV_AXES)
+    if "ssm" in c:
+        out["ssm"] = constrain(
+            c["ssm"], ("layers", "batch", "ssm_heads", None, "ssm_state")
+        )
+        out["conv"] = constrain(c["conv"], ("layers", "batch", "conv", "ssm_inner"))
+    return out
+
+
+# -- prefill ----------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    cache: dict[str, Any],
+    *,
+    encoder_frames: jax.Array | None = None,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """Consume the prompt; returns (last-token logits (B, V), filled cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, b, s))
+    x = embed(cfg, params, tokens)
+    cache = dict(cache)
+    max_seq = cache["k"].shape[2] if "k" in cache else 0
+
+    def pad_kv(kv_pair):
+        k, v = kv_pair  # (L, B, S, KV, hd) after stacking
+        pad = max_seq - k.shape[2]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        if cfg.local_global_pattern:
+            x, ks, vs = _prefill_local_global(cfg, params, x, positions)
+        else:
+            blocks = params["blocks"]
+            dense_first = cfg.family is Family.MOE and cfg.moe.first_k_dense
+            if dense_first:
+                dense_cfg = cfg.with_(d_ff=cfg.moe.d_ff_dense)
+
+                def dbody(carry, p_layer):
+                    y, (k, v) = _dense_block(
+                        dense_cfg, p_layer, carry, positions=positions
+                    )
+                    return y, (k, v)
+
+                x, (dks, dvs) = jax.lax.scan(dbody, x, params["dense_blocks"])
+
+            if cfg.family is Family.MOE:
+                def body(carry, p_layer):
+                    y, (k, v), _aux = _moe_block(
+                        cfg, p_layer, carry, positions=positions
+                    )
+                    return y, (k, v)
+            else:
+                def body(carry, p_layer):
+                    y, (k, v) = _dense_block(cfg, p_layer, carry, positions=positions)
+                    return y, (k, v)
+
+            x, (ks, vs) = jax.lax.scan(body, x, blocks)
+            if dense_first:
+                ks = jnp.concatenate([dks, ks], axis=0)
+                vs = jnp.concatenate([dvs, vs], axis=0)
+        cache["k"], cache["v"] = pad_kv((ks, vs))
+
+    elif cfg.family is Family.SSM:
+        def body(carry, p_layer):
+            y, new_c = _mamba_block_apply(cfg, p_layer, carry)
+            return y, new_c
+
+        x, stacked = jax.lax.scan(body, x, params["blocks"])
+        cache["conv"] = stacked.conv.astype(cache["conv"].dtype)
+        cache["ssm"] = stacked.ssm.astype(cache["ssm"].dtype)
+
+    elif cfg.family is Family.HYBRID:
+        x, cache = _hybrid_prefill(cfg, params, x, positions, cache, pad_kv)
+
+    elif cfg.family is Family.ENC_DEC:
+        assert encoder_frames is not None
+        memory = encode(cfg, params, encoder_frames)
+        dec_cfg = cfg.with_(rope_theta=0.0)
+        pos_table = jnp.asarray(L.sinusoidal_positions(s, cfg.d_model), x.dtype)
+        x = x + pos_table[None]
+
+        def body(carry, p_layer):
+            y, (k, v) = _dense_block(
+                dec_cfg, p_layer, carry, positions=positions, cross_memory=memory
+            )
+            ck = jnp.einsum("bsd,dhk->bshk", memory, p_layer["cross_attn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", memory, p_layer["cross_attn"]["wv"])
+            return y, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["blocks"])
+        cache["k"], cache["v"] = pad_kv((ks, vs))
+        cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+
+    cache["index"] = jnp.asarray(s, jnp.int32)
+    cache = _constrain_cache(cache)
+    last = x[:, -1:]
+    logits = unembed(cfg, params, last)[:, 0]
+    return logits, cache
+
+
+def _prefill_local_global(cfg, params, x, positions):
+    paired = jax.tree.map(
+        lambda p: p.reshape(cfg.n_layers // 2, 2, *p.shape[1:]), params["blocks"]
+    )
+
+    def body(carry, p_pair):
+        pl = jax.tree.map(lambda t: t[0], p_pair)
+        pg = jax.tree.map(lambda t: t[1], p_pair)
+        y, (kl, vl) = _dense_block(cfg, pl, carry, positions=positions, is_local=True)
+        y, (kg, vg) = _dense_block(cfg, pg, y, positions=positions, is_local=False)
+        return y, (jnp.stack([kl, kg]), jnp.stack([vl, vg]))
+
+    x, (ks, vs) = jax.lax.scan(body, x, paired)  # (L/2, 2, B, S, KV, hd)
+    ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+    vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+    return x, ks, vs
+
+
+def _hybrid_prefill(cfg, params, x, positions, cache, pad_kv):
+    k_every = cfg.attn_every
+    n_groups, rem = divmod(cfg.n_layers, k_every)
+    grouped = jax.tree.map(
+        lambda p: p[: n_groups * k_every].reshape(n_groups, k_every, *p.shape[1:]),
+        params["blocks"],
+    )
+    tail = jax.tree.map(lambda p: p[n_groups * k_every :], params["blocks"])
+
+    def inner(carry, p_layer):
+        y, new_c = _mamba_block_apply(cfg, p_layer, carry)
+        return y, new_c
+
+    convs, ssms, aks, avs = [], [], [], []
+    for gi in range(n_groups):
+        group = jax.tree.map(lambda p: p[gi], grouped)
+        x, stacked = jax.lax.scan(inner, x, group)
+        convs.append(stacked.conv)
+        ssms.append(stacked.ssm)
+        x, (k, v) = _dense_block(cfg, params["shared_attn"], x, positions=positions)
+        aks.append(k)
+        avs.append(v)
+    if rem:
+        x, stacked = jax.lax.scan(inner, x, tail)
+        convs.append(stacked.conv)
+        ssms.append(stacked.ssm)
+    cache["conv"] = jnp.concatenate(convs, 0).astype(cache["conv"].dtype)
+    cache["ssm"] = jnp.concatenate(ssms, 0).astype(cache["ssm"].dtype)
+    ks, vs = jnp.stack(aks), jnp.stack(avs)
+    cache["k"], cache["v"] = pad_kv((ks, vs))
+    return x, cache
+
+
+# -- decode -------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    cache: dict[str, Any],
+) -> tuple[jax.Array, dict[str, Any]]:
+    """One new token per sequence. tokens (B, 1) -> (logits (B, V), cache)."""
+    b = tokens.shape[0]
+    idx = cache["index"]
+    positions = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    x = embed(cfg, params, tokens)
+    new_cache = dict(cache)
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        if cfg.local_global_pattern:
+            x, ks, vs = _decode_local_global(cfg, params, x, positions, cache)
+            new_cache["k"], new_cache["v"] = ks, vs
+        else:
+            dense_first = cfg.family is Family.MOE and cfg.moe.first_k_dense
+            off = cfg.moe.first_k_dense if dense_first else 0
+            if dense_first:
+                dense_cfg = cfg.with_(d_ff=cfg.moe.d_ff_dense)
+
+                def dbody(carry, xs):
+                    p_layer, k_l, v_l = xs
+                    y, (k2, v2) = _dense_block(
+                        dense_cfg, p_layer, carry, positions=positions,
+                        kv_cache=(k_l, v_l), cache_index=idx,
+                    )
+                    return y, (k2, v2)
+
+                x, (dk, dv) = jax.lax.scan(
+                    dbody, x,
+                    (params["dense_blocks"], cache["k"][:off], cache["v"][:off]),
+                )
+
+            if cfg.family is Family.MOE:
+                def body(carry, xs):
+                    p_layer, k_l, v_l = xs
+                    y, (k2, v2), _aux = _moe_block(
+                        cfg, p_layer, carry, positions=positions,
+                        kv_cache=(k_l, v_l), cache_index=idx,
+                    )
+                    return y, (k2, v2)
+            else:
+                def body(carry, xs):
+                    p_layer, k_l, v_l = xs
+                    y, (k2, v2) = _dense_block(
+                        cfg, p_layer, carry, positions=positions,
+                        kv_cache=(k_l, v_l), cache_index=idx,
+                    )
+                    return y, (k2, v2)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"][off:], cache["v"][off:])
+            )
+            if dense_first:
+                ks = jnp.concatenate([dk, ks], 0)
+                vs = jnp.concatenate([dv, vs], 0)
+            new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family is Family.SSM:
+        def body(carry, xs):
+            p_layer, conv_l, ssm_l = xs
+            y, c2 = _mamba_block_apply(
+                cfg, p_layer, carry, cache=M.MambaCache(conv=conv_l, ssm=ssm_l)
+            )
+            return y, c2
+
+        x, stacked = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"])
+        )
+        new_cache["conv"] = stacked.conv.astype(cache["conv"].dtype)
+        new_cache["ssm"] = stacked.ssm.astype(cache["ssm"].dtype)
+
+    elif cfg.family is Family.HYBRID:
+        x, new_cache = _hybrid_decode(cfg, params, x, positions, cache)
+
+    elif cfg.family is Family.ENC_DEC:
+        dec_cfg = cfg.with_(rope_theta=0.0)
+        pos_row = jnp.asarray(
+            L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model), x.dtype
+        )
+        x = x + jax.lax.dynamic_slice_in_dim(pos_row, idx, 1, 0)[None]
+
+        def body(carry, xs):
+            p_layer, k_l, v_l, ck_l, cv_l = xs
+            h = carry
+            hn = L.apply_norm(dec_cfg, h, p_layer["norm_attn"])
+            a, (k2, v2) = L.attention(
+                dec_cfg, p_layer["attn"], hn, positions=positions,
+                kv_cache=(k_l, v_l), cache_index=idx,
+            )
+            h = h + a
+            hn = L.apply_norm(dec_cfg, h, p_layer["norm_cross"])
+            # cross attention against precomputed cross K/V
+            q = jnp.einsum("bsd,dhk->bshk", hn, p_layer["cross_attn"]["wq"])
+            kh = L._expand_kv(ck_l, dec_cfg.n_heads)
+            vh = L._expand_kv(cv_l, dec_cfg.n_heads)
+            attn_out = L.dot_attention(q, kh, vh, None)
+            c = jnp.einsum(
+                "bshk,hkd->bsd", attn_out.astype(h.dtype),
+                p_layer["cross_attn"]["wo"],
+            )
+            h = h + c
+            hn = L.apply_norm(dec_cfg, h, p_layer["norm_mlp"])
+            h = h + L.mlp(dec_cfg, p_layer["mlp"], hn)
+            return h, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    new_cache["index"] = idx + 1
+    new_cache = _constrain_cache(new_cache)
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, new_cache
+
+
+def _decode_local_global(cfg, params, x, positions, cache):
+    idx = cache["index"]
+    paired = jax.tree.map(
+        lambda p: p.reshape(cfg.n_layers // 2, 2, *p.shape[1:]), params["blocks"]
+    )
+    kp = cache["k"].reshape(cfg.n_layers // 2, 2, *cache["k"].shape[1:])
+    vp = cache["v"].reshape(cfg.n_layers // 2, 2, *cache["v"].shape[1:])
+
+    def body(carry, xs):
+        p_pair, k_pair, v_pair = xs
+        pl = jax.tree.map(lambda t: t[0], p_pair)
+        pg = jax.tree.map(lambda t: t[1], p_pair)
+        y, (k0, v0) = _dense_block(
+            cfg, pl, carry, positions=positions, is_local=True,
+            kv_cache=(k_pair[0], v_pair[0]), cache_index=idx,
+        )
+        y, (k1, v1) = _dense_block(
+            cfg, pg, y, positions=positions, is_local=False,
+            kv_cache=(k_pair[1], v_pair[1]), cache_index=idx,
+        )
+        return y, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (paired, kp, vp))
+    ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+    vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+    return x, ks, vs
+
+
+def _hybrid_decode(cfg, params, x, positions, cache):
+    idx = cache["index"]
+    k_every = cfg.attn_every
+    n_groups, rem = divmod(cfg.n_layers, k_every)
+    new_cache = dict(cache)
+    grouped_p = jax.tree.map(
+        lambda p: p[: n_groups * k_every].reshape(n_groups, k_every, *p.shape[1:]),
+        params["blocks"],
+    )
+    tail_p = jax.tree.map(lambda p: p[n_groups * k_every :], params["blocks"])
+
+    def inner(carry, xs):
+        p_layer, conv_l, ssm_l = xs
+        y, c2 = _mamba_block_apply(
+            cfg, p_layer, carry, cache=M.MambaCache(conv=conv_l, ssm=ssm_l)
+        )
+        return y, c2
+
+    convs, ssms, aks, avs = [], [], [], []
+    for gi in range(n_groups):
+        sl = slice(gi * k_every, (gi + 1) * k_every)
+        group = jax.tree.map(lambda p: p[gi], grouped_p)
+        x, stacked = jax.lax.scan(
+            inner, x, (group, cache["conv"][sl], cache["ssm"][sl])
+        )
+        convs.append(stacked.conv)
+        ssms.append(stacked.ssm)
+        x, (k2, v2) = _dense_block(
+            cfg, params["shared_attn"], x, positions=positions,
+            kv_cache=(cache["k"][gi], cache["v"][gi]), cache_index=idx,
+        )
+        aks.append(k2)
+        avs.append(v2)
+    if rem:
+        sl = slice(n_groups * k_every, cfg.n_layers)
+        x, stacked = jax.lax.scan(
+            inner, x, (tail_p, cache["conv"][sl], cache["ssm"][sl])
+        )
+        convs.append(stacked.conv)
+        ssms.append(stacked.ssm)
+    new_cache["conv"] = jnp.concatenate(convs, 0).astype(cache["conv"].dtype)
+    new_cache["ssm"] = jnp.concatenate(ssms, 0).astype(cache["ssm"].dtype)
+    new_cache["k"] = jnp.stack(aks).astype(cache["k"].dtype)
+    new_cache["v"] = jnp.stack(avs).astype(cache["v"].dtype)
+    return x, new_cache

@@ -1,0 +1,392 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention (bias /
+softcap / sliding-window / cross), SwiGLU/GeGLU/GELU MLPs.
+
+All functions are pure; parameters come in as dict leaves defined by the
+matching ``*_defs`` function (see ``params.py``).  Activations carry logical
+axis constraints (``distributed.sharding.constrain``) so GSPMD keeps the
+TP/DP layout the roofline assumes.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+# -- norms ---------------------------------------------------------------------
+
+
+def norm_defs(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed_act",), init="zeros")  # rmsnorm: w = 1 + p
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_bf16(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """Mixed-precision RMSNorm: only the variance reduction runs in f32.
+
+    The full-tensor f32 round-trips of the exact version dominate the
+    unfused-HLO memory roofline of train cells (EXPERIMENTS.md 'Perf');
+    here the (..., 1) statistics are f32 but the stream stays bf16.
+    """
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + w.astype(x.dtype))
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
+    if cfg.norms_bf16 and x.dtype == jnp.bfloat16:
+        return rmsnorm_bf16(x, w)
+    return rmsnorm(x, w) if cfg.norm_kind == "rmsnorm" else layernorm(x, w)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2, np.float64) / head_dim)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, *, theta: float = 10000.0
+) -> jax.Array:
+    """x (B, S, H, D), positions (B, S) -> rotated x."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: tuple[int, int, int],
+    *,
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: positions (3, B, S) = (t, h, w) ids; the head_dim/2
+    frequency bands are split into ``sections`` (t, h, w) groups, each
+    rotated by its own position stream."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (d/2,)
+    sec = np.asarray(sections)
+    assert sec.sum() == d // 2, (sections, d)
+    # band -> which position stream (0=t, 1=h, 2=w)
+    band_src = np.repeat(np.arange(3), sec)  # (d/2,)
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    pos_per_band = jnp.take(pos, jnp.asarray(band_src), axis=0)  # (d/2, B, S)
+    angles = jnp.moveaxis(pos_per_band, 0, -1) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (n_pos, d)."""
+    inv = 1.0 / 10000 ** (np.arange(0, d, 2) / d)
+    pos = np.arange(n_pos)[:, None] * inv[None, :]
+    out = np.zeros((n_pos, d), np.float32)
+    out[:, 0::2] = np.sin(pos)
+    out[:, 1::2] = np.cos(pos)
+    return out
+
+
+# -- attention -------------------------------------------------------------------
+
+
+def attention_defs(cfg: ModelConfig, *, cross: bool = False) -> dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs: dict[str, Any] = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, kv_x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each KV head."""
+    b, s, kv, d = k.shape
+    rep = n_heads // kv
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _softcap(scores: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _mask_bias(mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+
+
+def dot_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array | None,
+    *,
+    softcap: float | None = None,
+    scores_bf16: bool = False,
+) -> jax.Array:
+    """Direct attention. q (B,Sq,H,D), k/v (B,Sk,H,D), mask (B|1,1,Sq,Sk).
+
+    ``scores_bf16``: keep the (B,H,Sq,Sk) score/weight tensors in bf16 with
+    f32 row reductions only — halves the dominant S^2 HBM traffic of
+    unfused attention (EXPERIMENTS.md 'Perf).  bf16 shares f32's exponent
+    range, so the -1e30 mask bias and the row-max subtraction are exact;
+    only the softmax mantissa is reduced (<=0.4% per-weight error).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if scores_bf16:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * jnp.asarray(scale, q.dtype)
+        scores = _softcap(scores, softcap)
+        if mask is not None:
+            scores = scores + _mask_bias(mask).astype(scores.dtype)
+        m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+        e = jnp.exp(scores - m)
+        denom = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)
+        w = (e / denom.astype(e.dtype)).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    if mask is not None:
+        scores = scores + _mask_bias(mask)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention, scanned over KV chunks.
+
+    Keeps the peak score buffer at (B, H, Sq, kv_chunk) instead of
+    (B, H, Sq, Sk) — the difference between fitting and not fitting the
+    32k-prefill cells in HBM (EXPERIMENTS.md Dry-run).  Pure JAX (lax.scan),
+    so it shards under GSPMD with no custom partitioning.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    if sk % kv_chunk:
+        kv_chunk = math.gcd(sk, kv_chunk) or sk
+    n_chunks = sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    q32 = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Sq,D)
+    kc = k.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        idx, k_i, v_i = inputs  # (B,H,C,D)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, k_i.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        kv_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((sq, kv_chunk), bool)
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        s = s + _mask_bias(mask)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v_i.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    is_local: jax.Array | bool = False,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_index: jax.Array | None = None,
+    cross_memory: jax.Array | None = None,
+    causal: bool = True,
+    use_chunked: bool | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """GQA attention covering every assigned variant.
+
+    Modes:
+      * training / prefill: full-sequence self-attention (optionally
+        chunked); returns the fresh K/V for cache seeding when requested.
+      * decode: ``kv_cache=(K, V)`` of shape (B, S_max, KV, D) plus
+        ``cache_index``; the new token's K/V is inserted and attention runs
+        over the cache.
+      * cross: ``cross_memory`` (B, S_enc, D) provides K/V (whisper).
+    """
+    b, sq, _ = x.shape
+    kv_src = cross_memory if cross_memory is not None else x
+    q, k, v = _project_qkv(cfg, p, x, kv_src)
+
+    if cross_memory is None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        elif cfg.rope_theta > 0:
+            pos2 = positions if positions.ndim == 2 else positions[None]
+            q = apply_rope(q, pos2, theta=cfg.rope_theta)
+            k = apply_rope(k, pos2, theta=cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:  # decode: insert at cache_index
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+
+    kh = _expand_kv(k, cfg.n_heads)
+    vh = _expand_kv(v, cfg.n_heads)
+
+    window = None
+    if cfg.sliding_window is not None:
+        # gemma2 alternation: local layers use the window, global do not.
+        # is_local may be a traced bool -> encode window via mask select.
+        window = cfg.sliding_window if (is_local is True) else None
+
+    sk = kh.shape[1]
+    if use_chunked is None:
+        use_chunked = sq > 2048 and kv_cache is None
+    if use_chunked:
+        out = chunked_attention(
+            q, kh, vh,
+            causal=causal and cross_memory is None,
+            window=window,
+            softcap=cfg.attn_softcap,
+        )
+    else:
+        if cross_memory is not None:
+            mask = None  # full encoder-decoder cross attention
+        elif kv_cache is not None:  # decode over the cache
+            kv_pos = jnp.arange(sk)
+            valid = kv_pos[None, :] <= cache_index  # (1, Sk)
+            if cfg.sliding_window is not None:
+                local = valid & (cache_index - kv_pos[None, :] < cfg.sliding_window)
+                valid = jnp.where(jnp.asarray(is_local), local, valid)
+            mask = jnp.broadcast_to(valid[None, None], (1, 1, sq, sk))
+        else:  # training / short prefill, direct path
+            m = jnp.ones((sq, sk), bool)
+            if causal:
+                m = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+            if cfg.sliding_window is not None:
+                qp = jnp.arange(sq)[:, None] + (sk - sq)
+                local_m = m & (qp - jnp.arange(sk)[None, :] < cfg.sliding_window)
+                m = jnp.where(jnp.asarray(is_local), local_m, m)
+            mask = m[None, None]
+        out = dot_attention(q, kh, vh, mask, softcap=cfg.attn_softcap,
+                            scores_bf16=cfg.attn_scores_bf16)
+
+    out = constrain(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    y = constrain(y, ("batch", "seq", "embed_act"))
+    if kv_cache is not None:
+        return y, new_cache
+    return y, (k, v)
+
+
+# -- MLPs ------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict[str, Any]:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamDef((d, ff), ("embed", "ff")),
+            "w_up": ParamDef((d, ff), ("embed", "ff")),
+            "w_down": ParamDef((ff, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d, ff), ("embed", "ff")),
+        "w_down": ParamDef((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else partial(
+            jax.nn.gelu, approximate=True
+        )
+        g = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = constrain(g * u, ("batch", "seq", "ff"))
+        y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]), approximate=True)
+        h = constrain(h, ("batch", "seq", "ff"))
+        y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(y, ("batch", "seq", "embed_act"))

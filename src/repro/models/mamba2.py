@@ -1,0 +1,255 @@
+"""Mamba2 mixer via SSD — state-space duality (arXiv:2405.21060).
+
+Used standalone (mamba2-130m) and as the backbone of the zamba2-7b hybrid.
+
+Train/prefill path: the *chunked dual form* — sequence split into chunks of
+Q tokens; intra-chunk interactions are a masked (attention-like) matmul,
+inter-chunk interactions flow through a state recurrence scanned over
+chunks.  This is the TPU-native adaptation of the paper's GPU SSD kernel:
+the chunk matmuls are MXU-shaped (Q x Q and Q x N), the scan carries only
+(H, P, N) states, and everything is jit-compatible ``lax`` control flow
+(DESIGN.md hardware-adaptation notes).
+
+Decode path: the classic SSM recurrence, one token per step, carrying
+``(conv_state, ssm_state)`` caches — the SSM analogue of a KV cache, with
+O(1) memory in sequence length (what makes the long_500k cell feasible).
+
+Layer structure follows the official Mamba2 block:
+  in_proj -> [z | x | B | C | dt] ; causal conv1d on [x|B|C] ; SSD ;
+  gated RMSNorm (norm(y * silu(z))) ; out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.params import ParamDef
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, conv_dim)
+    ssm: jax.Array  # (B, H, P, N)
+
+
+def mamba_defs(cfg: ModelConfig) -> dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    g, n = s.n_groups, s.d_state
+    conv_dim = d_in + 2 * g * n
+    proj_out = 2 * d_in + 2 * g * n + nh  # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((s.d_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef((nh,), ("ssm_heads",), init="zeros"),  # A = -exp(a)
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "norm_w": ParamDef((d_in,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    g, n = s.n_groups, s.d_state
+    nh = s.n_heads(cfg.d_model)
+    z, x, bc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1
+    )
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, x, b, c, dt  # dt (..., nh)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    return (yf * (1.0 + w.astype(jnp.float32))).astype(y.dtype)
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B, S, C), w (K, C) -> (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    segs = [xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)]
+    return jax.nn.silu(sum(segs) + b)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)   softplus'd step sizes
+    a: jax.Array,  # (H,)        negative decay rates
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """SSD dual form, scanned over chunks. Returns (y, final_state).
+
+    State shape (B, H, P, N).  G groups broadcast over H heads (G divides H).
+    """
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # expand groups to heads
+    bh = jnp.repeat(bmat, rep, axis=2)  # (B, S, H, N)
+    ch = jnp.repeat(cmat, rep, axis=2)
+
+    def to_chunks(t):
+        # (B, S, ...) -> (NC, B, Q, ...) for lax.scan
+        return jnp.moveaxis(
+            t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0
+        )
+
+    xc, dtc, bc_, cc = map(to_chunks, (x, dt, bh, ch))
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(h_prev, inp):
+        """One chunk: intra (dual/attention-like) + inter (state) terms.
+
+        Scanning chunk-by-chunk keeps the peak intermediate at
+        (B, Q, Q, H) per step instead of (B, NC, Q, Q, H) for the whole
+        sequence — the difference between ~tens of MB and ~tens of TB on
+        the train_4k cells.
+        """
+        x_i, dt_i, b_i, c_i = inp  # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2
+        da = dt_i * a[None, None, :]  # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        scores = jnp.einsum(
+            "bqhn,bkhn->bqkh", c_i.astype(jnp.float32), b_i.astype(jnp.float32)
+        )
+        w = scores * decay * dt_i[:, None, :, :]  # weight by dt_j
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w, x_i.astype(jnp.float32))
+
+        # inter-chunk: y_q += C_q exp(cum_q) h_prev
+        y_inter = jnp.einsum(
+            "bqhn,bhpn->bqhp",
+            c_i.astype(jnp.float32) * jnp.exp(cum)[..., None],
+            h_prev,
+        )
+
+        # state update: h_new = exp(sum da) h_prev + sum_j exp(last-cum_j) dt_j B_j x_j
+        last = cum[:, -1:, :]
+        w_state = jnp.exp(last - cum) * dt_i  # (B,Q,H)
+        chunk_state = jnp.einsum(
+            "bqh,bqhn,bqhp->bhpn",
+            w_state,
+            b_i.astype(jnp.float32),
+            x_i.astype(jnp.float32),
+        )
+        h_new = h_prev * jnp.exp(jnp.sum(da, axis=1))[:, :, None, None] + chunk_state
+        return h_new, y_intra + y_inter
+
+    final, ys = jax.lax.scan(step, h0, (xc, dtc, bc_, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    p: dict,
+    u: jax.Array,
+    *,
+    cache: MambaCache | None = None,
+) -> tuple[jax.Array, MambaCache]:
+    """One Mamba2 mixer. u (B, S, D) -> (y (B, S, D), new cache).
+
+    With ``cache`` set, S must be 1 (decode recurrence).
+    """
+    s_cfg = cfg.ssm
+    bsz, s, _ = u.shape
+    d_in = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.n_heads(cfg.d_model)
+    g, n, pdim = s_cfg.n_groups, s_cfg.d_state, s_cfg.head_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, p["in_proj"])
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)  # (B,S,conv_dim)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    if cache is None:
+        conv_out = _conv1d_causal(conv_in, p["conv_w"], p["conv_b"])
+        x, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+        xh = x.reshape(bsz, s, nh, pdim)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        y, final = ssd_chunked(
+            xh,
+            dtp,
+            a,
+            bmat.reshape(bsz, s, g, n),
+            cmat.reshape(bsz, s, g, n),
+            chunk=min(s_cfg.chunk, s),
+        )
+        y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+        new_conv = jnp.swapaxes(
+            jax.lax.dynamic_slice_in_dim(
+                jnp.swapaxes(conv_in, 1, 2), s - (s_cfg.d_conv - 1), s_cfg.d_conv - 1, 2
+            ) if s >= s_cfg.d_conv - 1 else jnp.pad(
+                jnp.swapaxes(conv_in, 1, 2), ((0, 0), (0, 0), (s_cfg.d_conv - 1 - s, 0))
+            ),
+            1, 2,
+        )
+        new_cache = MambaCache(conv=new_conv.astype(u.dtype), ssm=final.astype(u.dtype))
+    else:
+        # decode: roll conv state, apply conv taps, single recurrence step
+        conv_state = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,K,C)
+        conv_out = jnp.einsum("bkc,kc->bc", conv_state, p["conv_w"]) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
+        x, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+        xh = x.reshape(bsz, nh, pdim)
+        bm = jnp.repeat(bmat.reshape(bsz, g, n), nh // g, axis=1)
+        cm = jnp.repeat(cmat.reshape(bsz, g, n), nh // g, axis=1)
+        dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+        decay = jnp.exp(dtp * a[None, :])  # (B,H)
+        ssm = cache.ssm.astype(jnp.float32)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dtp, bm.astype(jnp.float32),
+                         xh.astype(jnp.float32))
+        ssm_new = ssm * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_new, cm.astype(jnp.float32))
+        y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = MambaCache(
+            conv=conv_state[:, 1:].astype(u.dtype), ssm=ssm_new.astype(u.dtype)
+        )
+
+    y = y.reshape(bsz, s, d_in).astype(u.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return constrain(out, ("batch", "seq", "embed_act")), new_cache
+
+
+def init_mamba_cache(
+    cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+) -> MambaCache:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return MambaCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+    )

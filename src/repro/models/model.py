@@ -1,0 +1,71 @@
+"""Model facade: one object tying config, params, forward, loss and serving.
+
+``Model.loss`` computes token cross-entropy without materializing fp32
+logits outside the sharded vocab axis; ``train_step`` lives in
+``repro.train.step`` (needs the optimizer), serving steps in
+``repro.models.decode``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.models.params import abstract, count_params, materialize, pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def defs(self):
+        return T.make_defs(self.cfg)
+
+    def init(self, key: jax.Array, dtype=None):
+        dtype = dtype or self.cfg.param_dtype()
+        return materialize(key, self.defs(), dtype=dtype)
+
+    def abstract_params(self, dtype=None):
+        dtype = dtype or self.cfg.param_dtype()
+        return abstract(self.defs(), dtype=dtype)
+
+    def param_pspecs(self, mesh, rules):
+        return pspecs(self.defs(), mesh, rules)
+
+    def n_params(self) -> int:
+        return count_params(self.defs())
+
+    # -- compute -------------------------------------------------------------
+    def forward(self, params, tokens, **kw) -> T.ForwardOut:
+        return T.forward(self.cfg, params, tokens, **kw)
+
+    def loss(
+        self,
+        params,
+        tokens: jax.Array,
+        labels: jax.Array,
+        *,
+        encoder_frames: jax.Array | None = None,
+    ) -> jax.Array:
+        out = self.forward(params, tokens, encoder_frames=encoder_frames)
+        logits = out.logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll) + out.aux_loss
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return D.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def prefill(self, params, tokens, cache, **kw):
+        return D.prefill(self.cfg, params, tokens, cache, **kw)
+
+    def decode_step(self, params, tokens, cache):
+        return D.decode_step(self.cfg, params, tokens, cache)

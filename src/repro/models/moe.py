@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with top-k routing (dbrx: 16e top-4; kimi-k2:
+384e top-8 + 1 shared expert, first layer dense).
+
+Sort-based capacity dispatch (MegaBlocks-style): tokens are sorted by
+assigned expert, truncated to a per-expert capacity, processed as one
+(E, C, D) batched einsum per projection — so compiled FLOPs track
+*active* params times the capacity factor, not ``n_experts`` (the dense
+one-hot dispatch would inflate kimi-k2's compute 48x and its activations to
+petabytes; that formulation is recorded as rejected in EXPERIMENTS.md
+§Perf).  Expert weights are stacked on a leading ``experts`` axis sharded
+over "model" (EP); capacity slots shard over ("pod", "data"), which is what
+turns dispatch/combine into GSPMD all-to-alls — the TPU analogue of
+DeepSeek-style a2a expert parallelism.
+
+The paper-level connection (DESIGN.md 4): classical MoE routes *within* a
+model; ARCHES switches *between* modules.  Both routing mechanisms live in
+this repo — this file is the classical side, ``core/expert_bank.py`` the
+ARCHES side.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+DEFAULT_CAPACITY_FACTOR = 1.25
+
+
+def moe_defs(cfg: ModelConfig) -> dict[str, Any]:
+    m = cfg.moe
+    d, e, ff = cfg.d_model, m.n_experts, m.d_ff_expert
+    defs: dict[str, Any] = {
+        "router": ParamDef((d, e), ("embed", "experts"), init="small"),
+        "w_gate": ParamDef((e, d, ff), ("experts", "embed", "ff")),
+        "w_up": ParamDef((e, d, ff), ("experts", "embed", "ff")),
+        "w_down": ParamDef((e, ff, d), ("experts", "ff", "embed")),
+    }
+    if m.n_shared_experts:
+        sff = m.d_ff_shared * m.n_shared_experts
+        defs["shared_gate"] = ParamDef((d, sff), ("embed", "ff"))
+        defs["shared_up"] = ParamDef((d, sff), ("embed", "ff"))
+        defs["shared_down"] = ParamDef((sff, d), ("ff", "embed"))
+    return defs
+
+
+def expert_capacity(
+    n_tokens: int, n_experts: int, top_k: int, capacity_factor: float
+) -> int:
+    c = math.ceil(n_tokens * top_k * capacity_factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # sublane-align
+
+
+def moe_ffn(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed FFN. x (B, S, D) -> (y, aux_loss).
+
+    Over-capacity tokens are dropped (receive only the shared-expert /
+    residual path), standard for capacity-based TPU MoE.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k = m.top_k
+    e = m.n_experts
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # (N, K)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing auxiliary loss
+    onehot_frac = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (n * k)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(onehot_frac * frac_probs) * m.aux_loss_coef
+
+    # ---- sort-based dispatch ----
+    e_flat = topi.reshape(-1)  # (N*K,) row-major: token-major order
+    tok = jnp.repeat(jnp.arange(n), k)
+    w_flat = topv.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    se = e_flat[order]
+    st = tok[order]
+    sw = w_flat[order]
+    counts = jnp.bincount(e_flat, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(n * k) - starts[se]
+    cap = expert_capacity(n, e, k, capacity_factor)
+    keep = pos_in_e < cap
+    slot = se * cap + jnp.where(keep, pos_in_e, 0)
+
+    xg = xf[st] * keep[:, None].astype(x.dtype)  # (N*K, D)
+    xg = constrain(xg, ("moe_tokens", "embed_act"))
+    xe = jnp.zeros((e * cap, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xg, 0)
+    )
+    xe = constrain(xe.reshape(e, cap, d), ("experts", "moe_cap", "embed_act"))
+
+    # ---- expert FFNs (batched over the expert axis) ----
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = constrain(jax.nn.silu(g) * u, ("experts", "moe_cap", "ff"))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = constrain(ye, ("experts", "moe_cap", "embed_act"))
+
+    # ---- combine ----
+    yg = ye.reshape(e * cap, d)[slot] * (sw * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((n, d), x.dtype).at[st].add(yg)
+
+    if m.n_shared_experts:
+        sg = jax.nn.silu(jnp.einsum("nd,df->nf", xf, p["shared_gate"]))
+        su = jnp.einsum("nd,df->nf", xf, p["shared_up"])
+        y = y + jnp.einsum("nf,fd->nd", sg * su, p["shared_down"])
+
+    y = y.reshape(b, s, d)
+    return constrain(y, ("batch", "seq", "embed_act")), aux

@@ -1,0 +1,99 @@
+"""Parameter definition trees: one source of truth for shapes, logical axes,
+initialization, PartitionSpecs and dry-run ShapeDtypeStructs.
+
+Every model module builds a nested dict of ``ParamDef`` leaves; from that one
+tree we derive (a) materialized params for the smoke tests, (b) abstract
+``ShapeDtypeStruct`` trees for ``.lower()`` in the dry-run, and (c) the
+``in_shardings`` PartitionSpec tree — guaranteed structurally consistent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, spec as _spec
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axes, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float | None = None  # overrides fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Any) -> Any:
+    """Map over ParamDef leaves of a nested dict/list tree."""
+    if is_def(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_defs(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(tree_map_defs(fn, v) for v in tree)
+    raise TypeError(f"unexpected node {type(tree)}")
+
+
+def materialize(key: jax.Array, defs: Any, dtype=jnp.float32) -> Any:
+    """Init real params (smoke tests / examples)."""
+    leaves: list[ParamDef] = []
+    tree_map_defs(lambda d: leaves.append(d), defs)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def init_one(d: ParamDef) -> jax.Array:
+        i = next(it)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        fan_in = d.shape[0] if d.shape else 1
+        if len(d.shape) >= 2:
+            fan_in = int(np.prod(d.shape[:-1]))
+        s = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        if d.init == "small":
+            s = 0.02
+        return (jax.random.normal(keys[i], d.shape, jnp.float32) * s).astype(dtype)
+
+    return tree_map_defs(init_one, defs)
+
+
+def abstract(defs: Any, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree for .lower() (no allocation)."""
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs
+    )
+
+
+def pspecs(defs: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """PartitionSpec tree matching the params tree."""
+    return tree_map_defs(lambda d: _spec(d.shape, d.axes, mesh, rules), defs)
+
+
+def shardings(defs: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    return tree_map_defs(
+        lambda d: NamedSharding(mesh, _spec(d.shape, d.axes, mesh, rules)), defs
+    )
+
+
+def count_params(defs: Any) -> int:
+    total = 0
+
+    def add(d: ParamDef):
+        nonlocal total
+        total += int(np.prod(d.shape)) if d.shape else 1
+
+    tree_map_defs(add, defs)
+    return total

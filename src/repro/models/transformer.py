@@ -1,0 +1,388 @@
+"""Unified forward/prefill/decode for all 10 assigned architectures.
+
+One parameter-def tree + one set of apply functions covers the families:
+
+  dense   command-r-plus (parallel block), granite (MQA), qwen1.5 (QKV bias),
+          gemma2 (local/global alternating + softcaps + post-norms),
+          qwen2-vl (M-RoPE backbone)
+  moe     dbrx (16e top-4), kimi-k2 (384e top-8 + shared + first-dense)
+  ssm     mamba2 (SSD)
+  hybrid  zamba2 (mamba2 backbone + shared attention block every k layers)
+  enc_dec whisper (encoder + cross-attention decoder, stub frontend)
+
+Layers are scanned (stacked params, ``jax.lax.scan``) so compile time and
+HLO size stay bounded for the 80-layer archs; gemma2 scans over
+(local, global) layer *pairs* so the window/global choice stays static
+inside the traced body.  Remat (``jax.checkpoint``) wraps the scan body
+when ``cfg.remat == "block"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MoE
+from repro.models.config import Family, ModelConfig
+from repro.models.params import ParamDef, tree_map_defs
+
+
+# -- parameter definition tree ---------------------------------------------------
+
+
+def _stack(defs: Any, n: int) -> Any:
+    """Prefix every leaf with a stacked ``layers`` axis of length n."""
+    return tree_map_defs(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale),
+        defs,
+    )
+
+
+def _dense_block_defs(cfg: ModelConfig, *, cross: bool = False) -> dict[str, Any]:
+    d = {
+        "attn": L.attention_defs(cfg),
+        "mlp": L.mlp_defs(cfg),
+        "norm_attn": L.norm_defs(cfg.d_model),
+        "norm_mlp": L.norm_defs(cfg.d_model),
+    }
+    if cfg.post_block_norm:  # gemma2
+        d["post_norm_attn"] = L.norm_defs(cfg.d_model)
+        d["post_norm_mlp"] = L.norm_defs(cfg.d_model)
+    if cfg.parallel_block:  # command-r: one shared input norm
+        d.pop("norm_mlp")
+    if cross:  # whisper decoder
+        d["cross_attn"] = L.attention_defs(cfg, cross=True)
+        d["norm_cross"] = L.norm_defs(cfg.d_model)
+    return d
+
+
+def _moe_block_defs(cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        "attn": L.attention_defs(cfg),
+        "moe": MoE.moe_defs(cfg),
+        "norm_attn": L.norm_defs(cfg.d_model),
+        "norm_mlp": L.norm_defs(cfg.d_model),
+    }
+
+
+def _mamba_block_defs(cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        "mixer": M.mamba_defs(cfg),
+        "norm": L.norm_defs(cfg.d_model),
+    }
+
+
+def make_defs(cfg: ModelConfig) -> dict[str, Any]:
+    v, d = cfg.vocab, cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="small"),
+        "final_norm": L.norm_defs(d),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"), init="small")
+
+    if cfg.family in (Family.DENSE, Family.VLM):
+        defs["blocks"] = _stack(_dense_block_defs(cfg), cfg.n_layers)
+    elif cfg.family is Family.MOE:
+        k = cfg.moe.first_k_dense
+        if k:
+            dense_cfg = cfg.with_(d_ff=cfg.moe.d_ff_dense)
+            defs["dense_blocks"] = _stack(_dense_block_defs(dense_cfg), k)
+        defs["blocks"] = _stack(_moe_block_defs(cfg), cfg.n_layers - k)
+    elif cfg.family is Family.SSM:
+        defs["blocks"] = _stack(_mamba_block_defs(cfg), cfg.n_layers)
+    elif cfg.family is Family.HYBRID:
+        defs["blocks"] = _stack(_mamba_block_defs(cfg), cfg.n_layers)
+        defs["shared_attn"] = _dense_block_defs(cfg)  # one shared block
+    elif cfg.family is Family.ENC_DEC:
+        defs["encoder"] = {
+            "blocks": _stack(_dense_block_defs(cfg), cfg.n_encoder_layers),
+            "final_norm": L.norm_defs(d),
+        }
+        defs["blocks"] = _stack(_dense_block_defs(cfg, cross=True), cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+# -- block bodies -----------------------------------------------------------------
+
+
+def _dense_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    is_local: bool | None = None,
+    kv_cache=None,
+    cache_index=None,
+    cross_memory: jax.Array | None = None,
+    causal: bool = True,
+):
+    """Pre-norm residual block covering every dense variant."""
+    if is_local is None:
+        # uniform-window configs (no local/global alternation) window everywhere
+        is_local = cfg.sliding_window is not None and not cfg.local_global_pattern
+    if cfg.parallel_block:  # command-r: x + attn(n(x)) + mlp(n(x))
+        h = L.apply_norm(cfg, x, p["norm_attn"])
+        a, cache_out = L.attention(
+            cfg, p["attn"], h, positions=positions, is_local=is_local,
+            kv_cache=kv_cache, cache_index=cache_index, causal=causal,
+        )
+        m = L.mlp(cfg, p["mlp"], h)
+        return x + a + m, cache_out
+
+    h = L.apply_norm(cfg, x, p["norm_attn"])
+    a, cache_out = L.attention(
+        cfg, p["attn"], h, positions=positions, is_local=is_local,
+        kv_cache=kv_cache, cache_index=cache_index, causal=causal,
+    )
+    if cfg.post_block_norm:
+        a = L.apply_norm(cfg, a, p["post_norm_attn"])
+    x = x + a
+
+    if "cross_attn" in p:  # whisper decoder
+        h = L.apply_norm(cfg, x, p["norm_cross"])
+        c, _ = L.attention(
+            cfg, p["cross_attn"], h, positions=positions,
+            cross_memory=cross_memory, causal=False,
+        )
+        x = x + c
+
+    h = L.apply_norm(cfg, x, p["norm_mlp"])
+    m = L.mlp(cfg, p["mlp"], h)
+    if cfg.post_block_norm:
+        m = L.apply_norm(cfg, m, p["post_norm_mlp"])
+    return x + m, cache_out
+
+
+def _moe_block(cfg: ModelConfig, p: dict, x: jax.Array, **kw):
+    h = L.apply_norm(cfg, x, p["norm_attn"])
+    a, cache_out = L.attention(cfg, p["attn"], h, **kw)
+    x = x + a
+    h = L.apply_norm(cfg, x, p["norm_mlp"])
+    m, aux = MoE.moe_ffn(cfg, p["moe"], h)
+    return x + m, cache_out, aux
+
+
+def _mamba_block_apply(cfg: ModelConfig, p: dict, x: jax.Array, cache=None):
+    h = L.apply_norm(cfg, x, p["norm"])
+    y, new_cache = M.mamba_block(cfg, p["mixer"], h, cache=cache)
+    return x + y, new_cache
+
+
+# -- embedding / head --------------------------------------------------------------
+
+
+def embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family is Family.ENC_DEC or cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, ("batch", "seq", "embed_act"))
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# -- scan helpers -------------------------------------------------------------------
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan_blocks(cfg, stacked, x, body):
+    """Scan ``body(x, p_layer) -> (x, aux)`` over stacked layer params.
+
+    ``cfg.scan_layers=False`` unrolls the loop instead (identical math).
+    XLA's cost model counts a ``while`` body once regardless of trip count,
+    so the dry-run's calibration pass lowers small *unrolled* layer stacks
+    to recover true per-layer FLOP/byte/collective costs (launch/dryrun.py).
+    """
+    f = _maybe_remat(cfg, lambda carry, p_layer: body(carry, p_layer))
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        auxes = []
+        for i in range(n):
+            x, aux = f(x, jax.tree.map(lambda p: p[i], stacked))
+            auxes.append(aux)
+        if all(a is None for a in auxes):
+            return x, None
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *auxes)
+    return jax.lax.scan(f, x, stacked)
+
+
+# -- full forward (train / eval) ----------------------------------------------------
+
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+
+
+def _default_positions(cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, b, s))  # text-only: t=h=w
+    return pos
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    b, s, _ = frames.shape
+    pos_table = jnp.asarray(
+        L.sinusoidal_positions(s, cfg.d_model), frames.dtype
+    )
+    x = frames + pos_table[None]
+    enc_cfg = cfg.with_(rope_theta=0.0)  # whisper: absolute positions
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, p_layer):
+        y, _ = _dense_block(
+            enc_cfg, p_layer, carry, positions=positions, causal=False
+        )
+        return y, None
+
+    x, _ = _scan_blocks(cfg, params["encoder"]["blocks"], x, body)
+    return L.apply_norm(cfg, x, params["encoder"]["final_norm"])
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    encoder_frames: jax.Array | None = None,
+) -> ForwardOut:
+    """Full-sequence forward -> logits (B, S, V) + aux loss."""
+    if positions is None:
+        positions = _default_positions(cfg, tokens)
+    x = embed(cfg, params, tokens)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in (Family.DENSE, Family.VLM):
+        if cfg.local_global_pattern:
+            x = _forward_local_global(cfg, params, x, positions)
+        else:
+            def body(carry, p_layer):
+                y, _ = _dense_block(cfg, p_layer, carry, positions=positions)
+                return y, None
+
+            x, _ = _scan_blocks(cfg, params["blocks"], x, body)
+
+    elif cfg.family is Family.MOE:
+        if cfg.moe.first_k_dense:
+            dense_cfg = cfg.with_(d_ff=cfg.moe.d_ff_dense)
+
+            def dense_body(carry, p_layer):
+                y, _ = _dense_block(dense_cfg, p_layer, carry, positions=positions)
+                return y, None
+
+            x, _ = _scan_blocks(cfg, params["dense_blocks"], x, dense_body)
+
+        def moe_body(carry, p_layer):
+            y, _, aux = _moe_block(cfg, p_layer, carry, positions=positions)
+            return y, aux
+
+        x, auxes = _scan_blocks(cfg, params["blocks"], x, moe_body)
+        aux_total = aux_total + jnp.sum(auxes)
+
+    elif cfg.family is Family.SSM:
+        def ssm_body(carry, p_layer):
+            y, _ = _mamba_block_apply(cfg, p_layer, carry)
+            return y, None
+
+        x, _ = _scan_blocks(cfg, params["blocks"], x, ssm_body)
+
+    elif cfg.family is Family.HYBRID:
+        x = _forward_hybrid(cfg, params, x, positions)
+
+    elif cfg.family is Family.ENC_DEC:
+        assert encoder_frames is not None, "enc_dec needs encoder_frames"
+        memory = encode(cfg, params, encoder_frames)
+        dec_cfg = cfg.with_(rope_theta=0.0)
+        pos_table = jnp.asarray(
+            L.sinusoidal_positions(tokens.shape[1], cfg.d_model), x.dtype
+        )
+        x = x + pos_table[None]
+
+        def dec_body(carry, p_layer):
+            y, _ = _dense_block(
+                dec_cfg, p_layer, carry, positions=positions,
+                cross_memory=memory,
+            )
+            return y, None
+
+        x, _ = _scan_blocks(cfg, params["blocks"], x, dec_body)
+
+    logits = unembed(cfg, params, x)
+    return ForwardOut(logits=logits, aux_loss=aux_total)
+
+
+def _forward_local_global(cfg, params, x, positions):
+    """gemma2: scan over (local, global) layer pairs — static window flag."""
+    assert cfg.n_layers % 2 == 0
+    paired = jax.tree.map(
+        lambda p: p.reshape(cfg.n_layers // 2, 2, *p.shape[1:]),
+        params["blocks"],
+    )
+
+    def body(carry, p_pair):
+        p_local = jax.tree.map(lambda t: t[0], p_pair)
+        p_global = jax.tree.map(lambda t: t[1], p_pair)
+        y, _ = _dense_block(cfg, p_local, carry, positions=positions, is_local=True)
+        y, _ = _dense_block(cfg, p_global, y, positions=positions, is_local=False)
+        return y, None
+
+    x, _ = _scan_blocks(cfg, paired, x, body)
+    return x
+
+
+def _forward_hybrid(cfg, params, x, positions):
+    """zamba2: mamba backbone; one *shared* attention block every k layers."""
+    k = cfg.attn_every
+    n = cfg.n_layers
+    n_groups, rem = divmod(n, k)
+    grouped = jax.tree.map(
+        lambda p: p[: n_groups * k].reshape(n_groups, k, *p.shape[1:]),
+        params["blocks"],
+    )
+    tail = jax.tree.map(lambda p: p[n_groups * k :], params["blocks"])
+
+    def inner_body(carry, p_layer):
+        y, _ = _mamba_block_apply(cfg, p_layer, carry)
+        return y, None
+
+    for gi in range(n_groups):
+        group = jax.tree.map(lambda p: p[gi], grouped)
+        x, _ = _scan_blocks(cfg, group, x, inner_body)
+        x, _ = _dense_block(
+            cfg, params["shared_attn"], x, positions=positions
+        )
+    if rem:
+        x, _ = _scan_blocks(cfg, tail, x, inner_body)
+    return x

@@ -1,0 +1,54 @@
+"""5G NR PUSCH substrate: the paper's case-study domain (paper 5/6)."""
+
+from repro.phy.nr import DEFAULT_SLOT, SlotConfig
+from repro.phy.channel import (
+    INDOOR_LOS,
+    INDOOR_NLOS,
+    ChannelConfig,
+    TdlProfile,
+    apply_channel,
+    simulate_slot_channel,
+)
+from repro.phy.estimators import WienerInterpolator, ls_estimate, mmse_estimate
+from repro.phy.ai_estimator import (
+    AiEstimatorConfig,
+    ai_estimate_from_ls,
+    init_params,
+    train_ai_estimator,
+)
+from repro.phy.equalizer import mmse_equalize, time_interpolate
+from repro.phy.pipeline import LinkState, PuschPipeline
+from repro.phy.scenario import (
+    GOOD,
+    POOR,
+    condition_label,
+    constant_schedule,
+    good_poor_good_schedule,
+)
+
+__all__ = [
+    "DEFAULT_SLOT",
+    "SlotConfig",
+    "ChannelConfig",
+    "TdlProfile",
+    "INDOOR_LOS",
+    "INDOOR_NLOS",
+    "apply_channel",
+    "simulate_slot_channel",
+    "WienerInterpolator",
+    "ls_estimate",
+    "mmse_estimate",
+    "AiEstimatorConfig",
+    "ai_estimate_from_ls",
+    "init_params",
+    "train_ai_estimator",
+    "mmse_equalize",
+    "time_interpolate",
+    "LinkState",
+    "PuschPipeline",
+    "GOOD",
+    "POOR",
+    "condition_label",
+    "constant_schedule",
+    "good_poor_good_schedule",
+]

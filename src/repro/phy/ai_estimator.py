@@ -1,0 +1,209 @@
+"""Expert B: residual-CNN channel estimator in pure JAX (paper 5.2).
+
+Mirrors the architectures the paper cites for OFDM channel estimation
+(residual CNNs treating the time-frequency response as a 2-D image, paper
+refs [3, 17]): LS estimates at DMRS locations in, frequency-interpolated
+full-band estimates out.  The TensorRT engine of the paper becomes a jitted
+JAX apply function; training happens in-framework (``train_ai_estimator``)
+on simulated OTA slots, per the build-everything rule (DESIGN.md 2).
+
+Structure (per antenna, vmapped) — EDSR-style: signed regression, so blocks
+keep linear outputs and the network predicts a *correction* on top of a
+naive linear-interpolation baseline (global skip):
+  input    (2, n_pilot_sc, n_dmrs_sym)    re/im as channels
+  baseline naive comb-2 -> full-band linear interpolation of the LS input
+  stem     3x3 conv -> C channels (linear)
+  body     R residual blocks (conv-relu-conv + skip, linear output)
+  upsample frequency x2 via sub-pixel shuffle
+  head     3x3 conv -> 2 channels (linear)
+  output   baseline + head                 (2, n_sc, n_dmrs_sym)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.phy.nr import SlotConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AiEstimatorConfig:
+    channels: int = 32
+    n_res_blocks: int = 4
+    kernel_hw: tuple[int, int] = (3, 3)
+
+    def flops(self, cfg: SlotConfig) -> float:
+        """Conv MACs x2, all blocks, all antennas (cost-model input)."""
+        kh, kw = self.kernel_hw
+        hw_in = cfg.n_pilot_sc * cfg.n_dmrs_sym
+        hw_out = cfg.n_sc * cfg.n_dmrs_sym
+        c = self.channels
+        per_ant = (
+            2 * kh * kw * 2 * c * hw_in  # stem
+            + self.n_res_blocks * 2 * (2 * kh * kw * c * c * hw_in)  # body
+            + 2 * kh * kw * c * (2 * c) * hw_in  # up-projection
+            + 2 * kh * kw * (2 * c) * 2 * hw_out  # head (on upsampled grid)
+        )
+        return float(cfg.n_ant * per_ant)
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """NCHW 'same' conv. x (C,H,W), w (O,I,kh,kw), b (O,)."""
+    y = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return y + b[:, None, None]
+
+
+def init_params(
+    key: jax.Array, cfg: SlotConfig, net: AiEstimatorConfig = AiEstimatorConfig()
+) -> dict[str, Any]:
+    kh, kw = net.kernel_hw
+    c = net.channels
+    keys = jax.random.split(key, 3 + 2 * net.n_res_blocks)
+
+    def he(k, o, i, scale=2.0):
+        s = jnp.sqrt(scale / (i * kh * kw))
+        return jax.random.normal(k, (o, i, kh, kw), jnp.float32) * s
+
+    params = {
+        "stem_w": he(keys[0], c, 2),
+        "stem_b": jnp.zeros(c),
+        "up_w": he(keys[1], 2 * c, c),  # sub-pixel: 2x along frequency
+        "up_b": jnp.zeros(2 * c),
+        # near-zero head so the net starts at the baseline interpolation
+        "head_w": he(keys[2], 2, c, scale=1e-4),
+        "head_b": jnp.zeros(2),
+        "res": [],
+    }
+    for r in range(net.n_res_blocks):
+        params["res"].append(
+            {
+                "w1": he(keys[3 + 2 * r], c, c),
+                "b1": jnp.zeros(c),
+                "w2": he(keys[4 + 2 * r], c, c, scale=0.2),
+                "b2": jnp.zeros(c),
+            }
+        )
+    return params
+
+
+def _baseline_interp(x: jax.Array) -> jax.Array:
+    """Naive comb-2 -> full-band interpolation, (2, Np, S) -> (2, 2*Np, S).
+
+    Even output subcarriers take the pilot value; odd ones the midpoint of
+    the two neighbouring pilots (edge clamped).
+    """
+    nxt = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+    mid = 0.5 * (x + nxt)
+    out = jnp.stack([x, mid], axis=2)  # (2, Np, 2, S)
+    return out.reshape(x.shape[0], 2 * x.shape[1], x.shape[2])
+
+
+def _forward_one_antenna(params: dict[str, Any], x: jax.Array) -> jax.Array:
+    """(2, n_pilot_sc, n_dmrs_sym) -> (2, n_sc, n_dmrs_sym)."""
+    base = _baseline_interp(x)
+    h = _conv(x, params["stem_w"], params["stem_b"])
+    for blk in params["res"]:
+        y = jax.nn.relu(_conv(h, blk["w1"], blk["b1"]))
+        y = _conv(y, blk["w2"], blk["b2"])
+        h = h + y  # linear block output (signed regression)
+    # sub-pixel upsample x2 in frequency (comb-2 -> full band)
+    u = _conv(h, params["up_w"], params["up_b"])  # (2C, Np, S)
+    c = u.shape[0] // 2
+    u = u.reshape(2, c, u.shape[1], u.shape[2])  # (2, C, Np, S)
+    u = jnp.moveaxis(u, 0, 2).reshape(c, 2 * u.shape[2], u.shape[3])
+    corr = _conv(u, params["head_w"], params["head_b"])
+    return base + corr
+
+
+@jax.jit
+def ai_estimate_from_ls(params: dict[str, Any], h_ls: jax.Array) -> jax.Array:
+    """(n_ant, n_dmrs_sym, n_pilot_sc) complex LS -> hat{H}_AI
+    (n_ant, 1, n_sc, n_dmrs_sym) complex (same contract as Expert A)."""
+    # to image layout (ant, 2, pilot_sc, dmrs_sym)
+    x = jnp.stack([h_ls.real, h_ls.imag], axis=1).astype(jnp.float32)
+    x = jnp.swapaxes(x, -1, -2)
+    out = jax.vmap(_forward_one_antenna, in_axes=(None, 0))(params, x)
+    h = (out[:, 0] + 1j * out[:, 1]).astype(jnp.complex64)  # (ant, n_sc, sym)
+    return h[:, None]  # (ant, 1, n_sc, dmrs_sym)
+
+
+# -- in-framework training ----------------------------------------------------
+
+
+def _loss(params, h_ls, h_true):
+    """Task-aligned loss: the estimator's post-MRC EVM contribution.
+
+    Plain per-element MSE is the wrong objective for a receiver: the MRC
+    combiner cancels estimation error *parallel* to the channel vector
+    (num/den both scale) and is hurt by the component that rotates the
+    combining direction.  First-order, the symbol error an estimate
+    contributes at RE (sc, sym) is
+
+        |sum_a conj(delta_a) h_a|^2 / (sum_a |h_a|^2)^2,
+
+    so that is exactly what we train on, with a small plain-MSE anchor for
+    early-training stability.
+    """
+    pred = ai_estimate_from_ls(params, h_ls)
+    err = pred - h_true  # (ant, 1, sc, sym)
+    # MRC-aligned term
+    num = jnp.abs(jnp.sum(jnp.conj(err) * h_true, axis=0)) ** 2  # (1, sc, sym)
+    den = jnp.sum(jnp.abs(h_true) ** 2, axis=0) + 1e-3
+    e2e = jnp.mean(num / den**2)
+    mse = jnp.mean(err.real**2 + err.imag**2)
+    return e2e + 0.1 * mse
+
+
+@partial(jax.jit, static_argnames=("opt_cfg",))
+def _train_step(params, opt_state, h_ls, h_true, lr, opt_cfg):
+    loss, grads = jax.value_and_grad(_loss)(params, h_ls, h_true)
+    params, opt_state = adamw_update(
+        grads, opt_state, params, opt_cfg, learning_rate=lr
+    )
+    return params, opt_state, loss
+
+
+def train_ai_estimator(
+    key: jax.Array,
+    cfg: SlotConfig,
+    sample_fn,
+    *,
+    net: AiEstimatorConfig = AiEstimatorConfig(),
+    steps: int = 600,
+    lr: float = 1e-3,
+    lr_final_frac: float = 0.05,
+) -> tuple[dict[str, Any], list[float]]:
+    """Train Expert B on simulated slots (AdamW + cosine decay).
+
+    ``sample_fn(key) -> (h_ls, h_true_at_dmrs)`` with shapes
+    (n_ant, n_dmrs_sym, n_pilot_sc) and (n_ant, 1, n_sc, n_dmrs_sym).
+    """
+    k_init, k_data = jax.random.split(key)
+    params = init_params(k_init, cfg, net)
+    opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0)
+    opt_state = adamw_init(params, opt_cfg)
+    losses = []
+    for i in range(steps):
+        k_data, k = jax.random.split(k_data)
+        h_ls, h_true = sample_fn(k)
+        frac = i / max(steps - 1, 1)
+        cur_lr = lr * (lr_final_frac + (1 - lr_final_frac) * 0.5 * (
+            1 + np.cos(np.pi * frac)))
+        params, opt_state, loss = _train_step(
+            params, opt_state, h_ls, h_true, cur_lr, opt_cfg
+        )
+        losses.append(float(loss))
+    return params, losses

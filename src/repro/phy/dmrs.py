@@ -1,0 +1,90 @@
+"""DMRS generation and resource-grid mapping (paper 5.1, Fig. 6).
+
+Type-1 DMRS with interleaved frequency-domain placement (comb-2) on OFDM
+symbols {0, 5, 10}.  Sequences are QPSK symbols from a Gold-sequence
+pseudo-random generator (TS 38.211 7.4.1.1 style, simplified init).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.phy.nr import SlotConfig
+
+
+def _gold_sequence(c_init: int, length: int) -> np.ndarray:
+    """TS 38.211 5.2.1 length-31 Gold sequence (host-side, cached)."""
+    nc = 1600
+    x1 = np.zeros(nc + length + 31, np.int8)
+    x2 = np.zeros(nc + length + 31, np.int8)
+    x1[0] = 1
+    for i in range(31):
+        x2[i] = (c_init >> i) & 1
+    for n in range(len(x1) - 31):
+        x1[n + 31] = (x1[n + 3] + x1[n]) % 2
+        x2[n + 31] = (x2[n + 3] + x2[n + 2] + x2[n + 1] + x2[n]) % 2
+    return ((x1[nc : nc + length] + x2[nc : nc + length]) % 2).astype(np.int8)
+
+
+def dmrs_sequence(cfg: SlotConfig, *, slot: int = 0, cell_id: int = 42) -> jax.Array:
+    """QPSK DMRS symbols, (n_dmrs_sym, n_pilot_sc) complex64."""
+    seqs = []
+    for sym in cfg.dmrs_symbols:
+        c_init = ((14 * slot + sym + 1) * (2 * cell_id + 1) * 2**17 + 2 * cell_id) % (
+            2**31
+        )
+        bits = _gold_sequence(int(c_init), 2 * cfg.n_pilot_sc).astype(np.float32)
+        re = (1.0 - 2.0 * bits[0::2]) / np.sqrt(2.0)
+        im = (1.0 - 2.0 * bits[1::2]) / np.sqrt(2.0)
+        seqs.append(re + 1j * im)
+    return jnp.asarray(np.stack(seqs), jnp.complex64)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def map_slot_grid(
+    cfg: SlotConfig, data_symbols: jax.Array, pilots: jax.Array
+) -> jax.Array:
+    """Assemble the TX resource grid (n_layers, n_sc, n_sym).
+
+    ``data_symbols`` is a flat (n_data_re,) complex vector in grid scan
+    order; ``pilots`` is (n_dmrs_sym, n_pilot_sc).
+    """
+    grid = jnp.zeros((cfg.n_layers, cfg.n_sc, cfg.n_sym), jnp.complex64)
+    # data placement mask (True where PUSCH data lives)
+    mask = np.ones((cfg.n_sc, cfg.n_sym), bool)
+    for i, sym in enumerate(cfg.dmrs_symbols):
+        mask[cfg.pilot_sc_indices, sym] = False
+    mask_j = jnp.asarray(mask)
+    flat_idx = jnp.cumsum(mask_j.reshape(-1).astype(jnp.int32)) - 1
+    data_grid = jnp.where(
+        mask_j.reshape(-1),
+        jnp.take(data_symbols, jnp.clip(flat_idx, 0, data_symbols.shape[0] - 1)),
+        0.0,
+    ).reshape(cfg.n_sc, cfg.n_sym)
+    grid = grid.at[0].set(data_grid)
+    for i, sym in enumerate(cfg.dmrs_symbols):
+        grid = grid.at[0, jnp.asarray(cfg.pilot_sc_indices), sym].set(pilots[i])
+    return grid
+
+
+def extract_data_re(cfg: SlotConfig, grid: jax.Array) -> jax.Array:
+    """Inverse of the data mapping: (..., n_sc, n_sym) -> (..., n_data_re)."""
+    mask = np.ones((cfg.n_sc, cfg.n_sym), bool)
+    for sym in cfg.dmrs_symbols:
+        mask[cfg.pilot_sc_indices, sym] = False
+    flat = grid.reshape(grid.shape[:-2] + (-1,))
+    idx = jnp.asarray(np.nonzero(mask.reshape(-1))[0])
+    return jnp.take(flat, idx, axis=-1)
+
+
+def extract_pilot_re(cfg: SlotConfig, grid: jax.Array) -> jax.Array:
+    """RX samples at DMRS REs: (..., n_sc, n_sym) -> (..., n_dmrs_sym, n_pilot_sc)."""
+    cols = []
+    pilot_idx = jnp.asarray(cfg.pilot_sc_indices)
+    for sym in cfg.dmrs_symbols:
+        cols.append(jnp.take(grid[..., sym], pilot_idx, axis=-1))
+    return jnp.stack(cols, axis=-2)

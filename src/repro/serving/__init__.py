@@ -1,0 +1,9 @@
+from repro.serving.engine import GenerationResult, ServingEngine
+from repro.serving.switched import SwitchedDecodeConfig, SwitchedDecoder
+
+__all__ = [
+    "GenerationResult",
+    "ServingEngine",
+    "SwitchedDecodeConfig",
+    "SwitchedDecoder",
+]

@@ -1,0 +1,94 @@
+"""Batch serving engine: prefill + decode loop, optionally ARCHES-switched.
+
+The engine is the host-side request loop around the jitted serve steps —
+deliberately thin, mirroring the paper's split (pipeline on accelerator,
+control in the dApp).  ``generate`` runs plain greedy decoding;
+``generate_switched`` runs the full ARCHES control loop (E3 telemetry ->
+dApp policy -> slot-boundary switching with fail-safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dapp import DApp, connect_dapp
+from repro.core.e3 import E3Agent
+from repro.core.runtime import ArchesRuntime, RunHistory
+from repro.models.model import Model
+from repro.serving.switched import SwitchedDecoder
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, steps)
+    history: RunHistory | None = None
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, *, max_seq: int = 4096):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+
+    def generate(
+        self,
+        prompts: jax.Array,
+        n_steps: int,
+        *,
+        encoder_frames: jax.Array | None = None,
+        sample: Callable[[jax.Array], jax.Array] | None = None,
+    ) -> GenerationResult:
+        """Greedy (or custom-sampler) generation, no switching."""
+        b = prompts.shape[0]
+        cache = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+        kw = {}
+        if encoder_frames is not None:
+            kw["encoder_frames"] = encoder_frames
+        logits, cache = self.model.prefill(self.params, prompts, cache, **kw)
+        pick = sample or (lambda l: jnp.argmax(l, axis=-1))
+        toks = pick(logits)[:, None].astype(jnp.int32)
+        out = [np.asarray(toks)]
+        for _ in range(n_steps - 1):
+            logits, cache = self.model.decode_step(self.params, toks, cache)
+            toks = pick(logits)[:, None].astype(jnp.int32)
+            out.append(np.asarray(toks))
+        return GenerationResult(tokens=np.concatenate(out, axis=1))
+
+    def generate_switched(
+        self,
+        prompts: jax.Array,
+        n_steps: int,
+        *,
+        decoder: SwitchedDecoder,
+        dapp: DApp,
+        default_mode: int = 1,
+        ttl_slots: int = 16,
+    ) -> GenerationResult:
+        """ARCHES-switched generation: full dApp control loop per decode slot."""
+        b = prompts.shape[0]
+        cache = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+        logits, cache = self.model.prefill(self.params, prompts, cache)
+        first = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+        agent = E3Agent()
+        connect_dapp(agent, dapp)
+        runtime = ArchesRuntime(
+            decoder.make_slot_fn(self.params),
+            agent,
+            default_mode=default_mode,
+            fail_safe_mode=default_mode,
+            ttl_slots=ttl_slots,
+            keep_outputs=True,
+        )
+        history = runtime.run(range(n_steps - 1), carry=(first, cache))
+        toks = np.concatenate(
+            [np.asarray(first)]
+            + [np.asarray(r.output) for r in history.records],
+            axis=1,
+        )
+        return GenerationResult(tokens=toks, history=history)

@@ -1,0 +1,143 @@
+"""ARCHES-switched LM decoding — the paper's mechanism generalized to
+serving (paper 7: "only the experts and telemetry inputs change").
+
+Expert bank over two decode-attention implementations:
+
+  Expert 0 (designated / "AI-analogue"):  **exact** decode attention over
+    the full KV cache — highest quality, cost grows with context length.
+  Expert 1 (conventional / fail-safe):    **windowed** decode attention over
+    the last W cache positions — bounded cost, approximate at long range.
+
+Mapping to the paper's machinery (unchanged code paths):
+  * the switch is the same Pallas ``switch_select`` kernel, selecting the
+    logits buffer (mode=0 no-op, mode=1 copy);
+  * decisions take effect at decode-step ("slot") boundaries through the
+    same ``SlotSwitchState`` register with fail-safe decay;
+  * telemetry is KPMs per decode step — logit entropy, expert agreement
+    (KL), cache occupancy, per-expert cost proxies — delivered over the E3
+    emulation to the same DApp/policy classes;
+  * concurrent mode runs both experts (online benchmarking, zero switch
+    latency); selected-only mode runs one via ``lax.switch``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.expert_bank import ExecutionMode, Expert, ExpertBank
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchedDecodeConfig:
+    window: int = 512  # windowed expert's attention span
+    execution_mode: ExecutionMode = ExecutionMode.CONCURRENT
+    use_pallas_switch: bool = True
+
+
+class SwitchedDecoder:
+    """Expert-bank decode step + per-slot KPM extraction."""
+
+    def __init__(self, model: Model, sw: SwitchedDecodeConfig = SwitchedDecodeConfig()):
+        if model.cfg.local_global_pattern:
+            raise ValueError(
+                "switched decode assumes a uniform attention pattern; "
+                "gemma2-style alternation already hard-codes locality"
+            )
+        self.model = model
+        self.sw = sw
+        self.cfg_exact = model.cfg
+        self.cfg_win = model.cfg.with_(sliding_window=sw.window)
+        self.model_win = Model(self.cfg_win)
+
+        def exact_fn(_bank_params, params, tokens, cache):
+            logits, _ = self.model.decode_step(params, tokens, cache)
+            return logits
+
+        def win_fn(_bank_params, params, tokens, cache):
+            logits, _ = self.model_win.decode_step(params, tokens, cache)
+            return logits
+
+        # cost proxies: bytes read from the KV cache per step
+        cfg = model.cfg
+        kv_bytes_full = lambda s: (
+            2 * cfg.n_layers * s * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        )
+        self.bank = ExpertBank(
+            [
+                Expert(name="exact", fn=exact_fn, params=None,
+                       bytes_hbm=float(kv_bytes_full(32768))),
+                Expert(name="windowed", fn=win_fn, params=None,
+                       bytes_hbm=float(kv_bytes_full(sw.window))),
+            ],
+            default_mode=1,
+            execution_mode=sw.execution_mode,
+            use_pallas_switch=sw.use_pallas_switch,
+        )
+
+    @partial(jax.jit, static_argnames=("self",))
+    def _step(self, mode: jax.Array, params, tokens, cache):
+        # cache update is expert-independent (same K/V insert); compute once
+        _, new_cache = self.model.decode_step(params, tokens, cache)
+        out = self.bank(mode, params, tokens, cache)
+        logits = out.selected
+        # per-slot telemetry material
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        p = jnp.exp(logp)
+        entropy = -jnp.mean(jnp.sum(p * logp, axis=-1))
+        if out.all_outputs is not None:
+            la, lb = out.all_outputs
+            pa = jax.nn.log_softmax(la.astype(jnp.float32), -1)
+            pb = jax.nn.log_softmax(lb.astype(jnp.float32), -1)
+            kl = jnp.mean(jnp.sum(jnp.exp(pa) * (pa - pb), axis=-1))
+            agree = jnp.mean(
+                (jnp.argmax(la, -1) == jnp.argmax(lb, -1)).astype(jnp.float32)
+            )
+        else:
+            kl = jnp.zeros(())
+            agree = jnp.ones(())
+        return logits, new_cache, {"entropy": entropy, "expert_kl": kl,
+                                   "expert_agree": agree}
+
+    def step(
+        self, mode: int | jax.Array, params, tokens, cache
+    ) -> tuple[jax.Array, Any, dict[str, float]]:
+        """One decode slot. Returns (logits, cache, KPMs)."""
+        logits, cache, kpms = self._step(jnp.asarray(mode, jnp.int32),
+                                         params, tokens, cache)
+        max_seq = cache["k"].shape[2] if "k" in cache else 1
+        host_kpms = {
+            "entropy": float(kpms["entropy"]),
+            "expert_kl": float(kpms["expert_kl"]),
+            "expert_agree": float(kpms["expert_agree"]),
+            "cache_occupancy": float(cache["index"]) / max_seq,
+            "exact_cost_bytes": self.bank.experts[0].bytes_hbm,
+            "windowed_cost_bytes": self.bank.experts[1].bytes_hbm,
+        }
+        return logits, cache, host_kpms
+
+    def make_slot_fn(self, params):
+        """Adapter for ``ArchesRuntime``: carry = (tokens, cache)."""
+
+        def slot_fn(active_mode, carry, _slot_idx):
+            tokens, cache = carry
+            logits, cache, kpms = self.step(active_mode, params, tokens, cache)
+            next_tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            return (next_tokens, cache), next_tokens, {"serving": kpms}
+
+        return slot_fn
+
+
+SERVING_KPMS = (
+    "entropy",
+    "expert_kl",
+    "expert_agree",
+    "cache_occupancy",
+)

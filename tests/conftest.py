@@ -1,0 +1,18 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / forced device counts are deliberately NOT set here — smoke
+tests must see the real single CPU device (the dry-run sets its own flags in
+its own process).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,89 @@
+"""Checkpoint store: atomic save/restore, keep-k retention, latest-step."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 4), jnp.float32),
+        "b": jnp.arange(3, dtype=jnp.bfloat16),
+        "nested": {"step": jnp.int32(17)},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    r = restore_pytree(jax.tree.map(jnp.zeros_like, t), str(tmp_path / "ck"))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), t, r
+    )
+    assert r["b"].dtype == jnp.bfloat16
+
+
+def test_latest_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=10)
+    for s in (3, 9, 12):
+        mgr.maybe_save(s, _tree(s))
+    assert latest_step(str(tmp_path)) == 12
+
+
+def test_keep_k_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=2)
+    for s in range(1, 6):
+        mgr.maybe_save(s, _tree(s))
+    kept = sorted(
+        int(d.split("_")[-1]) for d in os.listdir(tmp_path) if d.startswith("step_")
+    )
+    assert kept == [4, 5]
+
+
+def test_save_every_respected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=4, keep=10)
+    for s in range(1, 10):
+        assert mgr.maybe_save(s, _tree()) == (s % 4 == 0)
+    kept = sorted(
+        int(d.split("_")[-1]) for d in os.listdir(tmp_path) if d.startswith("step_")
+    )
+    assert kept == [4, 8]
+
+
+def test_force_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=100, keep=5)
+    assert not mgr.maybe_save(3, _tree())
+    assert mgr.maybe_save(3, _tree(), force=True)
+
+
+def test_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=3)
+    trees = {s: _tree(s) for s in (1, 2, 3)}
+    for s, t in trees.items():
+        mgr.maybe_save(s, t)
+    step, restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(trees[3]["w"]))
+
+
+def test_restore_latest_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    assert mgr.restore_latest(_tree()) is None
+
+
+def test_no_partial_checkpoints_on_disk(tmp_path):
+    """Atomicity: only complete step_* dirs are visible (no tmp residue)."""
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=5)
+    mgr.maybe_save(1, _tree())
+    entries = os.listdir(tmp_path)
+    assert all(e.startswith("step_") and ".tmp-" not in e for e in entries), entries

@@ -1,0 +1,98 @@
+"""Expert bank: dual execution modes, uniform interface, cost model (paper 3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expert_bank import ExecutionMode, Expert, ExpertBank
+
+
+def _bank(execution_mode, use_pallas=True, n=3):
+    experts = [
+        Expert(
+            name=f"e{i}",
+            fn=(lambda i: (lambda p, x: x * (i + 1.0)))(i),
+            flops=100.0 * (i + 1),
+            bytes_hbm=10.0 * (i + 1),
+        )
+        for i in range(n)
+    ]
+    return ExpertBank(
+        experts,
+        default_mode=1,
+        execution_mode=execution_mode,
+        use_pallas_switch=use_pallas,
+    )
+
+
+def test_concurrent_pallas_matches_oracle():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    bp = _bank(ExecutionMode.CONCURRENT, use_pallas=True)
+    bo = _bank(ExecutionMode.CONCURRENT, use_pallas=False)
+    for mode in range(3):
+        got = bp(jnp.int32(mode), x)
+        want = bo(jnp.int32(mode), x)
+        np.testing.assert_array_equal(np.asarray(got.selected), np.asarray(want.selected))
+        np.testing.assert_array_equal(np.asarray(got.selected), np.asarray(x * (mode + 1)))
+
+
+def test_selected_only_matches_concurrent():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    bc = _bank(ExecutionMode.CONCURRENT)
+    bs = _bank(ExecutionMode.SELECTED_ONLY)
+    for mode in range(3):
+        c = bc(jnp.int32(mode), x)
+        s = bs(jnp.int32(mode), x)
+        np.testing.assert_allclose(np.asarray(c.selected), np.asarray(s.selected))
+
+
+def test_concurrent_exposes_all_outputs():
+    """Observability: concurrent mode exposes every expert's output (paper 3.1)."""
+    x = jnp.ones((4, 4))
+    out = _bank(ExecutionMode.CONCURRENT)(jnp.int32(0), x)
+    assert out.all_outputs is not None and len(out.all_outputs) == 3
+    for i, o in enumerate(out.all_outputs):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(x) * (i + 1))
+    # selected-only cannot observe the others
+    assert _bank(ExecutionMode.SELECTED_ONLY)(jnp.int32(0), x).all_outputs is None
+
+
+def test_selected_only_executes_one_branch():
+    """lax.switch jaxpr contains cond — XLA executes exactly one branch."""
+    bank = _bank(ExecutionMode.SELECTED_ONLY)
+    jaxpr = jax.make_jaxpr(lambda m, x: bank(m, x).selected)(
+        jnp.int32(0), jnp.ones((4, 4))
+    )
+    assert "cond" in str(jaxpr)
+
+
+def test_cost_model():
+    bc = _bank(ExecutionMode.CONCURRENT)
+    bs = _bank(ExecutionMode.SELECTED_ONLY)
+    assert bc.flops_for() == 600.0  # all experts every slot
+    assert bs.flops_for(0) == 100.0  # only the active expert
+    assert bs.flops_for(2) == 300.0
+    assert bc.bytes_for() == 60.0
+    assert bs.bytes_for(1) == 20.0
+
+
+def test_validation():
+    e = Expert(name="x", fn=lambda p, x: x)
+    with pytest.raises(ValueError):
+        ExpertBank([e])  # needs >= 2
+    with pytest.raises(ValueError):
+        ExpertBank([e, e], default_mode=5)
+
+
+def test_pytree_outputs_uniform_interface():
+    """Experts returning pytrees switch leaf-wise (uniform downstream iface)."""
+    experts = [
+        Expert(name=f"e{i}", fn=(lambda i: (lambda p, x: {"h": x + i, "m": x * i}))(i))
+        for i in range(2)
+    ]
+    bank = ExpertBank(experts, default_mode=1)
+    x = jnp.arange(12.0).reshape(3, 4)
+    out = bank(jnp.int32(1), x)
+    np.testing.assert_array_equal(np.asarray(out.selected["h"]), np.asarray(x + 1))
+    np.testing.assert_array_equal(np.asarray(out.selected["m"]), np.asarray(x * 1))

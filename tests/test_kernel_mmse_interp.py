@@ -1,0 +1,57 @@
+"""Per-kernel allclose: Wiener/MMSE frequency interpolation vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mmse_interp import mmse_interp
+from repro.kernels.mmse_interp.ref import mmse_interp_ref
+from repro.phy.estimators import WienerInterpolator
+from repro.phy.nr import SlotConfig
+
+
+def _h(key, shape):
+    kr, ki = jax.random.split(key)
+    return (jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape)).astype(
+        jnp.complex64
+    )
+
+
+@pytest.mark.parametrize("n_prb", [4, 24, 51, 106])
+@pytest.mark.parametrize("lead", [(4, 3), (1, 1), (2, 2, 3)])
+def test_mmse_interp_shapes(n_prb, lead):
+    cfg = SlotConfig(n_prb=n_prb)
+    wi = WienerInterpolator.build(cfg, rms_delay_spread_s=1e-7)
+    np_pilot = wi.w.shape[0]
+    h = _h(jax.random.PRNGKey(n_prb), (*lead, np_pilot))
+    got = mmse_interp(h, wi.w)
+    want = mmse_interp_ref(h, wi.w)
+    assert got.shape == want.shape == (*lead, wi.w.shape[1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_mmse_interp_random_w(rng):
+    """Property: arbitrary complex filter matrices, not just Wiener builds."""
+    for trial in range(10):
+        np_pilot = int(rng.integers(2, 64))
+        n_sc = int(rng.integers(np_pilot, 256))
+        lead = tuple(int(rng.integers(1, 5)) for _ in range(int(rng.integers(1, 3))))
+        key = jax.random.PRNGKey(trial)
+        h = _h(key, (*lead, np_pilot))
+        w = _h(jax.random.fold_in(key, 1), (np_pilot, n_sc))
+        got = mmse_interp(h, w)
+        want = mmse_interp_ref(h, w)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_wiener_weights_sane():
+    """Wiener filter ~ reproduces pilots at pilot positions at high SNR."""
+    cfg = SlotConfig(n_prb=24)
+    wi = WienerInterpolator.build(cfg, rms_delay_spread_s=30e-9, noise_var=1e-4)
+    w = np.asarray(wi.w)
+    assert np.isfinite(w).all()
+    # row-energy bounded (no exploding filter)
+    assert np.abs(w).max() < 10.0

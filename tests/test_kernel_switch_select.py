@@ -1,0 +1,131 @@
+"""Per-kernel allclose: the ARCHES switch kernel vs the pure-jnp oracle.
+
+Sweeps shapes / dtypes / expert counts and asserts the Pallas kernel
+(interpret mode on CPU) selects exactly the same output as the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.switch_select import switch_select
+from repro.kernels.switch_select.ops import switch_select_leaf
+from repro.kernels.switch_select.ref import switch_select_tree_ref
+from repro.kernels.switch_select.switch_select import switch_select_2d
+
+
+def _experts(key, n, shape, dtype):
+    keys = jax.random.split(key, n)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return [
+            (
+                jax.random.normal(k, shape)
+                + 1j * jax.random.normal(jax.random.fold_in(k, 1), shape)
+            ).astype(dtype)
+            for k in keys
+        ]
+    return [jax.random.normal(k, shape).astype(dtype) for k in keys]
+
+
+# -- raw 2-D kernel ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 128), (256, 256), (512, 1024), (128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_switch_2d_shapes(rows, cols, dtype):
+    key = jax.random.PRNGKey(rows * cols)
+    outs = _experts(key, 3, (rows, cols), dtype)
+    alt = jnp.stack(outs[1:], 0)
+    for mode in range(3):
+        got = switch_select_2d(
+            jnp.int32(mode), alt, outs[0], block_rows=128, block_cols=128,
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(outs[mode]))
+
+
+def test_switch_2d_rejects_ragged():
+    outs = _experts(jax.random.PRNGKey(0), 2, (100, 100), jnp.float32)
+    with pytest.raises(ValueError):
+        switch_select_2d(
+            jnp.int32(0), outs[1][None], outs[0], block_rows=64, block_cols=64,
+            interpret=True,
+        )
+
+
+def test_switch_2d_shape_mismatch():
+    a = jnp.zeros((1, 8, 128))
+    d = jnp.zeros((16, 128))
+    with pytest.raises(ValueError):
+        switch_select_2d(jnp.int32(0), a, d, interpret=True)
+
+
+# -- leaf wrapper (padding + complex view) ----------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [(7,), (3, 5), (4, 3, 17), (1, 1), (2, 2, 2, 2), (1000,), (257, 129)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.complex64])
+def test_switch_leaf_odd_shapes(shape, dtype):
+    key = jax.random.PRNGKey(sum(shape))
+    outs = _experts(key, 3, shape, dtype)
+    for mode in range(3):
+        got = switch_select_leaf(jnp.int32(mode), outs[1:], outs[0], interpret=True)
+        assert got.shape == shape and got.dtype == dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(outs[mode]))
+
+
+@pytest.mark.parametrize("n_experts", [2, 3, 4, 5])
+def test_switch_n_experts(n_experts):
+    outs = _experts(jax.random.PRNGKey(n_experts), n_experts, (32, 64), jnp.float32)
+    for mode in range(n_experts):
+        got = switch_select(jnp.int32(mode), outs)
+        want = switch_select_tree_ref(mode, outs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_switch_pytree():
+    key = jax.random.PRNGKey(7)
+    mk = lambda k: {
+        "h": jax.random.normal(k, (4, 6)),
+        "aux": (jax.random.normal(jax.random.fold_in(k, 1), (3,)),),
+    }
+    outs = [mk(k) for k in jax.random.split(key, 3)]
+    for mode in range(3):
+        got = switch_select(jnp.int32(mode), outs)
+        want = outs[mode]
+        jax.tree.map(
+            lambda g, w: np.testing.assert_array_equal(np.asarray(g), np.asarray(w)),
+            got,
+            want,
+        )
+
+
+def test_switch_mode_traced_under_jit():
+    """mode must be a runtime value (slot-boundary updates don't retrace)."""
+    outs = _experts(jax.random.PRNGKey(3), 2, (16, 128), jnp.float32)
+
+    @jax.jit
+    def f(mode):
+        return switch_select(mode, outs)
+
+    np.testing.assert_array_equal(np.asarray(f(jnp.int32(0))), np.asarray(outs[0]))
+    np.testing.assert_array_equal(np.asarray(f(jnp.int32(1))), np.asarray(outs[1]))
+    # one trace, two modes
+    assert f._cache_size() == 1
+
+
+def test_switch_property_randomized(rng):
+    """Property sweep: random shapes / expert counts / modes round-trip."""
+    for trial in range(25):
+        nd = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(1, 40)) for _ in range(nd))
+        n = int(rng.integers(2, 5))
+        dtype = [jnp.float32, jnp.bfloat16, jnp.complex64][int(rng.integers(0, 3))]
+        outs = _experts(jax.random.PRNGKey(trial), n, shape, dtype)
+        mode = int(rng.integers(0, n))
+        got = switch_select(jnp.int32(mode), outs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(outs[mode]))

@@ -1,0 +1,73 @@
+"""Per-kernel allclose: MXU decision-tree inference vs literal tree walk."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import fit_decision_tree
+from repro.kernels.tree_infer import pack_tree, tree_infer, tree_infer_ref
+
+
+def _fit_random_tree(rng, n, f, depth):
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=f)
+    y = (x @ w + 0.3 * rng.normal(size=n) > 0).astype(np.int32)
+    return fit_decision_tree(x, y, depth=depth), x
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 4])
+@pytest.mark.parametrize("f", [1, 3, 10, 17])
+def test_tree_infer_vs_ref(depth, f, rng):
+    tree, x = _fit_random_tree(rng, 300, f, depth)
+    packed = pack_tree(tree.feature, tree.threshold, tree.leaf_values, f, depth)
+    got = tree_infer(jnp.asarray(x), packed)
+    want = tree_infer_ref(
+        jnp.asarray(x),
+        jnp.asarray(tree.feature),
+        jnp.asarray(tree.threshold),
+        jnp.asarray(tree.leaf_values),
+        depth,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("batch", [1, 2, 31, 256, 300, 513])
+def test_tree_infer_batch_sizes(batch, rng):
+    tree, _ = _fit_random_tree(rng, 200, 5, 2)
+    packed = pack_tree(tree.feature, tree.threshold, tree.leaf_values, 5, 2)
+    x = rng.normal(size=(batch, 5)).astype(np.float32)
+    got = tree_infer(jnp.asarray(x), packed)
+    want = tree_infer_ref(
+        jnp.asarray(x),
+        jnp.asarray(tree.feature),
+        jnp.asarray(tree.threshold),
+        jnp.asarray(tree.leaf_values),
+        2,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tree_infer_property_random_trees(rng):
+    """Random complete trees (not fitted) — kernel must match the walk."""
+    for trial in range(15):
+        depth = int(rng.integers(1, 5))
+        f = int(rng.integers(1, 12))
+        n_nodes, n_leaves = 2**depth - 1, 2**depth
+        feature = rng.integers(0, f, size=n_nodes).astype(np.int32)
+        threshold = rng.normal(size=n_nodes).astype(np.float32)
+        # some pass-through nodes (inf threshold), as the trainer emits
+        mask = rng.random(n_nodes) < 0.3
+        threshold[mask] = np.inf
+        leaf_values = rng.integers(0, 2, size=n_leaves).astype(np.float32)
+        packed = pack_tree(feature, threshold, leaf_values, f, depth)
+        x = rng.normal(size=(64, f)).astype(np.float32)
+        got = tree_infer(jnp.asarray(x), packed)
+        want = tree_infer_ref(
+            jnp.asarray(x),
+            jnp.asarray(feature),
+            jnp.asarray(threshold),
+            jnp.asarray(leaf_values),
+            depth,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

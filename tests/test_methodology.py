@@ -1,0 +1,157 @@
+"""The 3-stage policy-design methodology (paper 4, Figs. 3-5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.methodology import (
+    DEFAULT_RHOS,
+    SweepResult,
+    design_policy_inputs,
+    monotonicity_filter,
+    perturb_estimate,
+    redundancy_reduction,
+    sensitivity_sweep,
+)
+
+# -- Stage 1: Eq. (3) statistics -------------------------------------------------
+
+
+def test_perturb_zero_rho_is_identity():
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, 3, 64), jnp.complex64)
+    out = perturb_estimate(h, 0.0, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), atol=1e-7)
+
+
+@pytest.mark.parametrize("rho", [0.3, 1.0, 2.0])
+def test_perturb_noise_scale_matches_eq3(rho):
+    """Injected noise std must be rho * E[|H|] (unit-variance CN scaling)."""
+    key = jax.random.PRNGKey(42)
+    h = (
+        jax.random.normal(key, (64, 64)) + 1j * jax.random.normal(key, (64, 64))
+    ).astype(jnp.complex64) * 3.0
+    out = perturb_estimate(h, rho, jax.random.PRNGKey(7))
+    noise = np.asarray(out - h)
+    target = rho * float(jnp.mean(jnp.abs(h)))
+    measured = np.sqrt(np.mean(np.abs(noise) ** 2))
+    assert abs(measured - target) / target < 0.08
+
+
+def test_perturb_preserves_dtype_shape():
+    h = jnp.ones((2, 5), jnp.complex64)
+    out = perturb_estimate(h, 1.0, jax.random.PRNGKey(0))
+    assert out.shape == h.shape and out.dtype == h.dtype
+
+
+# -- Stage 1 driver ---------------------------------------------------------------
+
+
+def test_sensitivity_sweep_grid():
+    calls = []
+
+    def eval_fn(rho, key):
+        calls.append(rho)
+        return {"a": 10.0 - rho, "b": 1.0}
+
+    sweep = sensitivity_sweep(eval_fn, rhos=(0.0, 0.5, 1.0), n_trials=3)
+    assert sweep.means.shape == (3, 2)
+    assert sweep.samples.shape == (3, 3, 2)
+    assert len(calls) == 9
+    np.testing.assert_allclose(sweep.means[:, 0], [10.0, 9.5, 9.0])
+    assert (sweep.ci95 >= 0).all()
+
+
+def test_default_rho_grid_matches_paper():
+    """rho in [0, 2], steps of 0.1 (paper 4.1)."""
+    assert DEFAULT_RHOS[0] == 0.0 and DEFAULT_RHOS[-1] == 2.0
+    assert len(DEFAULT_RHOS) == 21
+    np.testing.assert_allclose(np.diff(DEFAULT_RHOS), 0.1)
+
+
+# -- Stage 2 -----------------------------------------------------------------------
+
+
+def test_monotonicity_filter():
+    rhos = np.asarray(DEFAULT_RHOS)
+    rng = np.random.default_rng(3)
+    means = np.stack(
+        [
+            -rhos + 0.01 * rng.normal(size=21),  # monotone down -> keep
+            0.05 * rng.normal(size=21),  # flat noise -> drop
+            rhos**2,  # monotone up -> keep (RSRP-like)
+            np.sin(rhos * 3),  # oscillating -> drop
+        ],
+        axis=1,
+    )
+    sweep = SweepResult(
+        rhos=rhos,
+        kpm_names=("tb_size", "flat", "rsrp", "osc"),
+        means=means,
+        ci95=np.zeros_like(means),
+        samples=means[:, None, :],
+    )
+    kept = monotonicity_filter(sweep, min_abs_spearman=0.8)
+    assert set(kept) == {"tb_size", "rsrp"}
+    assert kept["tb_size"] < 0  # degrades with rho
+    assert kept["rsrp"] > 0  # RSRP inflates with noise (paper 4.3)
+
+
+# -- Stage 3 -----------------------------------------------------------------------
+
+
+def _link_adaptation_samples(rng, n=400):
+    """Synthetic link-adaptation cluster: mcs/tb/qam move in lockstep."""
+    q = rng.normal(size=n)  # latent channel quality
+    return {
+        "mcs_index": q + 0.05 * rng.normal(size=n),
+        "tb_size": 2 * q + 0.05 * rng.normal(size=n),
+        "qam_order": 1.5 * q + 0.1 * rng.normal(size=n),
+        "rsrp": -0.3 * q + rng.normal(size=n),  # weakly anti-correlated
+        "ndi": rng.normal(size=n),  # independent
+    }
+
+
+def test_redundancy_reduction_clusters_link_adaptation(rng):
+    res = redundancy_reduction(_link_adaptation_samples(rng), threshold=0.8)
+    lbl = dict(zip(res.names, res.labels))
+    assert lbl["mcs_index"] == lbl["tb_size"] == lbl["qam_order"]
+    assert lbl["ndi"] != lbl["mcs_index"]
+    assert lbl["rsrp"] != lbl["mcs_index"]
+    # the paper keeps MCS index as the cluster representative
+    assert "mcs_index" in res.representatives
+    assert "tb_size" not in res.representatives
+    # independents survive as their own representatives
+    assert "ndi" in res.representatives and "rsrp" in res.representatives
+
+
+def test_redundancy_threshold_extremes(rng):
+    samples = _link_adaptation_samples(rng)
+    none_merged = redundancy_reduction(samples, threshold=0.999999)
+    assert len(set(none_merged.labels)) == len(samples)
+    all_merged = redundancy_reduction(samples, threshold=-1.0)
+    assert len(set(all_merged.labels)) == 1
+
+
+def test_redundancy_zero_variance_guard(rng):
+    samples = {"const": np.ones(100), "x": rng.normal(size=100)}
+    res = redundancy_reduction(samples, threshold=0.8)
+    assert np.isfinite(res.corr).all()
+
+
+def test_design_policy_inputs_end_to_end(rng):
+    aerial = _link_adaptation_samples(rng)
+    q2 = rng.normal(size=400)
+    oai = {
+        "snr": q2,
+        "mac_throughput": 0.77 * q2 + 0.65 * rng.normal(size=400),  # r ~ .77 < .8
+        "lcid4_rx_bytes": rng.normal(size=400),
+    }
+    selected, a_res, o_res = design_policy_inputs(aerial, oai)
+    assert selected[0] == "phy_throughput"  # always re-added (paper 4.3)
+    assert "mcs_index" in selected
+    assert "tb_size" not in selected  # absorbed by the mcs cluster
+    # OAI metrics all below 0.8 pairwise -> all retained (paper Fig. 5b)
+    for n in oai:
+        assert n in selected
+    assert len(selected) == len(set(selected))  # de-duplicated

@@ -1,0 +1,120 @@
+"""PUSCH pipeline + ARCHES integration (paper Fig. 2, 6.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expert_bank import ExecutionMode
+from repro.core.telemetry import SELECTED_KPMS
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import LinkState, PuschPipeline
+from repro.phy.scenario import GOOD, POOR
+
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    params = init_params(jax.random.PRNGKey(0), CFG, NET)
+    return PuschPipeline(CFG, params, net=NET)
+
+
+def _avg_tput(pipe, ch, mode, n=6, seed=0, warmup=0):
+    """Mean per-slot PHY rate after ``warmup`` slots (OLLA settling)."""
+    link = LinkState()
+    rates = []
+    for i in range(n):
+        link, out, kpms = pipe.run_slot(
+            jax.random.PRNGKey(seed * 1000 + i), mode, link, ch
+        )
+        if i >= warmup:
+            rates.append(out["phy_bits_per_s"])
+    return float(np.mean(rates)), kpms
+
+
+def test_slot_produces_selected_kpms(pipe):
+    _, kpms = _avg_tput(pipe, GOOD, 1, n=2)
+    flat = {**kpms["aerial"], **kpms["oai"]}
+    for name in SELECTED_KPMS:
+        assert name in flat, f"missing KPM {name}"
+        assert np.isfinite(flat[name])
+
+
+def test_good_beats_poor_throughput(pipe):
+    t_good, _ = _avg_tput(pipe, GOOD, 1, n=20, warmup=8)
+    t_poor, _ = _avg_tput(pipe, POOR, 1, n=20, warmup=8)
+    assert t_good > t_poor
+
+
+def test_mode_changes_selected_estimate(pipe):
+    """Switch kernel routes different expert outputs downstream."""
+    link = LinkState()
+    key = jax.random.PRNGKey(3)
+    _, out0, _ = pipe.run_slot(key, 0, link, GOOD)
+    _, out1, _ = pipe.run_slot(key, 1, link, GOOD)
+    h0 = np.asarray(out0["rx"]["h_selected"])
+    h1 = np.asarray(out1["rx"]["h_selected"])
+    assert h0.shape == h1.shape
+    assert not np.allclose(h0, h1)  # different experts
+
+
+def test_concurrent_exposes_both_experts(pipe):
+    link = LinkState()
+    _, out, _ = pipe.run_slot(jax.random.PRNGKey(4), 1, link, GOOD)
+    alls = out["rx"]["all_outputs"]
+    assert alls is not None and len(alls) == 2
+    # selected buffer holds the MMSE output (mode=1)
+    np.testing.assert_allclose(
+        np.asarray(out["rx"]["h_selected"]), np.asarray(alls[1]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_selected_only_mode_runs():
+    params = init_params(jax.random.PRNGKey(0), CFG, NET)
+    pipe_sel = PuschPipeline(
+        CFG, params, net=NET, execution_mode=ExecutionMode.SELECTED_ONLY
+    )
+    link = LinkState()
+    _, out, kpms = pipe_sel.run_slot(jax.random.PRNGKey(5), 1, link, GOOD)
+    assert out["rx"]["all_outputs"] is None
+    assert np.isfinite(kpms["aerial"]["sinr"])
+
+
+def test_perturbation_degrades_kpms(pipe):
+    """Stage-1 property (paper Fig. 4): rho=2 must degrade vs rho=0."""
+
+    def run(rho, seed):
+        link = LinkState()
+        vals = []
+        for i in range(8):
+            link, out, kpms = pipe.run_slot(
+                jax.random.PRNGKey(seed + i), 1, link, GOOD, perturb_rho=rho
+            )
+            if i >= 2:  # skip OLLA cold start
+                vals.append((kpms["aerial"]["tb_size"], kpms["oai"]["snr"]))
+        return np.mean([v[0] for v in vals]), np.mean([v[1] for v in vals])
+
+    tb0, snr0 = run(0.0, 100)
+    tb2, snr2 = run(2.0, 100)
+    assert snr2 < snr0 - 3.0  # SNR collapses with rho (Fig. 4b)
+    assert tb2 <= tb0  # TB size shrinks or vanishes (Fig. 4a)
+
+
+def test_link_adaptation_reacts():
+    """Reported SNR drives MCS over slots (link adaptation loop closes)."""
+    params = init_params(jax.random.PRNGKey(0), CFG, NET)
+    pipe = PuschPipeline(CFG, params, net=NET)
+    link = LinkState()
+    mcs_good = []
+    for i in range(5):
+        link, out, _ = pipe.run_slot(jax.random.PRNGKey(i), 1, link, GOOD)
+        mcs_good.append(out["mcs"])
+    link = LinkState()
+    mcs_poor = []
+    for i in range(5):
+        link, out, _ = pipe.run_slot(jax.random.PRNGKey(i), 1, link, POOR)
+        mcs_poor.append(out["mcs"])
+    assert np.mean(mcs_poor[2:]) < np.mean(mcs_good[2:])

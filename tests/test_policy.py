@@ -1,0 +1,106 @@
+"""Switching policies: tree trainer, Table-1 metrics, threshold gating."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import (
+    DecisionTreePolicy,
+    ThresholdPolicy,
+    classification_metrics,
+    fit_decision_tree,
+)
+
+
+def test_depth1_matches_brute_force(rng):
+    """Depth-1 tree must find the single best Gini threshold."""
+    x = rng.normal(size=(200, 3)).astype(np.float32)
+    y = (x[:, 1] > 0.37).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=1)
+    assert tree.feature[0] == 1
+    assert abs(tree.threshold[0] - 0.37) < 0.2
+    pol = DecisionTreePolicy(tree, ["a", "b", "c"])
+    pred = np.asarray(pol.batch(jnp.asarray(x)))
+    assert (pred == y).mean() == 1.0
+
+
+def test_depth2_xor_structure(rng):
+    """Depth-2 tree separates an axis-aligned 2-split problem perfectly."""
+    x = rng.uniform(-1, 1, size=(500, 2)).astype(np.float32)
+    y = ((x[:, 0] > 0) & (x[:, 1] > 0)).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=2)
+    pol = DecisionTreePolicy(tree, ["a", "b"])
+    pred = np.asarray(pol.batch(jnp.asarray(x)))
+    assert (pred == y).mean() >= 0.99
+
+
+def test_importances_normalized(rng):
+    x = rng.normal(size=(300, 4)).astype(np.float32)
+    y = (x[:, 2] > 0).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=2)
+    assert abs(tree.importances.sum() - 1.0) < 1e-5
+    assert tree.importances.argmax() == 2
+
+
+def test_pure_node_stops_splitting():
+    x = np.ones((50, 2), np.float32)
+    y = np.zeros(50, np.int32)
+    tree = fit_decision_tree(x, y, depth=2)
+    pol = DecisionTreePolicy(tree, ["a", "b"])
+    assert int(pol(jnp.asarray([1.0, 1.0]))) == 0
+
+
+def test_classification_metrics_hand_check():
+    y_true = np.array([0, 0, 0, 1, 1, 1, 1, 1])
+    y_pred = np.array([0, 0, 1, 1, 1, 1, 1, 0])
+    m = classification_metrics(y_true, y_pred)
+    # positive class is 0 (AI): tp=2 fp=1 fn=1 tn=4
+    assert m["accuracy"] == pytest.approx(6 / 8)
+    assert m["precision"] == pytest.approx(2 / 3)
+    assert m["recall"] == pytest.approx(2 / 3)
+    assert m["specificity"] == pytest.approx(4 / 5)
+    assert m["f1"] == pytest.approx(2 / 3)
+
+
+def test_tree_beats_majority_baseline_property(rng):
+    """Property: fitted tree's train accuracy >= majority-class baseline."""
+    for trial in range(10):
+        n = int(rng.integers(40, 300))
+        f = int(rng.integers(1, 8))
+        x = rng.normal(size=(n, f)).astype(np.float32)
+        y = rng.integers(0, 2, size=n).astype(np.int32)
+        tree = fit_decision_tree(x, y, depth=2)
+        pol = DecisionTreePolicy(tree, [f"f{i}" for i in range(f)])
+        pred = np.asarray(pol.batch(jnp.asarray(x)))
+        acc = (pred == y).mean()
+        baseline = max(y.mean(), 1 - y.mean())
+        assert acc >= baseline - 1e-9, f"trial {trial}: {acc} < {baseline}"
+
+
+def test_single_equals_batch_property(rng):
+    x = rng.normal(size=(100, 6)).astype(np.float32)
+    y = (x[:, 0] * x[:, 3] > 0).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=3)
+    pol = DecisionTreePolicy(tree, [f"f{i}" for i in range(6)])
+    batch = np.asarray(pol.batch(jnp.asarray(x)))
+    single = np.asarray([int(pol(jnp.asarray(v))) for v in x])
+    np.testing.assert_array_equal(batch, single)
+
+
+def test_threshold_policy_hysteresis():
+    pol = ThresholdPolicy(feature_idx=0, threshold=5.0, hysteresis=1.0)
+    # above band -> mode_above
+    assert int(pol(jnp.asarray([6.5]), prev_mode=0)) == 1
+    # below band -> mode_below
+    assert int(pol(jnp.asarray([3.5]), prev_mode=1)) == 0
+    # inside band -> keep previous (no flapping)
+    assert int(pol(jnp.asarray([5.3]), prev_mode=0)) == 0
+    assert int(pol(jnp.asarray([4.8]), prev_mode=1)) == 1
+
+
+def test_feature_name_mismatch():
+    tree = fit_decision_tree(
+        np.zeros((4, 2), np.float32), np.array([0, 0, 1, 1]), depth=1
+    )
+    with pytest.raises(ValueError):
+        DecisionTreePolicy(tree, ["only_one"])

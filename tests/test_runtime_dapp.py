@@ -1,0 +1,141 @@
+"""End-to-end control loop: runtime + E3 + dApp (paper 3.3, 6.1).
+
+Validates the full decision path: pipeline KPMs -> E3 indication -> dApp
+policy -> E3 control -> slot-boundary application, plus the fail-safe and
+the latency model.
+"""
+
+import numpy as np
+
+from repro.core.dapp import ControlLoopLatency, DApp, Decision, connect_dapp
+from repro.core.e3 import E3Agent, E3IndicationMessage
+from repro.core.runtime import ArchesRuntime
+
+
+def _threshold_policy(x):
+    """mode 0 (AI) when KPM 'q' < 5, else 1 (MMSE)."""
+    return 0 if x[0] < 5.0 else 1
+
+
+def _slot_fn_from_series(series):
+    def slot_fn(active_mode, carry, slot_idx):
+        q = series[slot_idx]
+        return carry, {"q": q}, {"aerial": {"q": q}}
+
+    return slot_fn
+
+
+def _run(series, *, window=1, ttl=8, fail_at=None, recover_at=None, period=1):
+    agent = E3Agent()
+    dapp = DApp(_threshold_policy, ["q"], window_slots=window, period_slots=period)
+    connect_dapp(agent, dapp)
+    runtime = ArchesRuntime(
+        _slot_fn_from_series(series), agent, default_mode=1, fail_safe_mode=1,
+        ttl_slots=ttl,
+    )
+
+    # wrap slot_fn to inject dApp failure at a given slot
+    base = runtime.slot_fn
+
+    def wrapped(active_mode, carry, slot_idx):
+        if fail_at is not None and slot_idx == fail_at:
+            dapp.fail()
+        if recover_at is not None and slot_idx == recover_at:
+            dapp.recover()
+        return base(active_mode, carry, slot_idx)
+
+    runtime.slot_fn = wrapped
+    return runtime.run(range(len(series))), dapp
+
+
+def test_one_slot_decision_delay():
+    """Condition flips at slot 5; the mode follows at slot 6 (n -> n+1)."""
+    series = [10.0] * 5 + [0.0] * 5
+    hist, _ = _run(series)
+    modes = hist.modes
+    assert modes[0] == 1  # default before first decision
+    assert (modes[1:6] == 1).all()
+    assert modes[5] == 1  # decision made during slot 5 is NOT active in slot 5
+    assert (modes[6:] == 0).all()  # active from slot 6
+
+
+def test_fail_safe_on_dapp_failure():
+    series = [0.0] * 30  # dApp would always say AI
+    ttl = 6
+    hist, _ = _run(series, ttl=ttl, fail_at=10)
+    modes = hist.modes
+    assert (modes[2:11] == 0).all()  # AI active while dApp alive
+    # after failure at slot 10, no decisions; decay to conventional after ttl
+    assert (modes[11 : 10 + ttl] == 0).all()
+    assert (modes[10 + ttl + 1 :] == 1).all()
+
+
+def test_recovery_after_failure():
+    series = [0.0] * 40
+    hist, _ = _run(series, ttl=4, fail_at=10, recover_at=25)
+    modes = hist.modes
+    assert (modes[16:26] == 1).all()  # failed -> fail-safe
+    assert (modes[27:] == 0).all()  # recovered -> AI again
+
+
+def test_decision_period():
+    """period_slots=4: decisions only on slots divisible by 4."""
+    series = [10.0] * 8 + [0.0] * 8
+    hist, dapp = _run(series, period=4)
+    slots = [d.slot for d in dapp.decisions]
+    assert all(s % 4 == 0 for s in slots)
+    # flip at slot 8 (divisible) -> active at 9
+    assert hist.modes[9] == 0
+
+
+def test_window_smoothing():
+    """A 1-slot KPM glitch must not flip an 8-slot-window dApp."""
+    series = [10.0] * 10 + [0.0] + [10.0] * 10
+    hist, _ = _run(series, window=8)
+    assert (hist.modes == 1).all()
+
+
+def test_control_loop_latency_model():
+    """Paper 6.1: ~135 us framework + 0.41 us tree + 3.36/4.89 us switch."""
+    lat = ControlLoopLatency()
+    e2e_ai = lat.end_to_end_us(0)
+    e2e_mmse = lat.end_to_end_us(1)
+    assert abs(e2e_ai - (135.0 + 0.41 + 3.36)) < 1e-6
+    assert abs(e2e_mmse - (135.0 + 0.41 + 4.89)) < 1e-6
+    assert 130.0 < e2e_ai < 150.0  # the paper's "~140 us"
+
+
+def test_decisions_carry_latency():
+    series = [0.0] * 4
+    _, dapp = _run(series)
+    assert len(dapp.decisions) > 0
+    for d in dapp.decisions:
+        assert isinstance(d, Decision)
+        assert d.end_to_end_us > 135.0
+        assert d.policy_us >= 0.0
+
+
+def test_e3_subscription_filtering():
+    agent = E3Agent()
+    seen = []
+    from repro.core.e3 import E3Subscription
+
+    agent.subscribe(
+        E3Subscription(callback=seen.append, period_slots=2, sources=("aerial",))
+    )
+    for slot in range(4):
+        agent.indicate(E3IndicationMessage(slot=slot, source="aerial", kpms={}))
+        agent.indicate(E3IndicationMessage(slot=slot, source="oai", kpms={}))
+    assert [m.slot for m in seen] == [0, 2]  # period + source filtering
+
+
+def test_multi_source_kpm_join():
+    """dApp waits for both layers' indications before deciding (cross-layer)."""
+    agent = E3Agent()
+    dapp = DApp(lambda x: int(x[0] + x[1] > 1), ["a", "b"], window_slots=1)
+    connect_dapp(agent, dapp)
+    agent.indicate(E3IndicationMessage(slot=0, source="aerial", kpms={"a": 1.0}))
+    assert len(dapp.decisions) == 0  # still waiting for 'b'
+    agent.indicate(E3IndicationMessage(slot=0, source="oai", kpms={"b": 1.0}))
+    assert len(dapp.decisions) == 1
+    assert dapp.decisions[0].mode == 1

@@ -1,0 +1,141 @@
+"""Serving: KV-cache consistency, generation, ARCHES-switched decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expert_bank import ExecutionMode
+from repro.models.config import get_config
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.switched import SERVING_KPMS, SwitchedDecodeConfig, SwitchedDecoder
+
+CFG = get_config("granite-20b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_prefill_decode_matches_forward(model_params):
+    """Teacher-forced decode through the KV cache == full forward logits."""
+    model, params = model_params
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, CFG.vocab)
+    full = model.forward(params, tokens).logits.astype(jnp.float32)
+
+    cache = model.init_cache(2, 32)
+    logits_p, cache = model.prefill(params, tokens[:, :6], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, 5]), rtol=2e-2, atol=2e-2
+    )
+    for t in range(6, 10):
+        logits_d, cache = model.decode_step(params, tokens[:, t : t + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full[:, t]), rtol=2e-2, atol=2e-2
+        )
+
+
+def test_ssm_prefill_decode_consistency():
+    """Same teacher-forcing check for the attention-free (Mamba2) family."""
+    cfg = get_config("mamba2-130m", reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    full = model.forward(params, tokens).logits.astype(jnp.float32)
+    cache = model.init_cache(1, 16)
+    logits_p, cache = model.prefill(params, tokens[:, :4], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, 3]), rtol=3e-2, atol=3e-2
+    )
+    for t in range(4, 8):
+        logits_d, cache = model.decode_step(params, tokens[:, t : t + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full[:, t]), rtol=3e-2, atol=3e-2
+        )
+
+
+def test_generate_deterministic(model_params):
+    model, params = model_params
+    eng = ServingEngine(model, params, max_seq=64)
+    prompts = jnp.ones((2, 8), jnp.int32)
+    a = eng.generate(prompts, 6).tokens
+    b = eng.generate(prompts, 6).tokens
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 6)
+    assert (a >= 0).all() and (a < CFG.vocab).all()
+
+
+def test_switched_decoder_window_equals_exact_when_window_covers(model_params):
+    """window >= context: both experts see the same KV -> identical logits."""
+    model, params = model_params
+    dec = SwitchedDecoder(model, SwitchedDecodeConfig(window=64))
+    cache = model.init_cache(2, 32)
+    _, cache = model.prefill(params, jnp.ones((2, 8), jnp.int32), cache)
+    tok = jnp.ones((2, 1), jnp.int32)
+    logits0, cache0, kpms0 = dec.step(0, params, tok, cache)
+    logits1, _, kpms1 = dec.step(1, params, tok, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits0), np.asarray(logits1), rtol=2e-2, atol=2e-2
+    )
+    assert kpms0["expert_agree"] > 0.99
+
+
+def test_switched_decoder_kpms(model_params):
+    model, params = model_params
+    dec = SwitchedDecoder(model, SwitchedDecodeConfig(window=4))
+    cache = model.init_cache(2, 32)
+    _, cache = model.prefill(params, jnp.ones((2, 8), jnp.int32), cache)
+    _, cache, kpms = dec.step(0, params, jnp.ones((2, 1), jnp.int32), cache)
+    for k in SERVING_KPMS:
+        assert k in kpms and np.isfinite(kpms[k])
+    assert 0.0 < kpms["cache_occupancy"] <= 1.0
+    assert kpms["exact_cost_bytes"] > kpms["windowed_cost_bytes"]
+
+
+def test_switched_decoder_selected_only(model_params):
+    model, params = model_params
+    dec = SwitchedDecoder(
+        model,
+        SwitchedDecodeConfig(window=64, execution_mode=ExecutionMode.SELECTED_ONLY),
+    )
+    cache = model.init_cache(2, 32)
+    _, cache = model.prefill(params, jnp.ones((2, 8), jnp.int32), cache)
+    logits, cache, kpms = dec.step(1, params, jnp.ones((2, 1), jnp.int32), cache)
+    assert logits.shape == (2, CFG.vocab)
+    assert kpms["expert_kl"] == 0.0  # no cross-expert observability
+
+
+def test_switched_decoder_rejects_local_global():
+    model = Model(get_config("gemma2-9b", reduced=True))
+    with pytest.raises(ValueError):
+        SwitchedDecoder(model)
+
+
+def test_switched_runtime_loop(model_params):
+    """Full ARCHES loop over decode slots: entropy-driven expert switching."""
+    from repro.core.dapp import DApp, connect_dapp
+    from repro.core.e3 import E3Agent
+    from repro.core.runtime import ArchesRuntime
+
+    model, params = model_params
+    dec = SwitchedDecoder(model, SwitchedDecodeConfig(window=16))
+    agent = E3Agent()
+    # policy: prefer exact attention (mode 0) when experts disagree
+    dapp = DApp(
+        lambda x: 0 if x[0] > 1e-4 else 1, ["expert_kl"], window_slots=1
+    )
+    connect_dapp(agent, dapp)
+    runtime = ArchesRuntime(
+        dec.make_slot_fn(params), agent, default_mode=1, fail_safe_mode=1,
+        ttl_slots=8, keep_outputs=True,
+    )
+    cache = model.init_cache(2, 64)
+    _, cache = model.prefill(params, jnp.ones((2, 8), jnp.int32), cache)
+    hist = runtime.run(range(6), carry=(jnp.ones((2, 1), jnp.int32), cache))
+    assert len(hist.records) == 6
+    assert hist.modes[0] == 1  # fail-safe default on slot 0
+    for r in hist.records:
+        assert "entropy" in r.kpms

@@ -1,0 +1,116 @@
+"""Slot-boundary timing semantics + fail-safe defaults (paper 2, 3.3).
+
+These are the paper's hard invariants:
+  * a decision committed during slot n is visible at slot n+1, never slot n;
+  * mid-slot updates are deferred;
+  * the register decays to the conventional expert after ttl slots without a
+    valid decision (dApp failure);
+  * the register is jit/scan-compatible (it rides the step carry).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.switch import (
+    SlotSwitchState,
+    commit_decision,
+    init_switch_state,
+    slot_boundary,
+)
+
+TTL = 4
+FS = 1  # fail-safe = conventional expert
+
+
+def _adv(s):
+    return slot_boundary(s, fail_safe_mode=FS, ttl_slots=TTL)
+
+
+def test_decision_visible_next_slot_only():
+    s = init_switch_state(1)
+    assert int(s.active_mode) == 1
+    s = commit_decision(s, 0)  # during slot n
+    assert int(s.active_mode) == 1  # still slot n: unchanged
+    s = _adv(s)  # boundary -> slot n+1
+    assert int(s.active_mode) == 0
+
+
+def test_mid_slot_updates_deferred_last_wins():
+    s = init_switch_state(1)
+    s = commit_decision(s, 0)
+    s = commit_decision(s, 1)
+    s = commit_decision(s, 0)  # several mid-slot commits: last wins at boundary
+    assert int(s.active_mode) == 1
+    s = _adv(s)
+    assert int(s.active_mode) == 0
+
+
+def test_fail_safe_decay_after_ttl():
+    s = init_switch_state(1)
+    s = commit_decision(s, 0)
+    s = _adv(s)
+    assert int(s.active_mode) == 0
+    # dApp goes silent: decay to conventional after TTL slots
+    for i in range(TTL):
+        s = _adv(s)
+        expect = 0 if i < TTL - 1 else FS
+        assert int(s.active_mode) == expect, f"slot {i}: {int(s.active_mode)}"
+    # stays at fail-safe indefinitely
+    s = _adv(s)
+    assert int(s.active_mode) == FS
+
+
+def test_recovery_after_fail_safe():
+    s = init_switch_state(1)
+    for _ in range(TTL + 2):
+        s = _adv(s)
+    assert int(s.active_mode) == FS
+    s = commit_decision(s, 0)  # dApp recovers
+    s = _adv(s)
+    assert int(s.active_mode) == 0
+
+
+def test_invalid_commit_ignored():
+    s = init_switch_state(1)
+    s = commit_decision(s, 0, valid=False)
+    s = _adv(s)
+    assert int(s.active_mode) == 1
+    assert int(s.slots_since_decision) == 1  # staleness not reset by invalid
+
+
+def test_n_switches_counts_transitions():
+    s = init_switch_state(1)
+    s = commit_decision(s, 0)
+    s = _adv(s)  # 1 -> 0
+    s = commit_decision(s, 0)
+    s = _adv(s)  # 0 -> 0 (no switch)
+    s = commit_decision(s, 1)
+    s = _adv(s)  # 0 -> 1
+    assert int(s.n_switches) == 2
+    assert int(s.slot_index) == 3
+
+
+def test_register_inside_scan():
+    """The register must run inside lax.scan (it rides the jitted step)."""
+
+    def body(s, decision):
+        s = commit_decision(s, decision["mode"], decision["valid"])
+        s = _adv(s)
+        return s, s.active_mode
+
+    decisions = {
+        "mode": jnp.asarray([0, 0, 1, 0], jnp.int32),
+        "valid": jnp.asarray([True, False, True, True]),
+    }
+    final, actives = jax.lax.scan(jax.jit(body), init_switch_state(1), decisions)
+    np.testing.assert_array_equal(np.asarray(actives), [0, 0, 1, 0])
+    assert int(final.n_switches) == 3
+
+
+def test_default_mode_is_conventional_before_first_decision():
+    """Fail-safe default: mode starts at the conventional expert (paper 3.2)."""
+    s = init_switch_state(1)
+    for _ in range(3):
+        s = _adv(s)
+        assert int(s.active_mode) == 1
