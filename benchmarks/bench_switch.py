@@ -46,6 +46,15 @@ def run() -> dict:
     t_noop = _time(sw, jnp.int32(0))
     t_copy = _time(sw, jnp.int32(1))
 
+    # batched multi-UE switch: one kernel call routes 16 UEs independently
+    n_ues = 16
+    hb_ai = jnp.broadcast_to(h_ai[None], (n_ues,) + shape)
+    hb_mmse = jnp.broadcast_to(h_mmse[None], (n_ues,) + shape)
+    swb = jax.jit(lambda m: switch_select(m, [hb_ai, hb_mmse]))
+    t_b_noop = _time(swb, jnp.zeros((n_ues,), jnp.int32))
+    mixed = (jnp.arange(n_ues) % 2).astype(jnp.int32)
+    t_b_mixed = _time(swb, mixed)
+
     # decision tree (trained on synthetic data, depth 2 x 10 KPMs, paper cfg)
     rng = np.random.default_rng(0)
     X = rng.normal(size=(512, len(SELECTED_KPMS))).astype(np.float32)
@@ -72,6 +81,10 @@ def run() -> dict:
     print(fmt_row("component", "this host (us)", "paper GH200 (us)"))
     print(fmt_row("switch kernel noop(AI)", f"{t_noop:.1f}", "3.36"))
     print(fmt_row("switch kernel copy(MMSE)", f"{t_copy:.1f}", "4.89"))
+    print(fmt_row(f"batched x{n_ues} noop", f"{t_b_noop:.1f}",
+                  f"({t_b_noop / n_ues:.2f}/UE)"))
+    print(fmt_row(f"batched x{n_ues} mixed", f"{t_b_mixed:.1f}",
+                  f"({t_b_mixed / n_ues:.2f}/UE)"))
     print(fmt_row("decision tree (single)", f"{t_tree:.2f}", "0.41"))
     print(fmt_row("decision tree (batched)", f"{t_tree_batch:.4f}", "-"))
     print(fmt_row("MMSE expert", f"{t_mmse:.1f}", "5.04"))
@@ -87,6 +100,7 @@ def run() -> dict:
 
     return {
         "t_noop_us": t_noop, "t_copy_us": t_copy,
+        "t_batched_noop_us": t_b_noop, "t_batched_mixed_us": t_b_mixed,
         "t_tree_us": t_tree, "t_tree_batch_us": t_tree_batch,
         "t_mmse_us": t_mmse, "t_ai_us": t_ai,
         "ai_mmse_latency_ratio": t_ai / t_mmse,

@@ -1,11 +1,16 @@
 """Benchmark driver: one section per paper table/figure + roofline.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
+
+``--smoke`` is the CI fast path: tiny expert training, two sections only
+(switch-kernel runtimes + batched multi-UE engine), exits non-zero on any
+failure.  Finishes in minutes where the full sweep takes an hour.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -14,9 +19,16 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="smaller sweeps (CI smoke)")
+                    help="smaller sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI smoke check (switch + batched engine)")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        # must precede the benchmarks.common import (module-level env reads)
+        os.environ.setdefault("ARCHES_BENCH_TRAIN_STEPS", "40")
+        os.environ.setdefault("ARCHES_BENCH_SLOTS", "40")
 
     from benchmarks import (
         bench_control_loop,
@@ -29,20 +41,31 @@ def main() -> None:
         roofline,
     )
 
-    sections = [
-        ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
-        ("6.1     control-loop latency", None, {}),  # uses Fig. 8 stats
-        ("Fig. 4+5 policy-design methodology", bench_methodology.run,
-         {"n_trials": 2 if args.fast else 4,
-          "rho_step": 0.5 if args.fast else 0.2}),
-        ("Table 1 decision-tree performance", bench_policy.run, {}),
-        ("Fig. 9  throughput time series", bench_timeseries.run,
-         {"n_phase": 10 if args.fast else None}),
-        ("Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
-        ("Fig. 11 GPU resources proxy", bench_resources.run, {}),
-        ("Roofline (from dry-run)", roofline.run,
-         {"path": args.dryrun_json}),
-    ]
+    if args.smoke:
+        sections = [
+            ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
+            ("Batched multi-UE engine (smoke)", bench_timeseries.run_batched,
+             {"n_slots": 24, "n_ues": 4, "host_probe_slots": 6,
+              "check_identity": False}),
+        ]
+    else:
+        sections = [
+            ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
+            ("6.1     control-loop latency", None, {}),  # uses Fig. 8 stats
+            ("Fig. 4+5 policy-design methodology", bench_methodology.run,
+             {"n_trials": 2 if args.fast else 4,
+              "rho_step": 0.5 if args.fast else 0.2}),
+            ("Table 1 decision-tree performance", bench_policy.run, {}),
+            ("Fig. 9  throughput time series", bench_timeseries.run,
+             {"n_phase": 10 if args.fast else None}),
+            ("Batched multi-UE engine", bench_timeseries.run_batched,
+             {"n_slots": 60 if args.fast else 100,
+              "n_ues": 8 if args.fast else 16}),
+            ("Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
+            ("Fig. 11 GPU resources proxy", bench_resources.run, {}),
+            ("Roofline (from dry-run)", roofline.run,
+             {"path": args.dryrun_json}),
+        ]
 
     results, failures = {}, []
     switch_stats = None

@@ -5,43 +5,93 @@ decision-tree switching policy from labelled telemetry, then runs the
 paper's Fig. 9 scenario (good -> poor -> good) under the full control loop
 (E3 + dApp + slot-boundary switch register).
 
-    PYTHONPATH=src python examples/quickstart.py
+With ``--n-ues N`` (N > 1) the expert profiling runs on the batched
+multi-UE slot engine — one compiled ``lax.scan`` per expert instead of
+O(slots x UEs) host dispatches — and a per-UE mode-vector demo slot is
+shown before the live single-UE control loop.
+
+    PYTHONPATH=src python examples/quickstart.py [--n-ues 8]
 """
 
+import argparse
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dapp import DApp, connect_dapp
 from repro.core.e3 import E3Agent
 from repro.core.policy import DecisionTreePolicy, fit_decision_tree
 from repro.core.runtime import ArchesRuntime
-from repro.core.telemetry import SELECTED_KPMS
+from repro.core.telemetry import SELECTED_KPMS, trajectory_kpm_matrix
 from repro.phy.ai_estimator import AiEstimatorConfig, init_params
 from repro.phy.nr import SlotConfig
-from repro.phy.pipeline import LinkState, PuschPipeline
+from repro.phy.pipeline import BatchedPuschPipeline, LinkState, PuschPipeline
 from repro.phy.scenario import good_poor_good_schedule
 
 N_PHASE = 10
 
 
-def main():
-    cfg = SlotConfig(n_prb=24)
-    net = AiEstimatorConfig(channels=8, n_res_blocks=1)
-    pipe = PuschPipeline(cfg, init_params(jax.random.PRNGKey(0), cfg, net), net=net)
-    schedule = good_poor_good_schedule(poor_start=N_PHASE, poor_end=2 * N_PHASE)
-
-    # -- 1. profile both experts over labelled slots (paper 5.3) ------------
-    print("== profiling experts for policy training ==")
+def profile_host_loop(pipe, schedule, n_slots):
+    """Seed-style per-slot profiling (one UE, Python loop)."""
     X, y = [], []
     for mode in (0, 1):
         link = LinkState()
-        for slot in range(3 * N_PHASE):
+        for slot in range(n_slots):
             ch = schedule(slot)
             link, out, kpms = pipe.run_slot(jax.random.PRNGKey(slot), mode, link, ch)
             flat = {**kpms["aerial"], **kpms["oai"]}
             X.append([flat[k] for k in SELECTED_KPMS])
             y.append(0 if ch.interference else 1)  # interference -> AI
-    tree = fit_decision_tree(np.asarray(X, np.float32), np.asarray(y), depth=2)
+    return np.asarray(X, np.float32), np.asarray(y)
+
+
+def profile_batched(engine, schedule, n_slots, n_ues):
+    """Batched profiling: every (slot, UE) sample from one scan per expert."""
+    X, y = [], []
+    labels = np.asarray(
+        [0 if schedule(s).interference else 1 for s in range(n_slots)]
+    )
+    for mode in (0, 1):
+        _, traj = engine.run(schedule, mode, n_slots=n_slots, n_ues=n_ues)
+        feats = np.asarray(trajectory_kpm_matrix(traj["kpms"]))  # (S, U, K)
+        X.append(feats.reshape(-1, feats.shape[-1]))
+        y.append(np.repeat(labels, n_ues))
+    return np.concatenate(X).astype(np.float32), np.concatenate(y)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-ues", type=int, default=1,
+                    help="profile on the batched multi-UE engine (N > 1)")
+    args = ap.parse_args()
+
+    cfg = SlotConfig(n_prb=24)
+    net = AiEstimatorConfig(channels=8, n_res_blocks=1)
+    params = init_params(jax.random.PRNGKey(0), cfg, net)
+    pipe = PuschPipeline(cfg, params, net=net)
+    schedule = good_poor_good_schedule(poor_start=N_PHASE, poor_end=2 * N_PHASE)
+    n_slots = 3 * N_PHASE
+
+    # -- 1. profile both experts over labelled slots (paper 5.3) ------------
+    if args.n_ues > 1:
+        print(f"== profiling experts on the batched engine "
+              f"({args.n_ues} UEs x {n_slots} slots per expert) ==")
+        engine = BatchedPuschPipeline(cfg, params, net=net)
+        X, y = profile_batched(engine, schedule, n_slots, args.n_ues)
+
+        # per-UE mode vector demo: odd UEs on MMSE, even UEs on AI, one slot
+        modes = (jnp.arange(args.n_ues) % 2).astype(jnp.int32)
+        _, demo = engine.run(schedule, modes, n_slots=1, n_ues=args.n_ues)
+        sinr = np.asarray(demo["kpms"]["aerial"]["sinr"])[0]
+        print("per-UE experts in one slot:",
+              " ".join(f"ue{u}={'AI' if int(modes[u]) == 0 else 'MMSE'}"
+                       f"({sinr[u]:.1f}dB)" for u in range(min(args.n_ues, 6))))
+    else:
+        print("== profiling experts for policy training ==")
+        X, y = profile_host_loop(pipe, schedule, n_slots)
+
+    tree = fit_decision_tree(X, y, depth=2)
     policy = DecisionTreePolicy(tree, SELECTED_KPMS)
     top = np.argsort(-tree.importances)[:2]
     print("policy features:",
@@ -57,7 +107,7 @@ def main():
         pipe.make_slot_fn(schedule), agent,
         default_mode=1, fail_safe_mode=1, ttl_slots=8, keep_outputs=True,
     )
-    hist = runtime.run(range(3 * N_PHASE))
+    hist = runtime.run(range(n_slots))
 
     names = {0: "AI  ", 1: "MMSE"}
     for r in hist.records:

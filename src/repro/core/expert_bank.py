@@ -89,6 +89,13 @@ class ExpertBank:
         return tuple(e.name for e in self.experts)
 
     def __call__(self, mode: jax.Array, *inputs) -> BankOutput:
+        """Run the bank.
+
+        ``mode`` is an int32 scalar, or an ``(n_ues,)`` vector for the
+        batched multi-UE engine — in which case every expert output must
+        carry a leading UE axis and UE ``u`` receives expert ``mode[u]``'s
+        output (different UEs can run different experts in the same slot).
+        """
         mode = jnp.asarray(mode, jnp.int32)
         if self.execution_mode is ExecutionMode.CONCURRENT:
             return self._run_concurrent(mode, *inputs)
@@ -98,12 +105,30 @@ class ExpertBank:
         outputs = tuple(e.fn(e.params, *inputs) for e in self.experts)
         if self.use_pallas_switch:
             selected = switch_select(mode, list(outputs))
+        elif mode.ndim == 1:  # batched oracle path
+            from repro.kernels.switch_select.ref import (
+                switch_select_batched_tree_ref,
+            )
+
+            selected = switch_select_batched_tree_ref(mode, list(outputs))
         else:  # oracle path (used by the property tests)
             stacked = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outputs)
             selected = jax.tree.map(lambda s: jnp.take(s, mode, axis=0), stacked)
         return BankOutput(selected=selected, all_outputs=outputs, mode=mode)
 
     def _run_selected(self, mode: jax.Array, *inputs) -> BankOutput:
+        if mode.ndim == 1:
+            # Per-UE modes make "run only the selected expert" ill-posed:
+            # any expert some UE selects must execute.  Degenerate to the
+            # concurrent cost envelope and gather per UE (predication), but
+            # keep the SELECTED_ONLY interface (no all_outputs exposure).
+            from repro.kernels.switch_select.ref import (
+                switch_select_batched_tree_ref,
+            )
+
+            outputs = [e.fn(e.params, *inputs) for e in self.experts]
+            selected = switch_select_batched_tree_ref(mode, outputs)
+            return BankOutput(selected=selected, all_outputs=None, mode=mode)
         branches = [
             (lambda e: (lambda *xs: e.fn(e.params, *xs)))(e) for e in self.experts
         ]

@@ -51,6 +51,89 @@ class RunHistory:
         return np.asarray([r.kpms.get(name, np.nan) for r in self.records])
 
 
+@dataclasses.dataclass
+class BatchedRunHistory:
+    """Trajectory of a scan-compiled multi-UE campaign.
+
+    Every array carries a leading ``(n_slots, n_ues)`` shape; KPM names are
+    flattened across sources exactly like ``SlotRecord.kpms``.  The batched
+    engine produces this in one device round-trip instead of one per slot.
+    """
+
+    modes: np.ndarray  # (S, U) int32 — per-UE active mode each slot
+    kpms: dict[str, np.ndarray]  # name -> (S, U)
+    outputs: dict[str, np.ndarray]  # tb_ok / mcs / tbs / phy_bits_per_s
+
+    @classmethod
+    def from_trajectory(cls, modes, traj) -> "BatchedRunHistory":
+        """Build from ``BatchedPuschPipeline.run`` output."""
+        from repro.core.telemetry import flatten_kpm_sources
+
+        kpms = {
+            k: np.asarray(v) for k, v in flatten_kpm_sources(traj["kpms"]).items()
+        }
+        outputs = {
+            k: np.asarray(v) for k, v in traj.items() if k != "kpms"
+        }
+        return cls(modes=np.asarray(modes), kpms=kpms, outputs=outputs)
+
+    @property
+    def n_slots(self) -> int:
+        return self.modes.shape[0]
+
+    @property
+    def n_ues(self) -> int:
+        return self.modes.shape[1]
+
+    def modes_for(self, ue: int) -> np.ndarray:
+        return self.modes[:, ue]
+
+    def kpm_series(self, name: str, ue: int = 0) -> np.ndarray:
+        return self.kpms[name][:, ue]
+
+    def cell_kpm_series(self, name: str) -> np.ndarray:
+        """Cell-level aggregate: per-slot mean over UEs."""
+        return self.kpms[name].mean(axis=1)
+
+    def per_ue(self, ue: int) -> list[SlotRecord]:
+        """One UE's trajectory as host-loop-style slot records."""
+        return [
+            SlotRecord(
+                slot=s,
+                active_mode=int(self.modes[s, ue]),
+                kpms={k: float(v[s, ue]) for k, v in self.kpms.items()},
+                output={k: v[s, ue] for k, v in self.outputs.items()},
+            )
+            for s in range(self.n_slots)
+        ]
+
+
+def replay_batched_telemetry(agent: E3Agent, traj, *, n_slots: int | None = None) -> int:
+    """Replay a batched trajectory's KPMs as per-slot E3 indications.
+
+    The scan-compiled engine produces the whole campaign in one device
+    round-trip, so telemetry indication happens post-run: each slot's KPMs
+    are aggregated across UEs (cell-level mean, matching the per-cell KPM
+    framing of the paper's Data Lake queries) and pushed through the same
+    E3 path the host loop uses — dApp subscriptions, windowing and policy
+    tooling consume batched campaigns unchanged.
+
+    Returns the number of slots replayed.
+    """
+    # device->host transfer once per array, not once per (slot, array)
+    host = {
+        source: {k: np.asarray(v) for k, v in kpms.items()}
+        for source, kpms in traj["kpms"].items()
+    }
+    first = next(iter(next(iter(host.values())).values()))
+    n = int(first.shape[0]) if n_slots is None else n_slots
+    for s in range(n):
+        for source, kpms in host.items():
+            vals = {k: float(np.mean(v[s])) for k, v in kpms.items()}
+            agent.indicate(E3IndicationMessage(slot=s, source=source, kpms=vals))
+    return n
+
+
 class ArchesRuntime:
     """Host-side slot loop wiring pipeline, E3 agent and switch register."""
 

@@ -68,6 +68,36 @@ def kpm_vector(kpms: Mapping[str, jax.Array | float], names: Sequence[str]):
     return jnp.stack([jnp.asarray(kpms[n], jnp.float32) for n in names])
 
 
+def flatten_kpm_sources(
+    kpms_by_source: Mapping[str, Mapping[str, jax.Array]],
+) -> dict[str, jax.Array]:
+    """Merge ``{source: {kpm: value}}`` into one flat ``{kpm: value}`` map.
+
+    Mirrors what ``ArchesRuntime`` does per slot, for whole batched
+    trajectories at once (values may carry any leading shape).
+    """
+    flat: dict[str, jax.Array] = {}
+    for kpms in kpms_by_source.values():
+        flat.update(kpms)
+    return flat
+
+
+def trajectory_kpm_matrix(
+    kpms_by_source: Mapping[str, Mapping[str, jax.Array]],
+    names: Sequence[str] = SELECTED_KPMS,
+) -> jax.Array:
+    """Stack a batched trajectory into a policy feature tensor.
+
+    Input values are ``(n_slots, n_ues)`` (the batched engine's KPM leaves);
+    output is ``(n_slots, n_ues, len(names))`` float32 — ready to reshape
+    into per-sample rows for decision-tree fitting or batched inference.
+    """
+    flat = flatten_kpm_sources(kpms_by_source)
+    return jnp.stack(
+        [jnp.asarray(flat[n], jnp.float32) for n in names], axis=-1
+    )
+
+
 # -- functional ring buffer ---------------------------------------------------
 
 

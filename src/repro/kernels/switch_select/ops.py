@@ -75,13 +75,64 @@ def switch_select_leaf(
     return undo(out2.reshape(-1)[:n])
 
 
+def switch_select_batched_leaf(
+    modes: jax.Array,
+    alternatives: Sequence[jax.Array],
+    designated: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-UE switch of one leaf with a leading UE axis.
+
+    ``modes`` is ``(n_ues,)``; every leaf is ``(n_ues, ...)`` and UE ``u``'s
+    slice keeps the designated output (``modes[u]==0``) or takes alternative
+    ``modes[u]-1``.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    n_ues = designated.shape[0]
+    des_view, undo = _to_real_view(designated)
+    alt_views = [_to_real_view(a)[0] for a in alternatives]
+
+    n = des_view.reshape(n_ues, -1).shape[1]
+    # per-UE payloads are typically far smaller than the scalar-path pad
+    # quantum; pad rows to the float32 sublane minimum (8) for small leaves
+    # and to the full block height for large ones so the tile always divides.
+    cols = _PAD_BLOCK_COLS
+    pad = (-n) % cols
+    rows = (n + pad) // cols
+    row_quantum = 8 if rows <= _PAD_BLOCK_ROWS else _PAD_BLOCK_ROWS
+    row_pad = (-rows) % row_quantum
+    rows = rows + row_pad
+
+    def prep(v):
+        f = v.reshape(n_ues, -1)
+        f = jnp.pad(f, ((0, 0), (0, pad + row_pad * cols)))
+        return f.reshape(n_ues, rows, cols)
+
+    des2 = prep(des_view)
+    alt2 = jnp.stack([prep(a) for a in alt_views], axis=0)
+    out2 = _k.switch_select_batched_2d(
+        modes,
+        alt2,
+        des2,
+        block_rows=min(_PAD_BLOCK_ROWS, rows),
+        block_cols=cols,
+        interpret=interpret,
+    )
+    return undo(out2.reshape(n_ues, -1)[:, :n])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def switch_select(mode, outputs: Sequence, designated_idx: int = 0, *, interpret=None):
     """Switch over a list of per-expert pytrees (paper's N-expert bank).
 
     Args:
-      mode: int32 scalar; ``0`` selects ``outputs[designated_idx]`` (no-op
-        path), ``k>0`` selects the k-th non-designated expert in bank order.
+      mode: int32 scalar (``0`` selects ``outputs[designated_idx]`` — no-op
+        path; ``k>0`` selects the k-th non-designated expert in bank order)
+        OR an ``(n_ues,)`` int32 vector for the batched multi-UE engine, in
+        which case every leaf must carry a leading UE axis and UE ``u``
+        independently follows ``mode[u]``.
       outputs: list of structurally identical pytrees, one per expert, with
         the designated expert first (``designated_idx`` must be 0 — the bank
         reorders before calling).
@@ -91,7 +142,16 @@ def switch_select(mode, outputs: Sequence, designated_idx: int = 0, *, interpret
     """
     if designated_idx != 0:
         raise ValueError("bank must place the designated expert first")
+    mode = jnp.asarray(mode, jnp.int32)
     designated, *alternatives = outputs
+    if mode.ndim == 1:
+        return jax.tree.map(
+            lambda d, *alts: switch_select_batched_leaf(
+                mode, alts, d, interpret=interpret
+            ),
+            designated,
+            *alternatives,
+        )
     return jax.tree.map(
         lambda d, *alts: switch_select_leaf(mode, alts, d, interpret=interpret),
         designated,

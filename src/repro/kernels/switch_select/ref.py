@@ -27,3 +27,31 @@ def switch_select_tree_ref(mode: jax.Array, outputs: list) -> jax.Array:
         lambda *leaves: jnp.take(jnp.stack(leaves, axis=0), mode, axis=0),
         *outputs,
     )
+
+
+def switch_select_batched_ref(
+    modes: jax.Array, alternatives: jax.Array, designated: jax.Array
+) -> jax.Array:
+    """Per-UE reference: UE ``u``'s buffer holds expert ``modes[u]``'s output.
+
+    ``alternatives`` is ``(n_alt, n_ues, ...)``, ``designated`` ``(n_ues, ...)``.
+    """
+    modes = jnp.asarray(modes, jnp.int32)
+    stacked = jnp.concatenate([designated[None], alternatives], axis=0)
+    return jnp.take_along_axis(
+        stacked,
+        modes.reshape((1, -1) + (1,) * (designated.ndim - 1)),
+        axis=0,
+    )[0]
+
+
+def switch_select_batched_tree_ref(modes: jax.Array, outputs: list):
+    """Per-UE reference over per-expert pytrees with a leading UE axis."""
+    modes = jnp.asarray(modes, jnp.int32)
+
+    def leaf(*leaves):
+        stacked = jnp.stack(leaves, axis=0)  # (n_experts, n_ues, ...)
+        idx = modes.reshape((1, -1) + (1,) * (stacked.ndim - 2))
+        return jnp.take_along_axis(stacked, idx, axis=0)[0]
+
+    return jax.tree.map(leaf, *outputs)

@@ -134,3 +134,103 @@ def switch_select_2d(
         input_output_aliases={2: 0},  # designated buffer -> output (zero-gap)
         interpret=interpret,
     )(mode, alternatives, designated)
+
+
+# -- batched multi-UE variant -------------------------------------------------
+
+
+def _switch_kernel_batched(modes_ref, alt_ref, des_ref, out_ref):
+    """Per-UE copy-or-refresh: grid dim 0 walks UEs, dims 1-2 walk tiles."""
+    u = pl.program_id(0)
+    mode = modes_ref[u]
+
+    @pl.when(mode == 0)
+    def _noop_path():
+        out_ref[...] = des_ref[...]
+
+    @pl.when(mode != 0)
+    def _copy_path():
+        out_ref[...] = alt_ref[0]
+
+
+def switch_select_batched_2d(
+    modes: jax.Array,
+    alternatives: jax.Array,
+    designated: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-UE switch: UE ``u`` keeps or copies according to ``modes[u]``.
+
+    The multi-UE slot engine runs different experts for different UEs in the
+    same slot; this kernel extends the scalar-mode contract with a leading UE
+    axis.  Grid dimension 0 walks UEs, so each UE independently takes the
+    no-op path (``modes[u] == 0``: only tile ``(u, 0, 0)`` is round-tripped)
+    or the coalesced-copy path (``modes[u] == k > 0``: expert ``k-1``'s
+    slice is copied tile-by-tile into UE ``u``'s designated buffer).
+
+    Args:
+      modes: ``(n_ues,)`` int32 per-UE mode vector.
+      alternatives: ``(n_alt, n_ues, rows, cols)`` stacked non-designated
+        expert outputs.
+      designated: ``(n_ues, rows, cols)`` designated buffers (aliased to the
+        output).
+
+    Returns:
+      ``(n_ues, rows, cols)`` array aliased onto ``designated``.
+    """
+    n_ues, rows, cols = designated.shape
+    if alternatives.shape[1:] != (n_ues, rows, cols):
+        raise ValueError(
+            f"alternatives {alternatives.shape} vs designated {designated.shape}"
+        )
+    if modes.shape != (n_ues,):
+        raise ValueError(f"modes {modes.shape} vs n_ues {n_ues}")
+    block_rows = min(block_rows, rows)
+    block_cols = min(block_cols, cols)
+    if rows % block_rows or cols % block_cols:
+        raise ValueError(
+            f"shape ({rows},{cols}) not divisible by block "
+            f"({block_rows},{block_cols}); use ops.switch_select for padding"
+        )
+
+    modes = jnp.asarray(modes, jnp.int32)
+    grid = (n_ues, rows // block_rows, cols // block_cols)
+
+    def _sel(modes_ref, u, i, j):
+        z = jnp.zeros_like(i)
+        keep = modes_ref[u] == 0
+        return jnp.where(keep, z, i), jnp.where(keep, z, j)
+
+    def alt_index(u, i, j, modes_ref):
+        k = jnp.maximum(modes_ref[u] - 1, 0)
+        bi, bj = _sel(modes_ref, u, i, j)
+        return (k, u, bi, bj)
+
+    def des_index(u, i, j, modes_ref):
+        del i, j, modes_ref
+        return (u, 0, 0)
+
+    def out_index(u, i, j, modes_ref):
+        bi, bj = _sel(modes_ref, u, i, j)
+        return (u, bi, bj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_rows, block_cols), alt_index),
+            pl.BlockSpec((1, block_rows, block_cols), des_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, block_cols), out_index),
+    )
+
+    return pl.pallas_call(
+        _switch_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_ues, rows, cols), designated.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(modes, alternatives, designated)

@@ -55,7 +55,14 @@ class AiEstimatorConfig:
 
 
 def _conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """NCHW 'same' conv. x (C,H,W), w (O,I,kh,kw), b (O,)."""
+    """NCHW 'same' conv. x (C,H,W), w (O,I,kh,kw), b (O,).
+
+    Uses the native conv primitive: fastest for the *eager* single-image
+    paths (host pipeline, training).  Do NOT call this inside a
+    ``lax.scan`` body — XLA:CPU's fast conv thunk does not run inside loop
+    bodies (~40x fallback); the batched scan engine uses the matmul-based
+    ``_forward_batched`` instead.
+    """
     y = jax.lax.conv_general_dilated(
         x[None],
         w,
@@ -100,15 +107,16 @@ def init_params(
 
 
 def _baseline_interp(x: jax.Array) -> jax.Array:
-    """Naive comb-2 -> full-band interpolation, (2, Np, S) -> (2, 2*Np, S).
+    """Naive comb-2 -> full-band interpolation, (..., Np, S) -> (..., 2*Np, S).
 
     Even output subcarriers take the pilot value; odd ones the midpoint of
-    the two neighbouring pilots (edge clamped).
+    the two neighbouring pilots (edge clamped).  Leading dims (channels,
+    batch) pass through.
     """
-    nxt = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+    nxt = jnp.concatenate([x[..., 1:, :], x[..., -1:, :]], axis=-2)
     mid = 0.5 * (x + nxt)
-    out = jnp.stack([x, mid], axis=2)  # (2, Np, 2, S)
-    return out.reshape(x.shape[0], 2 * x.shape[1], x.shape[2])
+    out = jnp.stack([x, mid], axis=-2)  # (..., Np, 2, S)
+    return out.reshape(*x.shape[:-2], 2 * x.shape[-2], x.shape[-1])
 
 
 def _forward_one_antenna(params: dict[str, Any], x: jax.Array) -> jax.Array:
@@ -138,6 +146,141 @@ def ai_estimate_from_ls(params: dict[str, Any], h_ls: jax.Array) -> jax.Array:
     out = jax.vmap(_forward_one_antenna, in_axes=(None, 0))(params, x)
     h = (out[:, 0] + 1j * out[:, 1]).astype(jnp.complex64)  # (ant, n_sc, sym)
     return h[:, None]  # (ant, 1, n_sc, dmrs_sym)
+
+
+# -- batched (multi-UE) forward -----------------------------------------------
+#
+# The batched slot engine evaluates the estimator for n_ues * n_ant images
+# per slot inside a ``lax.scan`` body, where XLA:CPU's conv thunk doesn't
+# run (~40x fallback) and vmapped small matmuls serialize.  The forward is
+# therefore re-expressed as one large matmul per layer:
+#
+# * activations live in a channel-leading ``(C, W, B, H)`` layout, so the
+#   flattening to matmul operands is reshape-only (no transposes between
+#   layers);
+# * the symbol axis ``W`` (= n_dmrs_sym, tiny) is folded into the mixing
+#   matrix: a kh x kw conv becomes a kh-tap 1-D conv over frequency with
+#   ``(O*W, C*W)`` tap matrices whose structure bakes in the W-direction
+#   'SAME' padding.  Per layer that is kh shift-copies of the activation
+#   (instead of kh*kw) and a single ``(O*W, kh*C*W) x (kh*C*W, B*H)``
+#   contraction — identical math to the eager conv, BLAS/MXU-friendly
+#   everywhere.
+
+
+def _wfold_matrices(w: jax.Array, width: int) -> jax.Array:
+    """Fold the W axis of a conv kernel into tap-mixing matrices.
+
+    ``w`` (O, C, kh, kw) -> (kh, O*width, C*width) where entry
+    ``[d, o*width + wo, c*width + wi] = w[o, c, d, wi - wo + pad]``
+    (zero outside the kernel — the W-direction 'SAME' padding).
+    """
+    o, c, kh, kw = w.shape
+    pad = (kw - 1) // 2
+    m = jnp.zeros((kh, o * width, c * width), w.dtype)
+    for wo in range(width):
+        for wi in range(width):
+            dj = wi - wo + pad
+            if 0 <= dj < kw:
+                m = m.at[:, wo::width, wi::width].set(
+                    jnp.transpose(w[:, :, :, dj], (2, 0, 1))
+                )
+    return m
+
+
+def fold_ai_params(params: dict[str, Any], width: int) -> dict[str, Any]:
+    """Pre-fold every conv kernel for width-``width`` images.
+
+    Each layer becomes a single ``(O*width, kh*C*width)`` GEMM operand (tap
+    matrices flattened tap-major to match the tap stacking in
+    ``_conv_wfold``).  Done once per engine — inside the scan body only the
+    GEMMs remain.
+    """
+
+    def fold(w):
+        m = _wfold_matrices(w, width)  # (kh, O*W, C*W)
+        kh = m.shape[0]
+        return jnp.transpose(m, (1, 0, 2)).reshape(m.shape[1], kh * m.shape[2])
+
+    return {
+        "kh": int(params["stem_w"].shape[2]),
+        "width": width,
+        "stem_w": fold(params["stem_w"]),
+        "stem_b": params["stem_b"],
+        "up_w": fold(params["up_w"]),
+        "up_b": params["up_b"],
+        "head_w": fold(params["head_w"]),
+        "head_b": params["head_b"],
+        "res": [
+            {
+                "w1": fold(blk["w1"]),
+                "b1": blk["b1"],
+                "w2": fold(blk["w2"]),
+                "b2": blk["b2"],
+            }
+            for blk in params["res"]
+        ],
+    }
+
+
+def _conv_wfold(x: jax.Array, m2: jax.Array, b: jax.Array, kh: int) -> jax.Array:
+    """'SAME' conv on channel-leading activations via one GEMM.
+
+    ``x`` (C, W, B, H); ``m2`` (O*W, kh*C*W) pre-folded tap matrices.
+    """
+    c, width, bsz, h = x.shape
+    o = m2.shape[0] // width
+    pad = (kh - 1) // 2
+    xp = jnp.pad(
+        x.reshape(c * width, bsz, h), ((0, 0), (0, 0), (pad, kh - 1 - pad))
+    )
+    taps = jnp.stack(
+        [xp[:, :, d : d + h] for d in range(kh)], axis=0
+    )  # (kh, C*W, B, H)
+    y = m2 @ taps.reshape(kh * c * width, bsz * h)  # (O*W, B*H)
+    return y.reshape(o, width, bsz, h) + b[:, None, None, None]
+
+
+def _forward_batched(folded: dict[str, Any], x: jax.Array) -> jax.Array:
+    """(2, W, B, n_pilot_sc) -> (2, W, B, n_sc), channel-leading layout."""
+    kh = folded["kh"]
+    # baseline comb-2 interpolation along the (trailing) frequency axis
+    nxt = jnp.concatenate([x[..., 1:], x[..., -1:]], axis=-1)
+    base = jnp.stack([x, 0.5 * (x + nxt)], axis=-1).reshape(
+        *x.shape[:-1], 2 * x.shape[-1]
+    )
+    h = _conv_wfold(x, folded["stem_w"], folded["stem_b"], kh)
+    for blk in folded["res"]:
+        y = jax.nn.relu(_conv_wfold(h, blk["w1"], blk["b1"], kh))
+        y = _conv_wfold(y, blk["w2"], blk["b2"], kh)
+        h = h + y
+    u = _conv_wfold(h, folded["up_w"], folded["up_b"], kh)  # (2C, W, B, Np)
+    c = u.shape[0] // 2
+    u = u.reshape(2, c, *u.shape[1:])  # (2, C, W, B, Np)
+    u = jnp.moveaxis(u, 0, -1).reshape(c, *u.shape[2:4], 2 * u.shape[4])
+    corr = _conv_wfold(u, folded["head_w"], folded["head_b"], kh)
+    return base + corr
+
+
+def ai_estimate_folded(folded: dict[str, Any], h_ls: jax.Array) -> jax.Array:
+    """(n_ues, n_ant, n_dmrs_sym, n_pilot_sc) LS -> (n_ues, n_ant, 1, n_sc,
+    n_dmrs_sym), with pre-folded params (see ``fold_ai_params``)."""
+    n_ues, n_ant, n_sym, n_p = h_ls.shape
+    x = jnp.stack([h_ls.real, h_ls.imag], axis=0).astype(jnp.float32)
+    # (2, U, ant, S, Np) -> channel-leading (2, W=S, B=U*ant, H=Np)
+    x = jnp.transpose(x, (0, 3, 1, 2, 4)).reshape(2, n_sym, n_ues * n_ant, n_p)
+    out = _forward_batched(folded, x)  # (2, S, B, n_sc)
+    h = (out[0] + 1j * out[1]).astype(jnp.complex64)  # (S, B, n_sc)
+    h = jnp.transpose(h, (1, 2, 0)).reshape(n_ues, n_ant, -1, n_sym)
+    return h[:, :, None]  # (U, ant, 1, n_sc, S)
+
+
+@jax.jit
+def ai_estimate_from_ls_batched(
+    params: dict[str, Any], h_ls: jax.Array
+) -> jax.Array:
+    """(n_ues, n_ant, n_dmrs_sym, n_pilot_sc) LS -> (n_ues, n_ant, 1, n_sc,
+    n_dmrs_sym) — the multi-UE analogue of ``ai_estimate_from_ls``."""
+    return ai_estimate_folded(fold_ai_params(params, h_ls.shape[2]), h_ls)
 
 
 # -- in-framework training ----------------------------------------------------

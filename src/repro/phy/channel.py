@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -193,6 +194,120 @@ def simulate_slot_channel(
         interference = jnp.zeros(
             (cfg.n_ant, cfg.n_sc, cfg.n_sym), jnp.complex64
         )
+    return {"h": h, "noise_var": noise_var, "interference": interference}
+
+
+# -- traced-parameter variant (batched scan engine) ---------------------------
+#
+# ``simulate_slot_channel`` treats the whole ``ChannelConfig`` as static,
+# which retraces per condition and cannot ride a ``lax.scan`` whose channel
+# conditions change per slot.  ``ChannelParams`` lowers the per-slot knobs
+# (SNR, interference on/off, INR, masks) to device values so one compiled
+# slot step covers every scenario phase; the TDL profile stays static (the
+# paper's good/poor phases share the propagation environment and differ in
+# interference, Fig. 7).
+
+
+class ChannelParams(NamedTuple):
+    """Traced per-slot channel knobs (pytree; stackable over slots).
+
+    ``noise_var`` and ``inr_lin`` are pre-converted on the host (float64 ->
+    float32, exactly as the static path's constant folding rounds them) so
+    the traced simulation matches ``simulate_slot_channel``: ``h`` and
+    ``noise_var`` bitwise, the interference field to ~1e-7 relative (XLA
+    fuses the two programs differently, reassociating the last bit).
+    """
+
+    noise_var: jax.Array  # () float32 thermal-noise variance
+    interf_on: jax.Array  # () float32 in {0, 1}
+    inr_lin: jax.Array  # () float32 linear interference-to-noise ratio
+    sc_mask: jax.Array  # (n_sc,) float32 occupied-PRB mask
+    duty_full: jax.Array  # () float32 in {0, 1} — interferer always on
+    base_sym_mask: jax.Array  # (n_sym,) float32 — DMRS-collision symbols
+    p_rest: jax.Array  # () float32 — duty probability on remaining symbols
+
+
+def channel_params(cfg: SlotConfig, ch: ChannelConfig) -> ChannelParams:
+    """Lower one ``ChannelConfig`` to traced per-slot parameters."""
+    duty = float(ch.interference_symbol_duty)
+    if ch.dmrs_collision:
+        base = np.zeros(cfg.n_sym, np.float32)
+        base[list(cfg.dmrs_symbols)] = 1.0
+        n_rest = cfg.n_sym - cfg.n_dmrs_sym
+        p_rest = max(duty * cfg.n_sym - cfg.n_dmrs_sym, 0.0) / n_rest
+    else:
+        base = np.zeros(cfg.n_sym, np.float32)
+        p_rest = duty
+    return ChannelParams(
+        noise_var=jnp.float32(10.0 ** (-ch.snr_db / 10.0)),
+        interf_on=jnp.float32(1.0 if ch.interference else 0.0),
+        inr_lin=jnp.float32(10.0 ** (ch.inr_db / 10.0)),
+        sc_mask=_interference_mask(cfg, ch),
+        duty_full=jnp.float32(1.0 if duty >= 1.0 else 0.0),
+        base_sym_mask=jnp.asarray(base),
+        p_rest=jnp.float32(p_rest),
+    )
+
+
+def channel_params_schedule(
+    cfg: SlotConfig, schedule, n_slots: int
+) -> tuple[TdlProfile, ChannelParams]:
+    """Stack a slot schedule into (static profile, slot-stacked params).
+
+    ``schedule(slot) -> ChannelConfig``; all slots must share one TDL
+    profile (the traced path keeps propagation static — see module note).
+    Returns params whose leaves carry a leading ``(n_slots,)`` axis, ready
+    to be consumed as ``lax.scan`` inputs.
+    """
+    cfgs = [schedule(i) for i in range(n_slots)]
+    profiles = {c.profile for c in cfgs}
+    if len(profiles) > 1:
+        raise ValueError(
+            "traced channel schedule requires a single TDL profile; got "
+            f"{len(profiles)}"
+        )
+    params = [channel_params(cfg, c) for c in cfgs]
+    return cfgs[0].profile, jax.tree.map(lambda *ls: jnp.stack(ls, 0), *params)
+
+
+def _interference_symbol_mask_traced(
+    key: jax.Array, cfg: SlotConfig, p: ChannelParams
+) -> jax.Array:
+    """Traced analogue of ``_interference_symbol_mask`` (same key semantics)."""
+    rest = (jax.random.uniform(key, (cfg.n_sym,)) < p.p_rest).astype(jnp.float32)
+    mask = jnp.maximum(p.base_sym_mask, rest)
+    return jnp.where(p.duty_full > 0, jnp.ones(cfg.n_sym, jnp.float32), mask)
+
+
+@partial(jax.jit, static_argnames=("cfg", "profile"))
+def simulate_slot_channel_traced(
+    key: jax.Array, cfg: SlotConfig, profile: TdlProfile, p: ChannelParams
+) -> dict[str, jax.Array]:
+    """``simulate_slot_channel`` with traced per-slot knobs.
+
+    Matches the static version for the same key and an equivalent
+    ``ChannelConfig``: ``h``/``noise_var`` bitwise, interference to ~1e-7
+    relative (the branch is computed unconditionally and zeroed by
+    ``interf_on`` — same math, scan-compatible control flow, last-bit
+    fusion differences).
+    """
+    k_h, k_i, k_hi = jax.random.split(key, 3)
+    h = _freq_response(k_h, cfg, profile)
+    h = h / jnp.sqrt(jnp.mean(jnp.abs(h) ** 2) + 1e-12)
+    noise_var = p.noise_var
+
+    sym_mask = _interference_symbol_mask_traced(
+        jax.random.fold_in(k_i, 7), cfg, p
+    )
+    hi = _freq_response(k_hi, cfg, profile)[:, 0]
+    hi = hi / jnp.sqrt(jnp.mean(jnp.abs(hi) ** 2) + 1e-12)
+    sym = (
+        jax.random.normal(k_i, (cfg.n_sc, cfg.n_sym))
+        + 1j * jax.random.normal(k_i + 1, (cfg.n_sc, cfg.n_sym))
+    ) / jnp.sqrt(2.0)
+    amp = jnp.sqrt(noise_var * p.inr_lin) * p.interf_on
+    re_mask = p.sc_mask[None, :, None] * sym_mask[None, None, :]
+    interference = amp * hi * (re_mask * sym[None]).astype(jnp.complex64)
     return {"h": h, "noise_var": noise_var, "interference": interference}
 
 

@@ -24,30 +24,35 @@ import numpy as np
 from repro.phy.mcs import McsEntry, n_code_blocks
 
 
-def qam_mutual_information(sinr: jax.Array, qm: int) -> jax.Array:
-    """Per-RE mutual information (bits/symbol) for 2^qm-QAM.
+def qam_mutual_information_dynamic(sinr: jax.Array, qm: jax.Array) -> jax.Array:
+    """Per-RE mutual information (bits/symbol) for 2^qm-QAM, traced ``qm``.
 
     Capped-capacity MIESM form: MI = softmin(qm, log2(1 + snr / gamma)) with
     a ~1 dB SNR gap (gamma) to capacity for practical QAM + LDPC.  Unlike
     exponential-saturation fits, this keeps the high-SNR region honest: at
     17 dB a 256QAM symbol carries ~4.4 bits, not 8 — which is what lets
     sub-dB estimator-quality differences surface in link adaptation.
+
+    ``qm`` may be a traced device value (the batched scan engine selects
+    the MCS on device); the static-``qm`` wrappers below delegate here so
+    the model constants live in exactly one place.
     """
     gamma = 1.25
     cap = jnp.log2(1.0 + sinr / gamma)
     beta = 3.0  # softmin sharpness (smooth saturation at qm)
-    return -jnp.logaddexp(-beta * cap, -beta * float(qm)) / beta
+    return -jnp.logaddexp(-beta * cap, -beta * jnp.asarray(qm, jnp.float32)) / beta
 
 
-@partial(jax.jit, static_argnames=("qm",))
-def effective_mi(sinr_data: jax.Array, qm: int) -> jax.Array:
+def effective_mi_dynamic(sinr_data: jax.Array, qm: jax.Array) -> jax.Array:
     """Mean MI per symbol over the data allocation -> effective code rate."""
-    return jnp.mean(qam_mutual_information(sinr_data, qm)) / qm
+    qm_f = jnp.asarray(qm, jnp.float32)
+    return jnp.mean(qam_mutual_information_dynamic(sinr_data, qm_f)) / qm_f
 
 
-def tb_success(
+def tb_success_dynamic(
     sinr_data: jax.Array,
-    mcs: McsEntry,
+    qm: jax.Array,
+    code_rate: jax.Array,
     *,
     margin: float = 0.05,
     key: jax.Array | None = None,
@@ -58,12 +63,36 @@ def tb_success(
     threshold (logistic in the MI margin) so BLER curves are not a hard
     step — mirrors code-block diversity in real LDPC.
     """
-    mi = effective_mi(sinr_data, mcs.qm)
-    margin_mi = mi - (mcs.code_rate + margin)
+    mi = effective_mi_dynamic(sinr_data, qm)
+    margin_mi = mi - (code_rate + margin)
     if key is None:
         return margin_mi > 0
     p_success = jax.nn.sigmoid(margin_mi * 80.0)
     return jax.random.uniform(key, ()) < p_success
+
+
+def qam_mutual_information(sinr: jax.Array, qm: int) -> jax.Array:
+    """Static-``qm`` convenience wrapper over the dynamic MIESM form."""
+    return qam_mutual_information_dynamic(sinr, float(qm))
+
+
+@partial(jax.jit, static_argnames=("qm",))
+def effective_mi(sinr_data: jax.Array, qm: int) -> jax.Array:
+    """Mean MI per symbol over the data allocation -> effective code rate."""
+    return effective_mi_dynamic(sinr_data, float(qm))
+
+
+def tb_success(
+    sinr_data: jax.Array,
+    mcs: McsEntry,
+    *,
+    margin: float = 0.05,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """``tb_success_dynamic`` with the (qm, code rate) of a static MCS entry."""
+    return tb_success_dynamic(
+        sinr_data, float(mcs.qm), mcs.code_rate, margin=margin, key=key
+    )
 
 
 def throughput_bits(

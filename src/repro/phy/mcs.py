@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 # TS 38.214 Table 5.1.3.1-2 (MCS index table 2, 256QAM), entries 0..27:
@@ -76,3 +78,58 @@ def select_mcs(snr_db: float, *, backoff_db: float = 1.0) -> McsEntry:
     eligible = np.nonzero(SNR_THRESHOLDS_DB <= snr_db - backoff_db)[0]
     idx = int(eligible[-1]) if eligible.size else 0
     return mcs_entry(idx)
+
+
+# -- device-side tables (batched scan engine) ---------------------------------
+#
+# The batched multi-UE slot engine keeps link adaptation on device: MCS
+# selection and its derived quantities become table lookups indexed by a
+# traced MCS index, so the whole slot loop compiles into one ``lax.scan``.
+
+#: per-MCS modulation order / code rate as device-ready arrays, index-aligned
+#: with ``mcs_entry``.
+QM_BY_MCS = np.asarray([q for q, _ in _MCS_TABLE], np.int32)
+RATE_BY_MCS = np.asarray([r / 1024.0 for _, r in _MCS_TABLE], np.float32)
+
+#: supported modulation orders, index-aligned with ``qm_index_by_mcs``.
+QM_VALUES = (2, 4, 6, 8)
+QM_INDEX_BY_MCS = np.asarray(
+    [QM_VALUES.index(q) for q, _ in _MCS_TABLE], np.int32
+)
+
+
+def tbs_table(n_data_re: int, n_layers: int = 1) -> np.ndarray:
+    """Transport block size for every MCS index, (MAX_MCS+1,) int32.
+
+    The TBS is a pure function of (n_data_re, MCS), so the batched engine
+    precomputes it per slot config and looks it up with the traced index.
+    """
+    return np.asarray(
+        [
+            transport_block_size(n_data_re, mcs_entry(i), n_layers)
+            for i in range(MAX_MCS + 1)
+        ],
+        np.int32,
+    )
+
+
+def n_code_blocks_table(n_data_re: int, n_layers: int = 1) -> np.ndarray:
+    """Code-block count for every MCS index, (MAX_MCS+1,) int32."""
+    return np.asarray(
+        [int(n_code_blocks(int(t))) for t in tbs_table(n_data_re, n_layers)],
+        np.int32,
+    )
+
+
+def select_mcs_index(snr_db: jax.Array, *, backoff_db: float = 1.0) -> jax.Array:
+    """Traced link adaptation: elementwise device analogue of ``select_mcs``.
+
+    ``SNR_THRESHOLDS_DB`` is monotonically increasing (the table's spectral
+    efficiency is), so the highest eligible index is a threshold count.
+    """
+    th = jnp.asarray(SNR_THRESHOLDS_DB, jnp.float32)
+    snr = jnp.asarray(snr_db, jnp.float32)
+    n_eligible = jnp.sum(
+        (th <= (snr[..., None] - backoff_db)).astype(jnp.int32), axis=-1
+    )
+    return jnp.maximum(n_eligible - 1, 0)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,15 @@ from repro.core.methodology import perturb_estimate
 from repro.phy import dmrs as dmrs_mod
 from repro.phy import qam
 from repro.phy.ai_estimator import AiEstimatorConfig, ai_estimate_from_ls
-from repro.phy.channel import ChannelConfig, apply_channel, simulate_slot_channel
+from repro.phy.channel import (
+    ChannelConfig,
+    ChannelParams,
+    TdlProfile,
+    apply_channel,
+    channel_params_schedule,
+    simulate_slot_channel,
+    simulate_slot_channel_traced,
+)
 from repro.phy.equalizer import effective_noise_var, mmse_equalize, mmse_irc_equalize
 from repro.phy.estimators import (
     WienerInterpolator,
@@ -39,8 +47,28 @@ from repro.phy.estimators import (
     ls_estimate,
     mmse_estimate,
 )
-from repro.phy.link import count_bit_errors, effective_mi, tb_success, throughput_bits
-from repro.phy.mcs import McsEntry, mcs_entry, n_code_blocks, select_mcs, transport_block_size
+from repro.phy.link import (
+    count_bit_errors,
+    effective_mi,
+    tb_success,
+    tb_success_dynamic,
+    throughput_bits,
+)
+from repro.phy.mcs import (
+    MAX_MCS,
+    McsEntry,
+    QM_BY_MCS,
+    QM_INDEX_BY_MCS,
+    QM_VALUES,
+    RATE_BY_MCS,
+    mcs_entry,
+    n_code_blocks,
+    n_code_blocks_table,
+    select_mcs,
+    select_mcs_index,
+    tbs_table,
+    transport_block_size,
+)
 from repro.phy.nr import SlotConfig
 
 # MAC overheads (bytes) for the PHY->MAC KPM coupling
@@ -313,3 +341,374 @@ class PuschPipeline:
             return link, outputs, kpms
 
         return slot_fn
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-UE slot engine
+# ---------------------------------------------------------------------------
+
+
+class DeviceLinkState(NamedTuple):
+    """Device-resident per-UE link state (the ``lax.scan`` carry).
+
+    The host-loop ``LinkState`` keeps Python floats and pays a host
+    round-trip per slot; this pytree keeps OLLA, link adaptation and the
+    cumulative KPM counters on device so the whole slot loop compiles.  All
+    leaves carry a leading ``(n_ues,)`` axis.
+    """
+
+    reported_snr_db: jax.Array  # (U,) float32
+    olla_offset_db: jax.Array  # (U,) float32
+    ndi: jax.Array  # (U,) int32
+    cum_phy_bits: jax.Array  # (U,) float32 — delivered bits
+    cum_mac_bytes: jax.Array  # (U,) float32
+    cum_lcid4_bytes: jax.Array  # (U,) float32
+    slots: jax.Array  # (U,) int32
+
+
+def init_device_link(n_ues: int) -> DeviceLinkState:
+    """Cold-start state matching ``LinkState()`` defaults, per UE."""
+    f = lambda v: jnp.full((n_ues,), v, jnp.float32)
+    return DeviceLinkState(
+        reported_snr_db=f(20.0),
+        olla_offset_db=f(0.0),
+        ndi=jnp.ones((n_ues,), jnp.int32),
+        cum_phy_bits=f(0.0),
+        cum_mac_bytes=f(0.0),
+        cum_lcid4_bytes=f(0.0),
+        slots=jnp.zeros((n_ues,), jnp.int32),
+    )
+
+
+def normalize_modes(modes, n_slots: int, n_ues: int) -> jax.Array:
+    """Broadcast any of {scalar, (S,), (U,), (S, U)} to an (S, U) int32 grid.
+
+    A 1-D vector is per-slot when its length matches ``n_slots`` and per-UE
+    when it matches ``n_ues``; when ``n_slots == n_ues`` that is ambiguous
+    (the two broadcasts route experts differently), so a 1-D vector is
+    rejected — pass the explicit ``(S, U)`` grid instead.
+    """
+    m = jnp.asarray(modes, jnp.int32)
+    if m.ndim == 0:
+        return jnp.full((n_slots, n_ues), m, jnp.int32)
+    if m.ndim == 1:
+        if n_slots == n_ues and m.shape[0] == n_slots:
+            raise ValueError(
+                f"1-D modes of length {m.shape[0]} are ambiguous when "
+                f"n_slots == n_ues == {n_slots}: pass modes[:, None] "
+                "(per-slot) or modes[None, :] (per-UE) explicitly"
+            )
+        if m.shape[0] == n_slots:
+            return jnp.broadcast_to(m[:, None], (n_slots, n_ues))
+        if m.shape[0] == n_ues:
+            return jnp.broadcast_to(m[None, :], (n_slots, n_ues))
+    elif m.ndim == 2:
+        try:  # exact (S, U) or explicit (S, 1) / (1, U) broadcasts
+            return jnp.broadcast_to(m, (n_slots, n_ues))
+        except ValueError:
+            pass
+    raise ValueError(f"modes shape {m.shape} vs (n_slots={n_slots}, n_ues={n_ues})")
+
+
+class BatchedPuschPipeline:
+    """Multi-UE PUSCH slot engine: vmapped stages + scan-compiled slot loop.
+
+    The single-UE ``PuschPipeline`` dispatches O(slots x UEs) host-level
+    stage calls and bounces link state through Python floats every slot.
+    This engine vmaps TX / channel / RX over a leading UE axis, keeps
+    ``DeviceLinkState`` on device, and rolls the slot loop into one
+    ``jax.lax.scan`` — the whole campaign becomes a single compiled program.
+
+    Link adaptation goes fully traced: MCS index, modulation order, code
+    rate, TBS and code-block counts are device table lookups
+    (``repro.phy.mcs``), and the modulation-order-dependent TX/EVM paths are
+    computed for every supported QAM order and selected per UE (four cheap
+    variants instead of a retrace per MCS).
+
+    The expert bank receives a per-UE ``mode`` vector: different UEs run
+    different experts in the same slot, selected by the batched Pallas
+    switch kernel (``switch_select_batched_2d``).
+
+    Bit-level outputs (LLRs, TX bits) are a per-``qm`` dynamic shape and are
+    deliberately not emitted — the engine produces per-slot-per-UE KPMs and
+    TB outcomes (what campaigns and policies consume); use ``PuschPipeline``
+    for bit-exact single-link inspection.
+    """
+
+    def __init__(
+        self,
+        cfg: SlotConfig,
+        ai_params: Any,
+        *,
+        net: AiEstimatorConfig = AiEstimatorConfig(),
+        execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
+        use_pallas_switch: bool = True,
+        rms_delay_spread_s: float = 100e-9,
+    ):
+        self.cfg = cfg
+        self.ai_params = ai_params
+        self.interpolator = WienerInterpolator.build(
+            cfg, rms_delay_spread_s=rms_delay_spread_s
+        )
+        self._pilots = dmrs_mod.dmrs_sequence(cfg)
+        self._tbs_table = jnp.asarray(tbs_table(cfg.n_data_re()))
+        self._ncb_table = jnp.asarray(n_code_blocks_table(cfg.n_data_re()))
+        self._qm_by_mcs = jnp.asarray(QM_BY_MCS)
+        self._qm_idx_by_mcs = jnp.asarray(QM_INDEX_BY_MCS)
+        self._rate_by_mcs = jnp.asarray(RATE_BY_MCS)
+
+        from repro.phy.ai_estimator import ai_estimate_folded, fold_ai_params
+
+        folded = fold_ai_params(ai_params, cfg.n_dmrs_sym)
+
+        def ai_fn(_p, h_ls):
+            return ai_estimate_folded(folded, h_ls)
+
+        def mmse_fn(_p, h_ls):
+            return self._mmse_from_ls_batched(h_ls)
+
+        self.bank = ExpertBank(
+            [
+                Expert(name="ai", fn=ai_fn, params=ai_params, flops=net.flops(cfg)),
+                Expert(name="mmse", fn=mmse_fn, params=None,
+                       flops=estimator_flops(cfg)),
+            ],
+            default_mode=1,
+            execution_mode=execution_mode,
+            use_pallas_switch=use_pallas_switch,
+        )
+
+    def _mmse_from_ls_batched(self, h_ls: jax.Array) -> jax.Array:
+        """(U, ant, dmrs_sym, pilot_sc) -> (U, ant, 1, n_sc, dmrs_sym)."""
+        from repro.kernels.mmse_interp import mmse_interp
+
+        h_full = mmse_interp(h_ls, self.interpolator.w)
+        return jnp.moveaxis(h_full, -2, -1)[:, :, None]
+
+    # -- per-UE stages (vmapped inside slot_step) -----------------------------
+
+    def _ue_pre(self, profile: TdlProfile, p: ChannelParams, snr_db, olla_db, key):
+        """Link adaptation + TX + channel + LS for one UE (traced MCS)."""
+        cfg = self.cfg
+        k_tx, k_ch, k_n, k_crc = jax.random.split(key, 4)
+
+        mcs_idx = select_mcs_index(snr_db + olla_db)
+        qm_idx = jnp.take(self._qm_idx_by_mcs, mcs_idx)
+        qm = jnp.take(self._qm_by_mcs, mcs_idx).astype(jnp.float32)
+        code_rate = jnp.take(self._rate_by_mcs, mcs_idx)
+        tbs = jnp.take(self._tbs_table, mcs_idx).astype(jnp.float32)
+
+        # TX for every supported modulation order; select per UE.  Bits are
+        # drawn once at the widest order and prefix-sliced, so the payload
+        # for a given (key, qm) is deterministic.
+        n_re = cfg.n_data_re()
+        bits = jax.random.bernoulli(k_tx, 0.5, (n_re * max(QM_VALUES),)).astype(
+            jnp.uint8
+        )
+        syms_all = jnp.stack(
+            [qam.modulate(bits[: n_re * q], q) for q in QM_VALUES], axis=0
+        )
+        syms = jnp.take(syms_all, qm_idx, axis=0)
+
+        tx_grid = dmrs_mod.map_slot_grid(cfg, syms, self._pilots)
+        fields = simulate_slot_channel_traced(k_ch, cfg, profile, p)
+        rx_grid = apply_channel(k_n, tx_grid, fields)
+        h_ls = ls_estimate(cfg, rx_grid, self._pilots)
+        return {
+            "mcs_idx": mcs_idx,
+            "qm_idx": qm_idx,
+            "qm": qm,
+            "code_rate": code_rate,
+            "tbs": tbs,
+            "syms": syms,
+            "rx_grid": rx_grid,
+            "h_ls": h_ls,
+            "noise_var": fields["noise_var"],
+            "k_crc": k_crc,
+        }
+
+    def _ue_post(self, link: DeviceLinkState, pre: dict, h_sel: jax.Array):
+        """Equalize + KPMs + OLLA for one UE (scalar link-state leaves)."""
+        cfg = self.cfg
+        x_hat, _ = mmse_equalize(cfg, pre["rx_grid"], h_sel, pre["noise_var"])
+        data_hat = dmrs_mod.extract_data_re(cfg, x_hat[None])[0]
+
+        # decision-directed EVM per modulation order, selected by qm_idx
+        # (per-axis PAM nearest — equivalent to the host pipeline's
+        # constellation argmin on square Gray QAM, O(1) per symbol)
+        dd_errs, sig_pows = [], []
+        for q in QM_VALUES:
+            nearest = qam.nearest_point(data_hat, q)
+            dd_errs.append(jnp.mean(jnp.abs(data_hat - nearest) ** 2))
+            sig_pows.append(jnp.mean(jnp.abs(nearest) ** 2))
+        dd_err = jnp.take(jnp.stack(dd_errs), pre["qm_idx"])
+        sig_pow = jnp.take(jnp.stack(sig_pows), pre["qm_idx"])
+        sinr_meas = sig_pow / jnp.maximum(dd_err, 1e-9)
+
+        # genie per-RE SINR (MIESM TB model), as in the host pipeline
+        genie_err = jnp.abs(data_hat - pre["syms"]) ** 2
+        n = genie_err.shape[0] - genie_err.shape[0] % 12
+        smoothed = jnp.mean(genie_err[:n].reshape(-1, 12), axis=1)
+        genie_sinr = 1.0 / jnp.maximum(smoothed, 1e-9)
+
+        ok = tb_success_dynamic(
+            genie_sinr, pre["qm"], pre["code_rate"], key=pre["k_crc"]
+        )
+        ok_f = ok.astype(jnp.float32)
+        tbs = pre["tbs"]
+        slot_dur = cfg.slot_duration_s
+        phy_bits = jnp.where(ok, tbs / slot_dur, 0.0)
+        rsrp = jnp.mean(jnp.abs(h_sel) ** 2)
+
+        tb_bytes = tbs / 8.0
+        mac_sdu_bytes = jnp.maximum(tb_bytes - _MAC_HEADER_BYTES, 0.0) * ok_f
+        lcid4_bytes = (
+            jnp.maximum(mac_sdu_bytes - _RLC_HEADER_BYTES, 0.0) * _LCID4_FRACTION
+        )
+
+        olla = link.olla_offset_db + jnp.where(ok, _OLLA_UP_DB, -_OLLA_DOWN_DB)
+        olla = jnp.clip(olla, -_OLLA_CLAMP_DB, _OLLA_CLAMP_DB)
+        snr_db = 10.0 * jnp.log10(sinr_meas + 1e-9)
+
+        new_link = DeviceLinkState(
+            reported_snr_db=snr_db,
+            olla_offset_db=olla,
+            ndi=ok.astype(jnp.int32),
+            cum_phy_bits=link.cum_phy_bits + phy_bits * slot_dur,
+            cum_mac_bytes=link.cum_mac_bytes + mac_sdu_bytes,
+            cum_lcid4_bytes=link.cum_lcid4_bytes + lcid4_bytes,
+            slots=link.slots + 1,
+        )
+        elapsed = new_link.slots.astype(jnp.float32) * slot_dur
+        kpms = {
+            "aerial": {
+                "code_rate": pre["code_rate"],
+                "sinr": snr_db,
+                "qam_order": pre["qm"],
+                "mcs_index": pre["mcs_idx"].astype(jnp.float32),
+                "tb_size": tbs * ok_f,
+                "n_code_blocks": jnp.take(self._ncb_table, pre["mcs_idx"]).astype(
+                    jnp.float32
+                )
+                * ok_f,
+                "pdu_length": tb_bytes * ok_f,
+                "ndi": ok_f,
+                "rsrp": rsrp,
+                "phy_throughput": new_link.cum_phy_bits / elapsed,
+            },
+            "oai": {
+                "snr": snr_db,
+                "mac_throughput": new_link.cum_mac_bytes * 8.0 / elapsed,
+                "lcid4_throughput": new_link.cum_lcid4_bytes * 8.0 / elapsed,
+                "mac_rx_bytes": mac_sdu_bytes,
+                "lcid4_rx_bytes": lcid4_bytes,
+            },
+        }
+        outputs = {
+            "tb_ok": ok_f,
+            "tbs": tbs,
+            "mcs": pre["mcs_idx"],
+            "phy_bits_per_s": phy_bits,
+            "kpms": kpms,
+        }
+        return new_link, outputs
+
+    # -- one batched slot ------------------------------------------------------
+
+    def _slot_core(
+        self,
+        profile: TdlProfile,
+        link: DeviceLinkState,
+        modes: jax.Array,
+        keys: jax.Array,
+        p: ChannelParams,
+    ):
+        pre = jax.vmap(
+            lambda snr, olla, key: self._ue_pre(profile, p, snr, olla, key)
+        )(link.reported_snr_db, link.olla_offset_db, keys)
+        out = self.bank(jnp.asarray(modes, jnp.int32), pre["h_ls"])
+        new_link, outputs = jax.vmap(self._ue_post)(link, pre, out.selected)
+        return new_link, outputs
+
+    @partial(jax.jit, static_argnames=("self", "profile"))
+    def slot_step(
+        self,
+        profile: TdlProfile,
+        link: DeviceLinkState,
+        modes: jax.Array,
+        keys: jax.Array,
+        p: ChannelParams,
+    ):
+        """One compiled multi-UE slot. ``modes``/``keys`` carry the UE axis."""
+        return self._slot_core(profile, link, modes, keys, p)
+
+    @partial(jax.jit, static_argnames=("self", "profile"))
+    def _run_scan(self, profile, link0, ue_keys, modes, params):
+        def step(carry, xs):
+            link, slot_idx = carry
+            modes_s, p = xs
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
+            link, out = self._slot_core(profile, link, modes_s, keys, p)
+            return (link, slot_idx + 1), out
+
+        (link, _), traj = jax.lax.scan(
+            step, (link0, jnp.int32(0)), (modes, params)
+        )
+        return link, traj
+
+    # -- campaign driver -------------------------------------------------------
+
+    def run(
+        self,
+        schedule: Callable[[int], ChannelConfig],
+        modes,
+        *,
+        n_slots: int,
+        n_ues: int,
+        key: jax.Array | None = None,
+        ue_keys: jax.Array | None = None,
+        use_scan: bool = True,
+    ) -> tuple[DeviceLinkState, dict[str, Any]]:
+        """Run an ``n_slots x n_ues`` campaign.
+
+        Args:
+          schedule: ``schedule(slot) -> ChannelConfig`` scenario (one TDL
+            profile across the run; conditions may change per slot).
+          modes: expert selection — scalar, per-slot ``(S,)``, per-UE
+            ``(U,)`` or full ``(S, U)`` grid.
+          key: root PRNG key; UE ``u`` in slot ``s`` consumes
+            ``fold_in(fold_in(key, u), s)``, so per-UE streams are
+            independent of the batch composition (a UE's trajectory is
+            identical whether it runs alone or in a batch).
+          ue_keys: explicit ``(n_ues,)`` per-UE base keys, overriding the
+            ``fold_in(key, u)`` derivation — lets a batched run be compared
+            against independent single-UE runs with the same keys.
+          use_scan: compiled ``lax.scan`` loop (default) or a per-slot
+            Python loop over the same jitted step (debug/benchmark baseline).
+
+        Returns:
+          ``(final_link, trajectory)`` where every trajectory leaf is
+          ``(n_slots, n_ues)``.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        modes = normalize_modes(modes, n_slots, n_ues)
+        if ue_keys is None:
+            ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
+                jnp.arange(n_ues)
+            )
+        elif ue_keys.shape[0] != n_ues:
+            raise ValueError(f"ue_keys {ue_keys.shape} vs n_ues {n_ues}")
+        link = init_device_link(n_ues)
+        if use_scan:
+            return self._run_scan(profile, link, ue_keys, modes, params)
+
+        outs = []
+        for s in range(n_slots):
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, s))(ue_keys)
+            p = jax.tree.map(lambda x: x[s], params)
+            link, out = self.slot_step(profile, link, modes[s], keys, p)
+            outs.append(out)
+        traj = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
+        return link, traj

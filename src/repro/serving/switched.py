@@ -109,7 +109,14 @@ class SwitchedDecoder:
     def step(
         self, mode: int | jax.Array, params, tokens, cache
     ) -> tuple[jax.Array, Any, dict[str, float]]:
-        """One decode slot. Returns (logits, cache, KPMs)."""
+        """One decode slot. Returns (logits, cache, KPMs).
+
+        ``mode`` may be a scalar (whole batch follows one expert) or a
+        ``(batch,)`` vector — the serving analogue of the PHY engine's
+        per-UE mode vector: each sequence in the decode batch independently
+        selects exact or windowed attention, routed by the batched Pallas
+        switch over the per-sequence logits rows.
+        """
         logits, cache, kpms = self._step(jnp.asarray(mode, jnp.int32),
                                          params, tokens, cache)
         max_seq = cache["k"].shape[2] if "k" in cache else 1

@@ -1,8 +1,15 @@
-"""Shared test fixtures.
+"""Shared test fixtures + collection-safety guard.
 
 NOTE: XLA_FLAGS / forced device counts are deliberately NOT set here — smoke
 tests must see the real single CPU device (the dry-run sets its own flags in
 its own process).
+
+Collection guard: an import error in one test module (e.g. an upstream JAX
+API change) must surface as a *failure of that file*, not abort the whole
+session — otherwise `pytest -x -q` hides every other test behind the first
+broken import.  ``pytest_pycollect_makemodule`` wraps each module in a
+collector that converts collection-time exceptions into a single synthetic
+failing item carrying the original traceback.
 """
 
 import numpy as np
@@ -16,3 +23,32 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+class _CollectFailureItem(pytest.Item):
+    """Synthetic test that re-raises a module's collection error."""
+
+    def __init__(self, *, excinfo, **kwargs):
+        super().__init__(**kwargs)
+        self._excinfo = excinfo
+
+    def runtest(self):
+        raise self._excinfo
+
+    def reportinfo(self):
+        return self.path, 0, f"collection failure: {self.path.name}"
+
+
+class _GuardedModule(pytest.Module):
+    def collect(self):
+        try:
+            return list(super().collect())
+        except Exception as exc:  # noqa: BLE001 — any import-time crash
+            item = _CollectFailureItem.from_parent(
+                self, name=f"{self.path.stem}::collection", excinfo=exc
+            )
+            return [item]
+
+
+def pytest_pycollect_makemodule(module_path, parent):
+    return _GuardedModule.from_parent(parent, path=module_path)

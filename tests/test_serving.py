@@ -108,6 +108,23 @@ def test_switched_decoder_selected_only(model_params):
     assert kpms["expert_kl"] == 0.0  # no cross-expert observability
 
 
+def test_switched_decoder_per_sequence_modes(model_params):
+    """A (batch,) mode vector routes each sequence's logits to its expert."""
+    model, params = model_params
+    dec = SwitchedDecoder(model, SwitchedDecodeConfig(window=4))
+    b = 3
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (b, 6), 0, CFG.vocab)
+    cache = model.init_cache(b, 16)
+    _, cache = model.prefill(params, tokens, cache)
+    nxt = tokens[:, -1:]
+    l_exact, _, _ = dec.step(0, params, nxt, cache)
+    l_win, _, _ = dec.step(1, params, nxt, cache)
+    lv, _, _ = dec.step(jnp.asarray([0, 1, 0], jnp.int32), params, nxt, cache)
+    np.testing.assert_array_equal(np.asarray(lv)[0], np.asarray(l_exact)[0])
+    np.testing.assert_array_equal(np.asarray(lv)[1], np.asarray(l_win)[1])
+    np.testing.assert_array_equal(np.asarray(lv)[2], np.asarray(l_exact)[2])
+
+
 def test_switched_decoder_rejects_local_global():
     model = Model(get_config("gemma2-9b", reduced=True))
     with pytest.raises(ValueError):

@@ -73,26 +73,36 @@ def test_fig9_good_poor_good_switching():
 def test_data_integrity_across_switches():
     """Paper 6.1 'Data Integrity': switching must not corrupt in-flight TBs.
 
-    With a fixed channel, slots decoded under aggressive switching must keep
-    decoding their TBs exactly as the static-mode run does.
+    The integrity claim is about the *switch mechanism*, not the experts:
+    routing an expert's output through the concurrent bank + Pallas switch
+    kernel must decode every TB exactly as executing only that expert
+    directly (``SELECTED_ONLY`` / ``lax.switch``) under the same aggressive
+    mode sequence.  (Comparing against a static single-expert run instead
+    would conflate mechanism integrity with legitimate estimator-quality
+    differences in the link-adaptation trajectory.)
     """
+    from repro.core.expert_bank import ExecutionMode
+
     params = init_params(jax.random.PRNGKey(0), CFG, NET)
-    pipe = PuschPipeline(CFG, params, net=NET)
     modes = [1, 1, 0, 1, 0, 0, 1]  # aggressive switching pattern
 
-    def run(mode_seq):
+    def run(pipe):
         link = LinkState()
         oks = []
-        for i, m in enumerate(mode_seq):
+        for i, m in enumerate(modes):
             link, out, _ = pipe.run_slot(jax.random.PRNGKey(100 + i), m, link, GOOD)
             oks.append(out["tb_ok"])
         return oks
 
-    oks_switching = run(modes)
-    oks_mmse = run([1] * len(modes))
-    # strongest form of the paper's integrity claim: the slot-by-slot TB
-    # outcomes are IDENTICAL with and without switching — the switch never
-    # corrupts an in-flight TB
-    assert oks_switching == oks_mmse, (oks_switching, oks_mmse)
+    oks_switched = run(PuschPipeline(CFG, params, net=NET))
+    oks_direct = run(
+        PuschPipeline(
+            CFG, params, net=NET, execution_mode=ExecutionMode.SELECTED_ONLY
+        )
+    )
+    # slot-by-slot TB outcomes are IDENTICAL whether the selected expert's
+    # output arrives via the switch kernel or via direct execution — the
+    # switch never corrupts an in-flight TB
+    assert oks_switched == oks_direct, (oks_switched, oks_direct)
     # and once OLLA settles (~5 slots from cold start), TBs decode
-    assert all(o == 1.0 for o in oks_switching[5:]), oks_switching
+    assert all(o == 1.0 for o in oks_switched[5:]), oks_switched
