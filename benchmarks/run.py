@@ -2,9 +2,10 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
 
-``--smoke`` is the CI fast path: tiny expert training, two sections only
-(switch-kernel runtimes + batched multi-UE engine), exits non-zero on any
-failure.  Finishes in minutes where the full sweep takes an hour.
+``--smoke`` is the CI fast path: tiny expert training, three sections only
+(switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
+equivalence), exits non-zero on any failure.  Finishes in minutes where the
+full sweep takes an hour.
 """
 
 from __future__ import annotations
@@ -47,6 +48,10 @@ def main() -> None:
             ("Batched multi-UE engine (smoke)", bench_timeseries.run_batched,
              {"n_slots": 24, "n_ues": 4, "host_probe_slots": 6,
               "check_identity": False}),
+            # tiny policy, 8 slots: raises unless device-decided modes
+            # bitwise-match the host replay (the loop-equivalence contract)
+            ("Closed-loop equivalence (smoke)", bench_control_loop.run_in_scan,
+             {"n_slots": 8, "n_ues": 2, "window_slots": 2}),
         ]
     else:
         sections = [

@@ -10,7 +10,14 @@ multi-UE slot engine — one compiled ``lax.scan`` per expert instead of
 O(slots x UEs) host dispatches — and a per-UE mode-vector demo slot is
 shown before the live single-UE control loop.
 
-    PYTHONPATH=src python examples/quickstart.py [--n-ues 8]
+With ``--closed-loop`` (implies the batched engine) the trained policy is
+exported to flat device tables and the whole control loop — KPM window,
+tree inference, hysteresis, switch register — runs *inside* the slot scan:
+each UE's mode for slot n+1 is decided on device from slot n's telemetry,
+no host round-trip, and the run is verified bitwise against the host
+replay of the same policy.
+
+    PYTHONPATH=src python examples/quickstart.py [--n-ues 8] [--closed-loop]
 """
 
 import argparse
@@ -21,9 +28,13 @@ import numpy as np
 
 from repro.core.dapp import DApp, connect_dapp
 from repro.core.e3 import E3Agent
-from repro.core.policy import DecisionTreePolicy, fit_decision_tree
+from repro.core.policy import (
+    DecisionTreePolicy,
+    fit_decision_tree,
+    profile_and_fit_tree,
+)
 from repro.core.runtime import ArchesRuntime
-from repro.core.telemetry import SELECTED_KPMS, trajectory_kpm_matrix
+from repro.core.telemetry import SELECTED_KPMS
 from repro.phy.ai_estimator import AiEstimatorConfig, init_params
 from repro.phy.nr import SlotConfig
 from repro.phy.pipeline import BatchedPuschPipeline, LinkState, PuschPipeline
@@ -46,25 +57,15 @@ def profile_host_loop(pipe, schedule, n_slots):
     return np.asarray(X, np.float32), np.asarray(y)
 
 
-def profile_batched(engine, schedule, n_slots, n_ues):
-    """Batched profiling: every (slot, UE) sample from one scan per expert."""
-    X, y = [], []
-    labels = np.asarray(
-        [0 if schedule(s).interference else 1 for s in range(n_slots)]
-    )
-    for mode in (0, 1):
-        _, traj = engine.run(schedule, mode, n_slots=n_slots, n_ues=n_ues)
-        feats = np.asarray(trajectory_kpm_matrix(traj["kpms"]))  # (S, U, K)
-        X.append(feats.reshape(-1, feats.shape[-1]))
-        y.append(np.repeat(labels, n_ues))
-    return np.concatenate(X).astype(np.float32), np.concatenate(y)
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-ues", type=int, default=1,
                     help="profile on the batched multi-UE engine (N > 1)")
+    ap.add_argument("--closed-loop", action="store_true",
+                    help="run the device-side closed loop (policy in the scan)")
     args = ap.parse_args()
+    if args.closed_loop and args.n_ues < 2:
+        args.n_ues = 4  # the closed loop lives on the batched engine
 
     cfg = SlotConfig(n_prb=24)
     net = AiEstimatorConfig(channels=8, n_res_blocks=1)
@@ -78,7 +79,9 @@ def main():
         print(f"== profiling experts on the batched engine "
               f"({args.n_ues} UEs x {n_slots} slots per expert) ==")
         engine = BatchedPuschPipeline(cfg, params, net=net)
-        X, y = profile_batched(engine, schedule, n_slots, args.n_ues)
+        policy = profile_and_fit_tree(
+            engine, schedule, n_slots=n_slots, n_ues=args.n_ues
+        )
 
         # per-UE mode vector demo: odd UEs on MMSE, even UEs on AI, one slot
         modes = (jnp.arange(args.n_ues) % 2).astype(jnp.int32)
@@ -90,13 +93,39 @@ def main():
     else:
         print("== profiling experts for policy training ==")
         X, y = profile_host_loop(pipe, schedule, n_slots)
-
-    tree = fit_decision_tree(X, y, depth=2)
-    policy = DecisionTreePolicy(tree, SELECTED_KPMS)
+        tree = fit_decision_tree(X, y, depth=2)
+        policy = DecisionTreePolicy(tree, SELECTED_KPMS)
+    tree = policy.tree
     top = np.argsort(-tree.importances)[:2]
     print("policy features:",
           ", ".join(f"{SELECTED_KPMS[i]} ({tree.importances[i]*100:.0f}%)"
                     for i in top))
+
+    # -- 1b. device-side closed loop (policy compiled into the scan) --------
+    if args.closed_loop:
+        from repro.core.closed_loop import SwitchConfig, host_replay_closed_loop
+        from repro.core.runtime import ArchesRuntime as _RT
+
+        sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=2)
+        runtime = _RT(closed_loop=True, engine=engine,
+                      device_policy=policy.to_device(), switch_config=sw_cfg)
+        hist = runtime.run_batched(schedule, n_slots=n_slots, n_ues=args.n_ues,
+                                   key=jax.random.PRNGKey(42))
+        feats = np.stack(
+            [hist.kpms[n] for n in SELECTED_KPMS], axis=-1
+        ).astype(np.float32)
+        replay = host_replay_closed_loop(policy, feats, sw_cfg)
+        match = np.array_equal(hist.modes, replay["active_mode"])
+        print(f"\n== closed loop: decisions inside the scan "
+              f"({args.n_ues} UEs x {n_slots} slots) ==")
+        for s in range(0, n_slots, 3):
+            cond = "poor" if schedule(s).interference else "good"
+            row = "".join("A" if m == 0 else "M" for m in hist.modes[s])
+            print(f"slot {s:3d} [{cond}] per-UE experts: {row}")
+        print(f"device == host replay: {'yes (bitwise)' if match else 'NO'}; "
+              f"switches/UE: {hist.n_switches.tolist()}")
+        if not match:
+            raise SystemExit("closed-loop equivalence violated")
 
     # -- 2. live ARCHES loop -------------------------------------------------
     print("\n== live run: good -> poor -> good ==")

@@ -1,5 +1,17 @@
 """ARCHES core: the paper's contribution as composable JAX modules."""
 
+from repro.core.closed_loop import (
+    DeviceSwitchState,
+    DeviceThresholdPolicy,
+    DeviceTreePolicy,
+    SwitchConfig,
+    export_tree_tables,
+    host_replay_closed_loop,
+    init_device_switch,
+    policy_infer,
+    switch_boundary,
+    switch_update,
+)
 from repro.core.dapp import ControlLoopLatency, DApp, Decision, connect_dapp
 from repro.core.e3 import (
     E3Agent,
@@ -24,8 +36,15 @@ from repro.core.policy import (
     ThresholdPolicy,
     classification_metrics,
     fit_decision_tree,
+    profile_and_fit_tree,
 )
-from repro.core.runtime import ArchesRuntime, RunHistory, SlotRecord
+from repro.core.runtime import (
+    ArchesRuntime,
+    BatchedRunHistory,
+    RunHistory,
+    SlotRecord,
+    replay_batched_telemetry,
+)
 from repro.core.switch import (
     SlotSwitchState,
     commit_decision,

@@ -1,0 +1,319 @@
+"""In-scan closed-loop expert switching: the E3/dApp decision path on device.
+
+The host control loop (``ArchesRuntime`` + ``DApp``) bounces every slot's
+KPMs through Python and pays the paper's ~135 us framework overhead per
+decision.  This module compiles the *whole* loop — telemetry window, policy
+inference, hysteresis, switch register — into the slot scan, so the mode a
+UE runs in slot ``n+1`` is derived on device from slot ``n``'s telemetry
+with zero host involvement.
+
+Pieces:
+
+* ``DeviceTreePolicy`` / ``DeviceThresholdPolicy`` — host policies exported
+  to flat device arrays (feature index / threshold / leaf-mode tables, plus
+  the ``PackedTree`` MXU operands for the Pallas ``tree_infer`` kernel).
+* ``DeviceSwitchState`` — the scan-carry pytree: a per-UE rolling KPM window
+  (``KPMRing`` vmapped over the UE axis), hysteresis streak counters, and
+  the switch register (``pending_mode``) holding the mode that takes effect
+  at the next slot boundary.
+* ``switch_update`` / ``switch_boundary`` — the two phases of the paper's
+  timing contract (3.3): a decision made *during* slot ``n`` is committed to
+  the register; only the boundary into slot ``n+1`` copies it to
+  ``active_mode``.  Mid-slot flips are impossible by construction.
+* ``host_replay_closed_loop`` — the equivalence oracle: a slot-by-slot host
+  loop feeding the same KPM window through the literal host policy
+  (``DecisionTreePolicy.__call__`` -> ``tree_infer_ref`` walk).  Device and
+  host mode trajectories must match bitwise; the test suite asserts it.
+
+Policy *training* (Gini tree fitting) and the clustering methodology stay
+offline/host-side, exactly as in the paper — only *inference* moves into
+the scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import KPMRing, ring_push, ring_window_mean
+from repro.kernels.tree_infer import (
+    PackedTree,
+    pack_tree,
+    tree_infer,
+    tree_infer_ref,
+)
+
+# -- device policy tables -----------------------------------------------------
+
+
+class DeviceTreePolicy(NamedTuple):
+    """A fitted decision tree as flat device arrays.
+
+    ``feature``/``threshold`` are the level-order internal-node tables
+    (children of node ``n`` are ``2n+1``/``2n+2``; go right if
+    ``x[feature] > threshold``); ``leaf_modes`` holds the int mode each of
+    the ``2**depth`` leaves decides.  ``packed`` carries the same tree as
+    the MXU operands ``repro.kernels.tree_infer`` consumes.  Depth is not
+    stored: it is recovered statically from ``feature.shape``.
+    """
+
+    feature: jax.Array  # (2**d - 1,) int32
+    threshold: jax.Array  # (2**d - 1,) float32
+    leaf_modes: jax.Array  # (2**d,) float32
+    packed: PackedTree
+
+    @property
+    def depth(self) -> int:
+        return int(self.feature.shape[0] + 1).bit_length() - 1
+
+
+class DeviceThresholdPolicy(NamedTuple):
+    """``ThresholdPolicy`` as flat device scalars (single-KPM gate + band)."""
+
+    feature_idx: jax.Array  # int32
+    lo: jax.Array  # float32 — threshold - hysteresis
+    hi: jax.Array  # float32 — threshold + hysteresis
+    mode_above: jax.Array  # int32
+    mode_below: jax.Array  # int32
+
+
+DevicePolicy = DeviceTreePolicy | DeviceThresholdPolicy
+
+
+def export_tree_tables(
+    feature: np.ndarray,
+    threshold: np.ndarray,
+    leaf_values: np.ndarray,
+    n_features: int,
+    depth: int,
+) -> DeviceTreePolicy:
+    """Densify level-order tree arrays into a ``DeviceTreePolicy``."""
+    return DeviceTreePolicy(
+        feature=jnp.asarray(feature, jnp.int32),
+        threshold=jnp.asarray(threshold, jnp.float32),
+        leaf_modes=jnp.asarray(leaf_values, jnp.float32),
+        packed=pack_tree(
+            np.asarray(feature), np.asarray(threshold), np.asarray(leaf_values),
+            n_features, depth,
+        ),
+    )
+
+
+def policy_infer(
+    policy: DevicePolicy,
+    x: jax.Array,
+    prev_mode: jax.Array,
+    *,
+    backend: str = "auto",
+) -> jax.Array:
+    """Evaluate a device policy on ``x (U, F)`` -> int32 modes ``(U,)``.
+
+    ``backend`` selects the tree evaluator: ``"pallas"`` runs the
+    ``tree_infer`` MXU kernel, ``"ref"`` the vectorized literal walk, and
+    ``"auto"`` picks pallas on TPU with the ref path as the CPU fallback.
+    Both are bitwise-equivalent (the kernel's one-hot feature gather is an
+    exact matmul); the kernel tests assert it.  ``prev_mode`` only matters
+    for the threshold policy's keep-band.
+    """
+    if isinstance(policy, DeviceThresholdPolicy):
+        v = x[:, policy.feature_idx]
+        above = v > policy.hi
+        below = v < policy.lo
+        keep = jnp.logical_not(jnp.logical_or(above, below))
+        return jnp.where(
+            keep,
+            jnp.asarray(prev_mode, jnp.int32),
+            jnp.where(above, policy.mode_above, policy.mode_below),
+        ).astype(jnp.int32)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        out = tree_infer(x.astype(jnp.float32), policy.packed)
+    elif backend == "ref":
+        out = tree_infer_ref(
+            x.astype(jnp.float32),
+            policy.feature,
+            policy.threshold,
+            policy.leaf_modes,
+            policy.depth,
+        )
+    else:
+        raise ValueError(f"unknown policy backend {backend!r}")
+    return out.astype(jnp.int32)
+
+
+# -- switch-register state ----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchConfig:
+    """Static configuration of the in-scan control loop.
+
+    ``window_slots`` mirrors the dApp's telemetry window (decision input is
+    the mean over the last ``window_slots`` slots, partial at cold start);
+    ``hysteresis_slots`` is the number of *consecutive* disagreeing raw
+    decisions required before the register is rewritten (1 == every
+    decision commits, the paper's behaviour).  Decisions are made every
+    slot; the register defers application to the next boundary regardless.
+    """
+
+    feature_names: tuple[str, ...]
+    window_slots: int = 8
+    hysteresis_slots: int = 1
+    default_mode: int = 1
+    backend: str = "auto"  # "auto" | "pallas" | "ref"
+
+    def __post_init__(self):
+        object.__setattr__(self, "feature_names", tuple(self.feature_names))
+        if self.window_slots < 1:
+            raise ValueError("window_slots must be >= 1")
+        if self.hysteresis_slots < 1:
+            raise ValueError("hysteresis_slots must be >= 1")
+
+
+class DeviceSwitchState(NamedTuple):
+    """Per-UE control-loop state riding the slot scan's carry.
+
+    ``rings`` is a ``KPMRing`` with every leaf vmapped over a leading UE
+    axis (all UEs push in lockstep, one slot per push).  ``active_mode`` is
+    what the pipeline consumes this slot; ``pending_mode`` is the switch
+    register (the mode that takes effect at the next boundary);
+    ``streak`` counts consecutive raw decisions disagreeing with the
+    register (hysteresis); ``n_switches`` counts boundary transitions.
+    """
+
+    rings: KPMRing  # buf (U, W, F) / idx (U,) / count (U,)
+    active_mode: jax.Array  # (U,) int32
+    pending_mode: jax.Array  # (U,) int32
+    streak: jax.Array  # (U,) int32
+    n_switches: jax.Array  # (U,) int32
+
+
+def init_device_switch(
+    n_ues: int, n_features: int, cfg: SwitchConfig
+) -> DeviceSwitchState:
+    d = jnp.full((n_ues,), cfg.default_mode, jnp.int32)
+    z = jnp.zeros((n_ues,), jnp.int32)
+    return DeviceSwitchState(
+        rings=KPMRing(
+            buf=jnp.zeros((n_ues, cfg.window_slots, n_features), jnp.float32),
+            idx=z,
+            count=z,
+        ),
+        active_mode=d,
+        pending_mode=d,
+        streak=z,
+        n_switches=z,
+    )
+
+
+def switch_update(
+    state: DeviceSwitchState,
+    kpm_vecs: jax.Array,
+    policy: DevicePolicy,
+    cfg: SwitchConfig,
+) -> tuple[DeviceSwitchState, jax.Array]:
+    """Decision phase of slot ``n``: window push -> policy -> register.
+
+    ``kpm_vecs (U, F)`` is slot ``n``'s telemetry in ``cfg.feature_names``
+    order.  Returns the updated state (register possibly rewritten — but
+    ``active_mode`` untouched: application waits for ``switch_boundary``)
+    and the raw per-UE policy decision.
+    """
+    rings = jax.vmap(ring_push)(state.rings, kpm_vecs)
+    window = jax.vmap(lambda r: ring_window_mean(r, cfg.window_slots))(rings)
+    raw = policy_infer(policy, window, state.pending_mode, backend=cfg.backend)
+    agree = raw == state.pending_mode
+    streak = jnp.where(agree, 0, state.streak + 1)
+    commit = streak >= jnp.int32(cfg.hysteresis_slots)
+    pending = jnp.where(commit, raw, state.pending_mode)
+    streak = jnp.where(commit, 0, streak)
+    return (
+        state._replace(rings=rings, pending_mode=pending, streak=streak),
+        raw,
+    )
+
+
+def switch_boundary(state: DeviceSwitchState) -> DeviceSwitchState:
+    """Boundary into slot ``n+1``: the register becomes the active mode."""
+    switched = (state.pending_mode != state.active_mode).astype(jnp.int32)
+    return state._replace(
+        active_mode=state.pending_mode,
+        n_switches=state.n_switches + switched,
+    )
+
+
+# -- host equivalence oracle ---------------------------------------------------
+
+
+def host_replay_closed_loop(
+    host_policy,
+    features: np.ndarray,
+    cfg: SwitchConfig,
+) -> dict[str, np.ndarray]:
+    """Replay the closed loop on host, slot by slot, per UE.
+
+    ``host_policy`` is the *host* object (``DecisionTreePolicy`` — called
+    per KPM vector, i.e. the literal ``tree_infer_ref`` walk — or
+    ``ThresholdPolicy``); ``features (S, U, F)`` is the device trajectory's
+    telemetry in ``cfg.feature_names`` order.  Windowing reuses the same
+    ``KPMRing`` arithmetic the scan carries (eagerly, one slot at a time),
+    so any float matches bitwise; the control flow (hysteresis streak,
+    switch register, boundary application) is plain Python ints.
+
+    Returns ``{"active_mode", "raw_decision", "pending_mode", "n_switches"}``
+    with ``(S, U)`` int arrays (``n_switches``: ``(U,)``).
+    """
+    from repro.core.policy import ThresholdPolicy
+    from repro.core.telemetry import ring_init
+
+    features = np.asarray(features, np.float32)
+    n_slots, n_ues, n_feat = features.shape
+    if n_feat != len(cfg.feature_names):
+        raise ValueError(
+            f"features carry {n_feat} KPMs, config names {len(cfg.feature_names)}"
+        )
+    is_threshold = isinstance(host_policy, ThresholdPolicy)
+
+    rings = [ring_init(cfg.window_slots, n_feat) for _ in range(n_ues)]
+    active = [cfg.default_mode] * n_ues
+    pending = [cfg.default_mode] * n_ues
+    streak = [0] * n_ues
+    n_switches = [0] * n_ues
+    active_hist = np.zeros((n_slots, n_ues), np.int32)
+    raw_hist = np.zeros((n_slots, n_ues), np.int32)
+    pending_hist = np.zeros((n_slots, n_ues), np.int32)
+
+    for s in range(n_slots):
+        for u in range(n_ues):
+            active_hist[s, u] = active[u]
+            rings[u] = ring_push(rings[u], jnp.asarray(features[s, u]))
+            window = ring_window_mean(rings[u], cfg.window_slots)
+            if is_threshold:
+                raw = int(host_policy(window, prev_mode=pending[u]))
+            else:
+                raw = int(host_policy(window))
+            raw_hist[s, u] = raw
+            if raw == pending[u]:
+                streak[u] = 0
+            else:
+                streak[u] += 1
+                if streak[u] >= cfg.hysteresis_slots:
+                    pending[u] = raw
+                    streak[u] = 0
+            pending_hist[s, u] = pending[u]
+            # boundary into slot s+1
+            if pending[u] != active[u]:
+                n_switches[u] += 1
+            active[u] = pending[u]
+
+    return {
+        "active_mode": active_hist,
+        "raw_decision": raw_hist,
+        "pending_mode": pending_hist,
+        "n_switches": np.asarray(n_switches, np.int32),
+    }

@@ -165,6 +165,18 @@ class DecisionTreePolicy:
         vec = jnp.asarray([float(kpms[n]) for n in self.feature_names], jnp.float32)
         return int(self(vec))
 
+    def to_device(self):
+        """Export to flat device tables for in-scan closed-loop inference."""
+        from repro.core.closed_loop import export_tree_tables
+
+        return export_tree_tables(
+            self.tree.feature,
+            self.tree.threshold,
+            self.tree.leaf_values,
+            self.tree.n_features,
+            self.tree.depth,
+        )
+
 
 @dataclasses.dataclass
 class ThresholdPolicy:
@@ -189,6 +201,58 @@ class ThresholdPolicy:
             prev,
             jnp.where(above, jnp.int32(self.mode_above), jnp.int32(self.mode_below)),
         )
+
+    def to_device(self):
+        """Export to flat device scalars for in-scan closed-loop inference."""
+        from repro.core.closed_loop import DeviceThresholdPolicy
+
+        return DeviceThresholdPolicy(
+            feature_idx=jnp.int32(self.feature_idx),
+            lo=jnp.float32(self.threshold - self.hysteresis),
+            hi=jnp.float32(self.threshold + self.hysteresis),
+            mode_above=jnp.int32(self.mode_above),
+            mode_below=jnp.int32(self.mode_below),
+        )
+
+
+# -- policy design from profiled campaigns ------------------------------------
+
+
+def profile_and_fit_tree(
+    engine,
+    schedule,
+    *,
+    n_slots: int,
+    n_ues: int,
+    depth: int = 2,
+    feature_names: Sequence[str] | None = None,
+) -> DecisionTreePolicy:
+    """Profile both experts on the batched engine and fit the switching tree.
+
+    Runs the labelled ``schedule`` once per expert mode (paper 5.3: every
+    slot under interference is labelled mode 0 / AI), stacks each campaign's
+    per-(slot, UE) KPMs into feature rows, and fits the depth-``depth`` Gini
+    tree.  Shared by the quickstart, the closed-loop benchmark and the
+    equivalence tests so they all train the same policy the same way.
+    """
+    from repro.core.telemetry import SELECTED_KPMS, trajectory_kpm_matrix
+
+    names = tuple(feature_names) if feature_names is not None else SELECTED_KPMS
+    labels = np.asarray(
+        [0 if schedule(s).interference else 1 for s in range(n_slots)]
+    )
+    X, y = [], []
+    for mode in (0, 1):
+        _, traj = engine.run(schedule, mode, n_slots=n_slots, n_ues=n_ues)
+        feats = np.asarray(trajectory_kpm_matrix(traj["kpms"], names))
+        X.append(feats.reshape(-1, feats.shape[-1]))
+        y.append(np.repeat(labels, n_ues))
+    tree = fit_decision_tree(
+        np.concatenate(X).astype(np.float32),
+        np.concatenate(y).astype(np.int32),
+        depth=depth,
+    )
+    return DecisionTreePolicy(tree, names)
 
 
 # -- Table-1 metrics -----------------------------------------------------------

@@ -63,6 +63,9 @@ class BatchedRunHistory:
     modes: np.ndarray  # (S, U) int32 — per-UE active mode each slot
     kpms: dict[str, np.ndarray]  # name -> (S, U)
     outputs: dict[str, np.ndarray]  # tb_ok / mcs / tbs / phy_bits_per_s
+    # closed-loop extras (device-decided campaigns only)
+    decisions: np.ndarray | None = None  # (S, U) raw per-slot policy output
+    n_switches: np.ndarray | None = None  # (U,) boundary transitions
 
     @classmethod
     def from_trajectory(cls, modes, traj) -> "BatchedRunHistory":
@@ -76,6 +79,33 @@ class BatchedRunHistory:
             k: np.asarray(v) for k, v in traj.items() if k != "kpms"
         }
         return cls(modes=np.asarray(modes), kpms=kpms, outputs=outputs)
+
+    @classmethod
+    def from_closed_loop(cls, traj, final_switch=None) -> "BatchedRunHistory":
+        """Build from ``BatchedPuschPipeline.run_closed_loop`` output.
+
+        ``modes`` are the *device-decided* per-slot active modes; the raw
+        per-slot policy decisions ride along (a decision at slot ``n``
+        surfaces as the active mode no earlier than slot ``n+1``).
+        """
+        from repro.core.telemetry import flatten_kpm_sources
+
+        extras = ("active_mode", "raw_decision", "pending_mode", "kpms")
+        kpms = {
+            k: np.asarray(v) for k, v in flatten_kpm_sources(traj["kpms"]).items()
+        }
+        outputs = {k: np.asarray(v) for k, v in traj.items() if k not in extras}
+        return cls(
+            modes=np.asarray(traj["active_mode"]),
+            kpms=kpms,
+            outputs=outputs,
+            decisions=np.asarray(traj["raw_decision"]),
+            n_switches=(
+                None
+                if final_switch is None
+                else np.asarray(final_switch.n_switches)
+            ),
+        )
 
     @property
     def n_slots(self) -> int:
@@ -135,28 +165,98 @@ def replay_batched_telemetry(agent: E3Agent, traj, *, n_slots: int | None = None
 
 
 class ArchesRuntime:
-    """Host-side slot loop wiring pipeline, E3 agent and switch register."""
+    """Slot loop wiring pipeline, E3 agent and switch register.
+
+    Two operating points, same policy:
+
+    * **host loop** (``run``) — the seed architecture: per-slot Python loop,
+      decisions travel E3 agent -> dApp -> control inbox and commit at the
+      next slot boundary (``SlotSwitchState``).
+    * **closed loop** (``closed_loop=True`` + ``run_batched``) — the
+      decision path is compiled *into* the batched engine's slot scan: the
+      exported policy tables evaluate on device, the switch register rides
+      the scan carry, and the whole campaign is one device round-trip.  The
+      E3 agent (if any) receives the telemetry post-run for dApp-side
+      observability; it is no longer in the decision path.  Device and host
+      loops are the same policy — the equivalence tests assert the mode
+      trajectories match bitwise.
+    """
 
     def __init__(
         self,
-        slot_fn: Callable[..., tuple[Any, Any, Mapping[str, Mapping[str, float]]]],
-        agent: E3Agent,
+        slot_fn: Callable[..., tuple[Any, Any, Mapping[str, Mapping[str, float]]]]
+        | None = None,
+        agent: E3Agent | None = None,
         *,
         default_mode: int = 1,
         fail_safe_mode: int = 1,
         ttl_slots: int = 16,
         keep_outputs: bool = False,
+        closed_loop: bool = False,
+        engine: Any = None,
+        device_policy: Any = None,
+        switch_config: Any = None,
     ):
         """``slot_fn(active_mode, carry, slot_input) ->
-        (carry, output, {source: {kpm: value}})``."""
+        (carry, output, {source: {kpm: value}})``.
+
+        With ``closed_loop=True``, ``engine`` (a ``BatchedPuschPipeline``),
+        ``device_policy`` (exported via ``DecisionTreePolicy.to_device`` /
+        ``ThresholdPolicy.to_device``) and ``switch_config`` (a
+        ``SwitchConfig``) replace ``slot_fn`` for the batched path.
+        """
+        if closed_loop and (engine is None or device_policy is None
+                            or switch_config is None):
+            raise ValueError(
+                "closed_loop=True needs engine, device_policy and switch_config"
+            )
         self.slot_fn = slot_fn
         self.agent = agent
         self.default_mode = default_mode
         self.fail_safe_mode = fail_safe_mode
         self.ttl_slots = ttl_slots
         self.keep_outputs = keep_outputs
+        self.closed_loop = closed_loop
+        self.engine = engine
+        self.device_policy = device_policy
+        self.switch_config = switch_config
+
+    def run_batched(
+        self,
+        schedule,
+        *,
+        n_slots: int,
+        n_ues: int,
+        key=None,
+        ue_keys=None,
+        replay_telemetry: bool = False,
+    ) -> BatchedRunHistory:
+        """Closed-loop batched campaign: device-decided modes, one scan.
+
+        Requires ``closed_loop=True``.  Records the device-decided per-slot
+        mode grid (plus raw decisions and per-UE switch counts) into a
+        ``BatchedRunHistory``; with ``replay_telemetry=True`` the campaign's
+        KPMs are pushed through the E3 agent post-run so host-side dApp
+        subscriptions observe the campaign unchanged.
+        """
+        if not self.closed_loop:
+            raise RuntimeError("run_batched requires closed_loop=True")
+        _, final_switch, traj = self.engine.run_closed_loop(
+            schedule,
+            self.device_policy,
+            self.switch_config,
+            n_slots=n_slots,
+            n_ues=n_ues,
+            key=key,
+            ue_keys=ue_keys,
+        )
+        if replay_telemetry and self.agent is not None:
+            replay_batched_telemetry(self.agent, traj)
+        return BatchedRunHistory.from_closed_loop(traj, final_switch)
 
     def run(self, inputs: Iterable[Any], carry: Any = None) -> RunHistory:
+        if self.slot_fn is None or self.agent is None:
+            raise RuntimeError("the host loop needs slot_fn and agent")
         state = init_switch_state(self.default_mode)
         records: list[SlotRecord] = []
         for slot, x in enumerate(inputs):

@@ -91,6 +91,12 @@ def trajectory_kpm_matrix(
     Input values are ``(n_slots, n_ues)`` (the batched engine's KPM leaves);
     output is ``(n_slots, n_ues, len(names))`` float32 — ready to reshape
     into per-sample rows for decision-tree fitting or batched inference.
+
+    Leaves may carry any leading shape: the closed-loop scan calls this on
+    a single slot's ``(n_ues,)`` leaves to build the ``(n_ues, F)`` feature
+    matrix the device policy consumes — guaranteeing the in-scan features
+    and the post-hoc host-replay features are the same stacking of the same
+    arrays.
     """
     flat = flatten_kpm_sources(kpms_by_source)
     return jnp.stack(

@@ -26,8 +26,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.closed_loop import (
+    DevicePolicy,
+    SwitchConfig,
+    init_device_switch,
+    switch_boundary,
+    switch_update,
+)
 from repro.core.expert_bank import ExecutionMode, Expert, ExpertBank
 from repro.core.methodology import perturb_estimate
+from repro.core.telemetry import trajectory_kpm_matrix
 from repro.phy import dmrs as dmrs_mod
 from repro.phy import qam
 from repro.phy.ai_estimator import AiEstimatorConfig, ai_estimate_from_ls
@@ -655,6 +663,109 @@ class BatchedPuschPipeline:
             step, (link0, jnp.int32(0)), (modes, params)
         )
         return link, traj
+
+    # -- closed-loop scan ------------------------------------------------------
+
+    def _closed_step(self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p):
+        """One closed-loop slot: boundary-committed modes in, decision out.
+
+        ``sw.active_mode`` (committed at the previous boundary) drives the
+        expert bank; this slot's KPMs are pushed into the device window, the
+        policy decides, and the register/boundary update prepares slot
+        ``slot_idx + 1``.  Shared verbatim by the scan body and the
+        python-loop debug path so the two are the same program per slot.
+        """
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
+        active = sw.active_mode
+        link, out = self._slot_core(profile, link, active, keys, p)
+        vecs = trajectory_kpm_matrix(out["kpms"], sw_cfg.feature_names)
+        sw, raw = switch_update(sw, vecs, policy, sw_cfg)
+        out = dict(
+            out,
+            active_mode=active,
+            raw_decision=raw,
+            pending_mode=sw.pending_mode,
+        )
+        sw = switch_boundary(sw)
+        return link, sw, out
+
+    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg"))
+    def _run_closed_scan(self, profile, sw_cfg, link0, sw0, ue_keys, params, policy):
+        def step(carry, p):
+            link, sw, slot_idx = carry
+            link, sw, out = self._closed_step(
+                profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p
+            )
+            return (link, sw, slot_idx + 1), out
+
+        (link, sw, _), traj = jax.lax.scan(
+            step, (link0, sw0, jnp.int32(0)), params
+        )
+        return link, sw, traj
+
+    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg"))
+    def _closed_slot_step(
+        self, profile, sw_cfg, link, sw, slot_idx, ue_keys, p, policy
+    ):
+        """One compiled closed-loop slot (python-loop debug/benchmark path)."""
+        return self._closed_step(
+            profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p
+        )
+
+    def run_closed_loop(
+        self,
+        schedule: Callable[[int], ChannelConfig],
+        policy: DevicePolicy,
+        sw_cfg: SwitchConfig,
+        *,
+        n_slots: int,
+        n_ues: int,
+        key: jax.Array | None = None,
+        ue_keys: jax.Array | None = None,
+        use_scan: bool = True,
+    ):
+        """Run a campaign with the switching decision inside the scan.
+
+        Instead of an open-loop mode schedule, each slot's ``(n_ues,)`` mode
+        vector comes from a ``DeviceSwitchState`` riding the scan carry: the
+        previous slot's KPMs (rolling window mean over
+        ``sw_cfg.window_slots`` slots) feed the exported ``policy`` tables,
+        and the decision is committed to the switch register, taking effect
+        at the next slot boundary — the whole loop is one ``lax.scan`` with
+        zero host involvement.  PRNG derivation matches ``run`` exactly, so
+        a closed-loop campaign whose decided modes happen to equal an
+        open-loop grid produces the identical trajectory.
+
+        Returns ``(final_link, final_switch_state, trajectory)``;
+        the trajectory adds ``active_mode`` / ``raw_decision`` /
+        ``pending_mode`` leaves (all ``(n_slots, n_ues)`` int32) to the
+        leaves ``run`` emits.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        if ue_keys is None:
+            ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
+                jnp.arange(n_ues)
+            )
+        elif ue_keys.shape[0] != n_ues:
+            raise ValueError(f"ue_keys {ue_keys.shape} vs n_ues {n_ues}")
+        link = init_device_link(n_ues)
+        sw = init_device_switch(n_ues, len(sw_cfg.feature_names), sw_cfg)
+        if use_scan:
+            return self._run_closed_scan(
+                profile, sw_cfg, link, sw, ue_keys, params, policy
+            )
+
+        outs = []
+        for s in range(n_slots):
+            p = jax.tree.map(lambda x: x[s], params)
+            link, sw, out = self._closed_slot_step(
+                profile, sw_cfg, link, sw, jnp.int32(s), ue_keys, p, policy
+            )
+            outs.append(out)
+        traj = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
+        return link, sw, traj
 
     # -- campaign driver -------------------------------------------------------
 

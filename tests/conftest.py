@@ -21,10 +21,6 @@ def rng():
     return np.random.default_rng(0)
 
 
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
-
-
 class _CollectFailureItem(pytest.Item):
     """Synthetic test that re-raises a module's collection error."""
 

@@ -1,0 +1,318 @@
+"""In-scan closed-loop switching == host E3/dApp loop (the equivalence suite).
+
+The paper's closed loop makes its decision host-side (dApp) and commits it at
+the next slot boundary; our scan engine compiles the same policy *into* the
+slot loop.  These tests prove the two are the same policy:
+
+* device-decided mode trajectories bitwise-match a host replay feeding the
+  identical KPM windows through ``DecisionTreePolicy`` slot by slot, per UE,
+  including hysteresis state and switch counts;
+* the Pallas ``tree_infer`` backend and the literal-walk ref backend decide
+  identically inside the scan;
+* switch-register/hysteresis semantics hold as *properties*: a decision at
+  slot ``t`` is never applied before ``t+1``, and oscillating telemetry
+  cannot flip modes faster than the hysteresis window;
+* the whole closed-loop slot loop stays one compiled ``lax.scan`` with no
+  per-slot host callbacks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import (
+    DeviceThresholdPolicy,
+    SwitchConfig,
+    host_replay_closed_loop,
+    init_device_switch,
+    switch_boundary,
+    switch_update,
+)
+from repro.core.policy import ThresholdPolicy, profile_and_fit_tree
+from repro.core.telemetry import SELECTED_KPMS, trajectory_kpm_matrix
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import BatchedPuschPipeline
+from repro.phy.scenario import good_poor_good_schedule
+
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+N_SLOTS, N_UES = 18, 3
+SCHED = good_poor_good_schedule(poor_start=6, poor_end=12)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    params = init_params(jax.random.PRNGKey(0), CFG, NET)
+    return BatchedPuschPipeline(CFG, params, net=NET)
+
+
+@pytest.fixture(scope="module")
+def tree_policy(engine):
+    """Depth-2 tree trained on profiled telemetry from both experts."""
+    return profile_and_fit_tree(engine, SCHED, n_slots=N_SLOTS, n_ues=2)
+
+
+def _campaign(engine, policy, **cfg_kw):
+    sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, **cfg_kw)
+    device = policy.to_device()
+    _, sw, traj = engine.run_closed_loop(
+        SCHED, device, sw_cfg,
+        n_slots=N_SLOTS, n_ues=N_UES, key=jax.random.PRNGKey(7),
+    )
+    return sw_cfg, sw, jax.tree.map(np.asarray, traj)
+
+
+# -- device == host replay (the paper's loop equivalence) ----------------------
+
+
+@pytest.mark.parametrize("hysteresis_slots", [1, 2])
+def test_device_matches_host_replay(engine, tree_policy, hysteresis_slots):
+    """Per-UE device mode trajectories bitwise-match the host replay.
+
+    The replay feeds the *same* telemetry (the trajectory's KPM leaves,
+    stacked in feature order) through ``DecisionTreePolicy`` — the literal
+    host tree walk — slot by slot with identical window/hysteresis/register
+    bookkeeping.  Covers hysteresis state: with ``hysteresis_slots=2`` the
+    trajectories differ from the h=1 run but still match their own replay.
+    """
+    sw_cfg, sw, traj = _campaign(
+        engine, tree_policy, window_slots=4,
+        hysteresis_slots=hysteresis_slots, backend="ref",
+    )
+    feats = np.asarray(trajectory_kpm_matrix(traj["kpms"], SELECTED_KPMS))
+    replay = host_replay_closed_loop(tree_policy, feats, sw_cfg)
+    np.testing.assert_array_equal(traj["active_mode"], replay["active_mode"])
+    np.testing.assert_array_equal(traj["raw_decision"], replay["raw_decision"])
+    np.testing.assert_array_equal(traj["pending_mode"], replay["pending_mode"])
+    np.testing.assert_array_equal(np.asarray(sw.n_switches), replay["n_switches"])
+    # non-vacuous: the policy actually switched during the poor phase
+    assert replay["n_switches"].sum() > 0
+    assert (traj["active_mode"] == 0).any() and (traj["active_mode"] == 1).any()
+
+
+def test_closed_loop_tracks_conditions(engine, tree_policy):
+    """Device-decided modes select AI (0) in the poor phase, MMSE before it."""
+    _, _, traj = _campaign(engine, tree_policy, window_slots=2)
+    modes = traj["active_mode"]
+    # decisions lag the phase edge by the window + one boundary slot
+    assert (modes[:4] == 1).all(), "good#1 phase should stay on MMSE"
+    assert (modes[9:12] == 0).mean() > 0.5, "poor phase should move to AI"
+
+
+def test_threshold_policy_device_matches_host(engine):
+    """The threshold-gate export (prev-mode keep-band) replays bitwise too."""
+    policy = ThresholdPolicy(
+        feature_idx=SELECTED_KPMS.index("snr"), threshold=18.0, hysteresis=2.0
+    )
+    sw_cfg, sw, traj = _campaign(engine, policy, window_slots=3)
+    feats = np.asarray(trajectory_kpm_matrix(traj["kpms"], SELECTED_KPMS))
+    replay = host_replay_closed_loop(policy, feats, sw_cfg)
+    np.testing.assert_array_equal(traj["active_mode"], replay["active_mode"])
+    np.testing.assert_array_equal(traj["raw_decision"], replay["raw_decision"])
+    np.testing.assert_array_equal(np.asarray(sw.n_switches), replay["n_switches"])
+
+
+def test_pallas_backend_matches_ref_in_scan(engine, tree_policy):
+    """The MXU tree kernel and the literal walk decide identically in-scan."""
+    _, _, ref = _campaign(engine, tree_policy, window_slots=4, backend="ref")
+    _, _, pal = _campaign(engine, tree_policy, window_slots=4, backend="pallas")
+    np.testing.assert_array_equal(ref["active_mode"], pal["active_mode"])
+    np.testing.assert_array_equal(ref["raw_decision"], pal["raw_decision"])
+
+
+def test_scan_equals_python_loop(engine, tree_policy):
+    """The compiled scan and the per-slot jitted loop are the same program."""
+    sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=3)
+    device = tree_policy.to_device()
+    kw = dict(n_slots=10, n_ues=2, key=jax.random.PRNGKey(5))
+    _, sw_a, ta = engine.run_closed_loop(SCHED, device, sw_cfg, use_scan=True, **kw)
+    _, sw_b, tb = engine.run_closed_loop(SCHED, device, sw_cfg, use_scan=False, **kw)
+    ta, tb = jax.tree.map(np.asarray, ta), jax.tree.map(np.asarray, tb)
+    np.testing.assert_array_equal(ta["active_mode"], tb["active_mode"])
+    np.testing.assert_array_equal(ta["raw_decision"], tb["raw_decision"])
+    np.testing.assert_array_equal(
+        np.asarray(sw_a.n_switches), np.asarray(sw_b.n_switches)
+    )
+    np.testing.assert_allclose(
+        ta["kpms"]["aerial"]["sinr"], tb["kpms"]["aerial"]["sinr"],
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_no_host_callbacks_in_scan(engine, tree_policy):
+    """The whole closed loop compiles as lax.scan — no per-slot host hops."""
+    from repro.phy.channel import channel_params_schedule
+    from repro.phy.pipeline import init_device_link
+
+    sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=3)
+    device = tree_policy.to_device()
+    n_slots, n_ues = 6, 2
+    profile, params = channel_params_schedule(CFG, SCHED, n_slots)
+    link0 = init_device_link(n_ues)
+    sw0 = init_device_switch(n_ues, len(SELECTED_KPMS), sw_cfg)
+    ue_keys = jax.random.split(jax.random.PRNGKey(1), n_ues)
+    jaxpr = jax.make_jaxpr(
+        lambda l, s, k, p, d: engine._run_closed_scan(
+            profile, sw_cfg, l, s, k, p, d
+        )
+    )(link0, sw0, ue_keys, params, device)
+    txt = str(jaxpr)
+    assert "scan[" in txt
+    for prim in ("pure_callback", "io_callback", "python_callback", "callback["):
+        assert prim not in txt, f"host callback {prim} inside the slot scan"
+
+
+# -- runtime integration -------------------------------------------------------
+
+
+def test_runtime_closed_loop_records_device_modes(engine, tree_policy):
+    """ArchesRuntime(closed_loop=True) lands device decisions in the history."""
+    from repro.core.e3 import E3Agent, E3Subscription
+    from repro.core.runtime import ArchesRuntime
+
+    sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=4)
+    device = tree_policy.to_device()
+    agent = E3Agent()
+    seen = []
+    agent.subscribe(E3Subscription(callback=seen.append))
+    runtime = ArchesRuntime(
+        agent=agent, closed_loop=True, engine=engine,
+        device_policy=device, switch_config=sw_cfg,
+    )
+    hist = runtime.run_batched(
+        SCHED, n_slots=N_SLOTS, n_ues=N_UES,
+        key=jax.random.PRNGKey(7), replay_telemetry=True,
+    )
+    # the history's modes are the device-decided active modes of the scan
+    _, sw, traj = engine.run_closed_loop(
+        SCHED, device, sw_cfg,
+        n_slots=N_SLOTS, n_ues=N_UES, key=jax.random.PRNGKey(7),
+    )
+    np.testing.assert_array_equal(hist.modes, np.asarray(traj["active_mode"]))
+    np.testing.assert_array_equal(
+        hist.decisions, np.asarray(traj["raw_decision"])
+    )
+    np.testing.assert_array_equal(hist.n_switches, np.asarray(sw.n_switches))
+    assert hist.per_ue(0)[0].active_mode == 1  # cold start on the default
+    assert len(seen) == N_SLOTS * 2  # aerial + oai replayed post-run
+
+
+def test_runtime_closed_loop_validation(engine):
+    from repro.core.runtime import ArchesRuntime
+
+    with pytest.raises(ValueError, match="closed_loop"):
+        ArchesRuntime(closed_loop=True)
+    rt = ArchesRuntime(slot_fn=lambda *a: None, agent=None)
+    with pytest.raises(RuntimeError, match="closed_loop"):
+        rt.run_batched(SCHED, n_slots=2, n_ues=1)
+
+
+# -- switch-register / hysteresis properties (no pipeline) ---------------------
+
+
+def _gate(threshold=0.0):
+    """Single-feature gate: x > thr -> mode 1, else mode 0 (no keep-band)."""
+    return DeviceThresholdPolicy(
+        feature_idx=jnp.int32(0),
+        lo=jnp.float32(threshold),
+        hi=jnp.float32(threshold),
+        mode_above=jnp.int32(1),
+        mode_below=jnp.int32(0),
+    )
+
+
+def _drive(feature_stream, *, hysteresis_slots, default_mode=1, window_slots=1):
+    """Run the register state machine over a synthetic per-slot feature.
+
+    ``feature_stream``: (S,) — one scalar KPM, one UE.  Returns per-slot
+    (active, raw, pending) int arrays.
+    """
+    cfg = SwitchConfig(
+        feature_names=("f",),
+        window_slots=window_slots,
+        hysteresis_slots=hysteresis_slots,
+        default_mode=default_mode,
+    )
+    state = init_device_switch(1, 1, cfg)
+    policy = _gate()
+    active, raw_h, pending = [], [], []
+    for v in feature_stream:
+        active.append(int(state.active_mode[0]))
+        state, raw = switch_update(
+            state, jnp.asarray([[v]], jnp.float32), policy, cfg
+        )
+        raw_h.append(int(raw[0]))
+        pending.append(int(state.pending_mode[0]))
+        state = switch_boundary(state)
+    return (
+        np.asarray(active),
+        np.asarray(raw_h),
+        np.asarray(pending),
+        int(state.n_switches[0]),
+    )
+
+
+def test_decision_never_applied_before_next_slot(rng):
+    """Property: active mode at slot t is the register committed before t.
+
+    Whatever the telemetry does, slot t's decision can only surface at
+    t+1 or later — the no-mid-slot-corruption contract at the boundary.
+    """
+    for trial in range(5):
+        stream = rng.normal(size=30)
+        for h in (1, 2, 3):
+            active, _, pending, _ = _drive(stream, hysteresis_slots=h)
+            assert active[0] == 1  # cold start: the default, no decision yet
+            # active mode of slot t+1 is exactly the register after slot t
+            np.testing.assert_array_equal(active[1:], pending[:-1])
+
+
+def test_oscillation_cannot_beat_hysteresis_window(rng):
+    """Property: alternating telemetry never flips the mode when h >= 2.
+
+    The raw decision flips every slot, so the disagreement streak resets
+    before reaching the hysteresis window — the register (and therefore the
+    active mode) stays put.  With h=1 the same stream flaps maximally.
+    """
+    stream = np.where(np.arange(40) % 2 == 0, 5.0, -5.0)  # raw: 1,0,1,0,...
+    for h in (2, 3, 5):
+        active, raw, _, n_switches = _drive(stream, hysteresis_slots=h)
+        assert set(np.unique(raw)) == {0, 1}  # the policy itself oscillates
+        assert n_switches == 0, f"h={h} must suppress flapping"
+        assert (active == 1).all()
+    active, _, _, n_switches = _drive(stream, hysteresis_slots=1)
+    assert n_switches > 30  # h=1: every decision commits, maximal flapping
+
+
+def test_sustained_change_commits_after_exactly_h_slots():
+    """A persistent condition change flips the register after h disagreeing
+    decisions, and the active mode one boundary later."""
+    flip_at = 10
+    stream = np.where(np.arange(25) < flip_at, 5.0, -5.0)  # mode 1 -> 0
+    for h in (1, 2, 4):
+        active, raw, pending, n_switches = _drive(stream, hysteresis_slots=h)
+        # raw flips at slot `flip_at`; the register needs h such slots
+        commit_slot = flip_at + h - 1
+        assert (pending[:commit_slot] == 1).all()
+        assert (pending[commit_slot:] == 0).all()
+        # ...and the active mode follows one slot boundary later
+        assert (active[: commit_slot + 1] == 1).all()
+        assert (active[commit_slot + 1 :] == 0).all()
+        assert n_switches == 1
+
+
+def test_window_mean_feeds_the_policy(rng):
+    """window_slots > 1 decides on the rolling mean, not the instant value."""
+    # one outlier inside an otherwise-high stream: with a 4-slot window the
+    # mean stays above threshold and the mode never leaves 1
+    stream = np.full(16, 4.0)
+    stream[8] = -6.0  # instant gate would say 0; mean (4*3-6)/4 = 1.5 > 0
+    active, raw, _, n_switches = _drive(
+        stream, hysteresis_slots=1, window_slots=4
+    )
+    assert n_switches == 0 and (active == 1).all() and (raw == 1).all()
+    # the same stream through a 1-slot window does react
+    _, raw1, _, n1 = _drive(stream, hysteresis_slots=1, window_slots=1)
+    assert raw1[8] == 0 and n1 == 2  # out and back

@@ -12,8 +12,9 @@ from repro.core.policy import (
 )
 
 
-def test_depth1_matches_brute_force(rng):
+def test_depth1_matches_brute_force():
     """Depth-1 tree must find the single best Gini threshold."""
+    rng = np.random.default_rng(101)  # explicit: tree fitting must be deterministic
     x = rng.normal(size=(200, 3)).astype(np.float32)
     y = (x[:, 1] > 0.37).astype(np.int32)
     tree = fit_decision_tree(x, y, depth=1)
@@ -24,8 +25,9 @@ def test_depth1_matches_brute_force(rng):
     assert (pred == y).mean() == 1.0
 
 
-def test_depth2_xor_structure(rng):
+def test_depth2_xor_structure():
     """Depth-2 tree separates an axis-aligned 2-split problem perfectly."""
+    rng = np.random.default_rng(102)
     x = rng.uniform(-1, 1, size=(500, 2)).astype(np.float32)
     y = ((x[:, 0] > 0) & (x[:, 1] > 0)).astype(np.int32)
     tree = fit_decision_tree(x, y, depth=2)
@@ -34,7 +36,8 @@ def test_depth2_xor_structure(rng):
     assert (pred == y).mean() >= 0.99
 
 
-def test_importances_normalized(rng):
+def test_importances_normalized():
+    rng = np.random.default_rng(103)
     x = rng.normal(size=(300, 4)).astype(np.float32)
     y = (x[:, 2] > 0).astype(np.int32)
     tree = fit_decision_tree(x, y, depth=2)
@@ -62,8 +65,9 @@ def test_classification_metrics_hand_check():
     assert m["f1"] == pytest.approx(2 / 3)
 
 
-def test_tree_beats_majority_baseline_property(rng):
+def test_tree_beats_majority_baseline_property():
     """Property: fitted tree's train accuracy >= majority-class baseline."""
+    rng = np.random.default_rng(104)
     for trial in range(10):
         n = int(rng.integers(40, 300))
         f = int(rng.integers(1, 8))
@@ -77,7 +81,8 @@ def test_tree_beats_majority_baseline_property(rng):
         assert acc >= baseline - 1e-9, f"trial {trial}: {acc} < {baseline}"
 
 
-def test_single_equals_batch_property(rng):
+def test_single_equals_batch_property():
+    rng = np.random.default_rng(105)
     x = rng.normal(size=(100, 6)).astype(np.float32)
     y = (x[:, 0] * x[:, 3] > 0).astype(np.int32)
     tree = fit_decision_tree(x, y, depth=3)

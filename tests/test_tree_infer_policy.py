@@ -1,0 +1,167 @@
+"""Policy-level parity of the exported tree tables through ``tree_infer``.
+
+``test_kernel_tree_infer`` checks the Pallas kernel against the jnp walk;
+this suite closes the remaining gap to the *policy* layer: the flat device
+tables exported by ``DecisionTreePolicy.to_device`` must reproduce
+``FittedTree`` predictions exactly — checked against an independent pure
+Python node-by-node descent (not ``tree_infer_ref``) on randomized feature
+grids, through both evaluator backends, including degenerate trees (single
+leaf, all-one-side splits) and exact-threshold inputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import export_tree_tables, policy_infer
+from repro.core.policy import DecisionTreePolicy, FittedTree, fit_decision_tree
+
+
+def _python_walk(feature, threshold, leaf_values, depth, x):
+    """Independent oracle: literal per-row, per-level tree descent."""
+    out = np.zeros(x.shape[0], np.int32)
+    for i, row in enumerate(x):
+        node = 0
+        for _ in range(depth):
+            go_right = row[feature[node]] > threshold[node]
+            node = 2 * node + 1 + int(go_right)
+        out[i] = int(leaf_values[node - (2**depth - 1)])
+    return out
+
+
+def _assert_tables_match(tree: FittedTree, x: np.ndarray):
+    device = export_tree_tables(
+        tree.feature, tree.threshold, tree.leaf_values, tree.n_features, tree.depth
+    )
+    want = _python_walk(
+        tree.feature, tree.threshold, tree.leaf_values, tree.depth, x
+    )
+    prev = jnp.zeros((x.shape[0],), jnp.int32)
+    for backend in ("ref", "pallas"):
+        got = np.asarray(
+            policy_infer(device, jnp.asarray(x), prev, backend=backend)
+        )
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+def _manual_tree(feature, threshold, leaf_values, n_features) -> FittedTree:
+    feature = np.asarray(feature, np.int32)
+    depth = int(feature.shape[0] + 1).bit_length() - 1
+    return FittedTree(
+        feature=feature,
+        threshold=np.asarray(threshold, np.float32),
+        leaf_values=np.asarray(leaf_values, np.float32),
+        depth=depth,
+        n_features=n_features,
+        importances=np.zeros(n_features, np.float32),
+    )
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 4])
+@pytest.mark.parametrize("f", [1, 4, 10])
+def test_fitted_tree_parity_random_grids(depth, f):
+    """Fitted trees: device tables == python walk on randomized grids."""
+    rng = np.random.default_rng(depth * 100 + f)
+    x = rng.normal(size=(240, f)).astype(np.float32)
+    w = rng.normal(size=f)
+    y = (x @ w > 0).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=depth)
+    grid = rng.normal(size=(500, f)).astype(np.float32) * 2.0
+    _assert_tables_match(tree, grid)
+
+
+def test_exhaustive_parity_on_threshold_lattice():
+    """Every path of a depth-2 tree, including x exactly AT each threshold.
+
+    Strict-``>`` semantics: a feature equal to the split threshold goes
+    left in the python walk, the ref walk and the MXU kernel alike.
+    """
+    rng = np.random.default_rng(42)
+    tree = _manual_tree(
+        feature=[0, 1, 0],
+        threshold=[0.5, -1.0, 2.0],
+        leaf_values=[0, 1, 1, 0],
+        n_features=2,
+    )
+    # lattice around every threshold (below / exactly-at / above) x both axes
+    pts = np.asarray([-1.0 - 1e-3, -1.0, -1.0 + 1e-3, 0.5 - 1e-3, 0.5,
+                      0.5 + 1e-3, 2.0 - 1e-3, 2.0, 2.0 + 1e-3], np.float32)
+    xv, yv = np.meshgrid(pts, pts)
+    grid = np.stack([xv.ravel(), yv.ravel()], axis=1)
+    _assert_tables_match(tree, grid)
+    # plus random noise rows for good measure
+    _assert_tables_match(tree, rng.normal(size=(300, 2)).astype(np.float32))
+
+
+def test_single_leaf_tree():
+    """Pure training data -> every threshold +inf -> constant prediction."""
+    x = np.ones((30, 3), np.float32)
+    y = np.ones(30, np.int32)
+    tree = fit_decision_tree(x, y, depth=2)
+    assert not np.isfinite(tree.threshold).any()
+    rng = np.random.default_rng(3)
+    grid = rng.normal(size=(200, 3)).astype(np.float32) * 10
+    _assert_tables_match(tree, grid)
+    device = export_tree_tables(
+        tree.feature, tree.threshold, tree.leaf_values, 3, 2
+    )
+    got = policy_infer(device, jnp.asarray(grid), jnp.zeros(200, jnp.int32))
+    assert (np.asarray(got) == 1).all()
+
+
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_all_one_side_splits(side):
+    """Degenerate chains: every split sends every sample the same way."""
+    thr = np.float32(np.inf) if side == "left" else np.float32(-np.inf)
+    # depth 3, all nodes pass through to one side; distinct leaf values mark
+    # which leaf actually fires
+    tree = _manual_tree(
+        feature=np.zeros(7, np.int32),
+        threshold=np.full(7, thr),
+        leaf_values=np.arange(8, dtype=np.float32),
+        n_features=2,
+    )
+    rng = np.random.default_rng(9)
+    grid = rng.normal(size=(128, 2)).astype(np.float32)
+    want_leaf = 0 if side == "left" else 7
+    want = _python_walk(
+        tree.feature, tree.threshold, tree.leaf_values, 3, grid
+    )
+    assert (want == want_leaf).all()
+    _assert_tables_match(tree, grid)
+
+
+def test_mixed_passthrough_tree():
+    """Half the nodes pass-through (trainer-style +inf), half split."""
+    rng = np.random.default_rng(17)
+    for trial in range(8):
+        depth = int(rng.integers(2, 5))
+        f = int(rng.integers(2, 8))
+        n_nodes, n_leaves = 2**depth - 1, 2**depth
+        feature = rng.integers(0, f, size=n_nodes).astype(np.int32)
+        threshold = rng.normal(size=n_nodes).astype(np.float32)
+        threshold[rng.random(n_nodes) < 0.4] = np.inf
+        leaf_values = rng.integers(0, 3, size=n_leaves).astype(np.float32)
+        tree = _manual_tree(feature, threshold, leaf_values, f)
+        grid = rng.normal(size=(150, f)).astype(np.float32)
+        _assert_tables_match(tree, grid)
+
+
+def test_to_device_matches_host_policy_calls():
+    """DecisionTreePolicy.to_device == the host policy object, row by row."""
+    rng = np.random.default_rng(23)
+    x = rng.normal(size=(150, 5)).astype(np.float32)
+    y = ((x[:, 1] > 0.2) | (x[:, 3] < -0.4)).astype(np.int32)
+    tree = fit_decision_tree(x, y, depth=3)
+    policy = DecisionTreePolicy(tree, [f"f{i}" for i in range(5)])
+    device = policy.to_device()
+    grid = rng.normal(size=(80, 5)).astype(np.float32)
+    host = np.asarray([int(policy(jnp.asarray(row))) for row in grid])
+    got = np.asarray(
+        policy_infer(device, jnp.asarray(grid), jnp.zeros(80, jnp.int32))
+    )
+    np.testing.assert_array_equal(got, host)
+    # the batched host path agrees too
+    np.testing.assert_array_equal(
+        np.asarray(policy.batch(jnp.asarray(grid))), host
+    )
