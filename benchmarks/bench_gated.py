@@ -1,0 +1,154 @@
+"""Compaction-gated execution: compute that scales with the AI share.
+
+The concurrent bank pays for every expert on every UE every slot — a fleet
+where 1-in-16 UEs needs AI costs the same as all-AI.  The gated path runs
+the folded-GEMM AI forward only on a dense capacity-K sub-batch of the UEs
+that selected it (MMSE stays dense as the fail-safe baseline, the fused
+scatter pass un-compacts), so the slot scan's wall time and the
+executed-FLOPs proxy both track the realized expert mix — the
+performance-per-watt tradeoff of the paper's Fig. 11, now as a measured
+scan-engine property.
+
+Every invocation asserts (a) the gated scan is bitwise-equal to the
+concurrent scan on the same mode grid and (b) executed FLOPs at AI share 0
+equal the MMSE-only cost model — so the benchmark doubles as the CI smoke
+check for the gated path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import NET, SLOT_CFG, fmt_row, get_ai_params
+from repro.core.expert_bank import ExecutionMode
+from repro.core.telemetry import physical_trajectory
+from repro.phy.estimators import estimator_flops
+from repro.phy.pipeline import BatchedPuschPipeline
+from repro.phy.scenario import good_poor_good_schedule
+
+
+def _mode_grid(n_slots: int, n_ues: int, n_ai: int) -> np.ndarray:
+    """Open-loop grid: the first ``n_ai`` UEs run AI, the rest MMSE."""
+    modes = np.ones((n_slots, n_ues), np.int32)
+    modes[:, :n_ai] = 0
+    return modes
+
+
+def _timed(fn):
+    out = fn()  # warm/compile
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0, out
+
+
+def run(
+    n_slots: int = 60,
+    n_ues: int = 16,
+    shares: tuple[float, ...] = (0.0, 1.0 / 16.0, 0.5, 1.0),
+) -> dict:
+    """Gated vs concurrent slot scan across AI shares.
+
+    Capacity is provisioned at the realized per-slot AI count (the
+    operator's knob; overflow policy is exercised by the tests, not here),
+    so provisioned == executed and the wall-time ratio isolates the
+    compute-scaling win.
+    """
+    params, _ = get_ai_params()
+    schedule = good_poor_good_schedule(
+        poor_start=n_slots // 3, poor_end=2 * n_slots // 3
+    )
+    ue_keys = jax.random.split(jax.random.PRNGKey(123), n_ues)
+    conc = BatchedPuschPipeline(SLOT_CFG, params, net=NET)
+    f_mmse = estimator_flops(SLOT_CFG)
+    f_ai = NET.flops(SLOT_CFG)
+
+    print("\n== Compaction-gated expert execution ==")
+    print(fmt_row("AI share", "concurrent", "gated", "speedup",
+                  "exec GFLOP/slot", "overflow"))
+    results: dict[str, dict] = {}
+    for share in shares:
+        # ceil so a nonzero share always gets >= 1 AI UE (round() would
+        # collapse 1/16 of 8 UEs onto the share-0 row)
+        n_ai = int(np.ceil(share * n_ues))
+        modes = _mode_grid(n_slots, n_ues, n_ai)
+        gated = BatchedPuschPipeline(
+            SLOT_CFG, params, net=NET,
+            execution_mode=ExecutionMode.GATED, gated_capacity=n_ai,
+        )
+        t_conc, traj_c = _timed(lambda: conc.run(
+            schedule, modes, n_slots=n_slots, n_ues=n_ues, ue_keys=ue_keys
+        )[1])
+        t_gated, traj_g = _timed(lambda: gated.run(
+            schedule, modes, n_slots=n_slots, n_ues=n_ues, ue_keys=ue_keys
+        )[1])
+
+        # contract 1: gated == concurrent, bitwise, on every physical leaf
+        eq = jax.tree.map(
+            lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+            physical_trajectory(traj_c), physical_trajectory(traj_g),
+        )
+        if not all(jax.tree.leaves(eq)):
+            bad = [k for k, v in eq.items() if not all(jax.tree.leaves(v))]
+            raise AssertionError(f"gated != concurrent at share {share}: {bad}")
+
+        flops_slot = float(
+            np.asarray(traj_g["executed_flops"], np.float64).sum(axis=1).mean()
+        )
+        expected = n_ai * f_ai + n_ues * f_mmse
+        if not np.isclose(flops_slot, expected, rtol=1e-6):
+            raise AssertionError(
+                f"executed FLOPs {flops_slot:.4g} != cost model {expected:.4g}"
+            )
+        if share == 0.0 and not np.isclose(
+            flops_slot, n_ues * f_mmse, rtol=1e-6
+        ):
+            raise AssertionError("share-0 executed FLOPs != MMSE-only model")
+        overflow = int(np.asarray(traj_g["gated_overflow"]).sum())
+        if overflow:
+            raise AssertionError(
+                f"unexpected overflow at provisioned capacity: {overflow}"
+            )
+
+        rate_c = n_slots * n_ues / t_conc
+        rate_g = n_slots * n_ues / t_gated
+        speedup = t_conc / t_gated
+        print(fmt_row(f"{share:.4g} ({n_ai}/{n_ues})",
+                      f"{rate_c:.1f} slot-UEs/s",
+                      f"{rate_g:.1f} slot-UEs/s",
+                      f"{speedup:.2f}x",
+                      f"{flops_slot / 1e9:.3f}",
+                      overflow))
+        results[f"{share:.4g}"] = {
+            "n_ai": n_ai,
+            "concurrent_slot_ues_per_s": rate_c,
+            "gated_slot_ues_per_s": rate_g,
+            "speedup": speedup,
+            "executed_flops_per_slot": flops_slot,
+            "provisioned_flops_per_slot": gated.bank.provisioned_flops(n_ues),
+            "bitwise_equal": True,
+        }
+
+    # linearity of the executed-FLOPs accounting in the AI share
+    xs = np.asarray([results[k]["n_ai"] for k in results], np.float64)
+    ys = np.asarray(
+        [results[k]["executed_flops_per_slot"] for k in results], np.float64
+    )
+    lin = np.allclose(ys, n_ues * f_mmse + xs * f_ai, rtol=1e-6)
+    print(fmt_row("executed-FLOPs linear in share", "yes" if lin else "NO"))
+    if not lin:
+        raise AssertionError("executed-FLOPs accounting is not linear")
+    return {
+        "n_slots": n_slots,
+        "n_ues": n_ues,
+        "by_share": results,
+        "flops_linear_in_share": lin,
+    }
+
+
+if __name__ == "__main__":
+    run()

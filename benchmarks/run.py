@@ -1,20 +1,56 @@
 """Benchmark driver: one section per paper table/figure + roofline.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
+                                                [--json BENCH_<tag>.json]
 
-``--smoke`` is the CI fast path: tiny expert training, three sections only
+``--smoke`` is the CI fast path: tiny expert training, four sections only
 (switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
-equivalence), exits non-zero on any failure.  Finishes in minutes where the
-full sweep takes an hour.
+equivalence + gated-execution contract), exits non-zero on any failure.
+Finishes in minutes where the full sweep takes an hour.
+
+``--json PATH`` additionally writes a machine-readable perf snapshot —
+slot-UEs/s, in-scan decision latency, and executed-FLOPs-per-slot across AI
+shares {0, 1/16, 1/2, 1} — so the repo's bench trajectory accumulates
+across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 import traceback
+
+
+def _json_payload(outs: dict) -> dict:
+    """Assemble the perf-trajectory snapshot from section outputs."""
+    payload: dict = {"schema": "arches-bench-v1", "time": time.strftime(
+        "%Y-%m-%dT%H:%M:%S")}
+    batched = outs.get("batched")
+    if batched:
+        payload["slot_ues_per_s"] = {
+            "host_loop": batched["host_rate"],
+            "scan_engine": batched["batched_rate"],
+            "speedup": batched["speedup"],
+        }
+    in_scan = outs.get("in_scan")
+    if in_scan:
+        payload["in_scan_decision_us_per_slot"] = in_scan["decide_us_per_slot"]
+        payload["closed_loop_slot_ues_per_s"] = in_scan["closed_rate"]
+    gated = outs.get("gated")
+    if gated:
+        payload["gated"] = {
+            share: {
+                "executed_flops_per_slot": row["executed_flops_per_slot"],
+                "gated_slot_ues_per_s": row["gated_slot_ues_per_s"],
+                "concurrent_slot_ues_per_s": row["concurrent_slot_ues_per_s"],
+                "speedup_vs_concurrent": row["speedup"],
+            }
+            for share, row in gated["by_share"].items()
+        }
+    return payload
 
 
 def main() -> None:
@@ -23,6 +59,8 @@ def main() -> None:
                     help="smaller sweeps")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal CI smoke check (switch + batched engine)")
+    ap.add_argument("--json", default=None, metavar="BENCH_<tag>.json",
+                    help="write a machine-readable perf snapshot")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
 
@@ -33,6 +71,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_control_loop,
+        bench_gated,
         bench_kpm_cdfs,
         bench_methodology,
         bench_policy,
@@ -42,39 +81,51 @@ def main() -> None:
         roofline,
     )
 
+    # (key, title, fn, kwargs): ``key`` names the section's output for the
+    # --json payload (None == not part of the snapshot).
     if args.smoke:
         sections = [
-            ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
-            ("Batched multi-UE engine (smoke)", bench_timeseries.run_batched,
+            (None, "Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
+            ("batched", "Batched multi-UE engine (smoke)",
+             bench_timeseries.run_batched,
              {"n_slots": 24, "n_ues": 4, "host_probe_slots": 6,
               "check_identity": False}),
             # tiny policy, 8 slots: raises unless device-decided modes
             # bitwise-match the host replay (the loop-equivalence contract)
-            ("Closed-loop equivalence (smoke)", bench_control_loop.run_in_scan,
+            ("in_scan", "Closed-loop equivalence (smoke)",
+             bench_control_loop.run_in_scan,
              {"n_slots": 8, "n_ues": 2, "window_slots": 2}),
+            # raises unless gated == concurrent bitwise and executed FLOPs
+            # at AI share 0 equal the MMSE-only cost model
+            ("gated", "Gated execution (smoke)", bench_gated.run,
+             {"n_slots": 16, "n_ues": 4, "shares": (0.0, 0.25, 1.0)}),
         ]
     else:
         sections = [
-            ("Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
-            ("6.1     control-loop latency", None, {}),  # uses Fig. 8 stats
-            ("Fig. 4+5 policy-design methodology", bench_methodology.run,
+            (None, "Fig. 8  switching-mechanism runtimes", bench_switch.run, {}),
+            (None, "6.1     control-loop latency", None, {}),  # uses Fig. 8
+            (None, "Fig. 4+5 policy-design methodology", bench_methodology.run,
              {"n_trials": 2 if args.fast else 4,
               "rho_step": 0.5 if args.fast else 0.2}),
-            ("Table 1 decision-tree performance", bench_policy.run, {}),
-            ("Fig. 9  throughput time series", bench_timeseries.run,
+            (None, "Table 1 decision-tree performance", bench_policy.run, {}),
+            (None, "Fig. 9  throughput time series", bench_timeseries.run,
              {"n_phase": 10 if args.fast else None}),
-            ("Batched multi-UE engine", bench_timeseries.run_batched,
+            ("batched", "Batched multi-UE engine", bench_timeseries.run_batched,
              {"n_slots": 60 if args.fast else 100,
               "n_ues": 8 if args.fast else 16}),
-            ("Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
-            ("Fig. 11 GPU resources proxy", bench_resources.run, {}),
-            ("Roofline (from dry-run)", roofline.run,
+            ("gated", "Gated expert execution", bench_gated.run,
+             {"n_slots": 30 if args.fast else 60,
+              "n_ues": 8 if args.fast else 16}),
+            (None, "Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
+            (None, "Fig. 11 GPU resources proxy", bench_resources.run, {}),
+            (None, "Roofline (from dry-run)", roofline.run,
              {"path": args.dryrun_json}),
         ]
 
     results, failures = {}, []
+    json_outs: dict = {}
     switch_stats = None
-    for title, fn, kw in sections:
+    for key, title, fn, kw in sections:
         print("\n" + "=" * 78)
         print("##", title)
         print("=" * 78)
@@ -82,10 +133,16 @@ def main() -> None:
         try:
             if title.startswith("6.1"):
                 out = bench_control_loop.run(switch_stats)
+                json_outs["in_scan"] = {
+                    f.removeprefix("in_scan_"): v
+                    for f, v in out.items() if f.startswith("in_scan_")
+                }
             else:
                 out = fn(**kw)
             if title.startswith("Fig. 8"):
                 switch_stats = out
+            if key is not None:
+                json_outs[key] = out
             results[title] = "ok"
         except Exception:
             traceback.print_exc()
@@ -97,6 +154,14 @@ def main() -> None:
     print("## Summary")
     for title, status in results.items():
         print(f"  {status:7s} {title}")
+
+    if args.json:
+        payload = _json_payload(json_outs)
+        payload["failures"] = failures
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\nwrote perf snapshot -> {args.json}")
+
     if failures:
         sys.exit(1)
 

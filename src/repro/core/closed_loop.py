@@ -157,13 +157,17 @@ class SwitchConfig:
     the mean over the last ``window_slots`` slots, partial at cold start);
     ``hysteresis_slots`` is the number of *consecutive* disagreeing raw
     decisions required before the register is rewritten (1 == every
-    decision commits, the paper's behaviour).  Decisions are made every
-    slot; the register defers application to the next boundary regardless.
+    decision commits, the paper's behaviour).  ``period_slots`` mirrors the
+    dApp's decision periodicity: the policy is evaluated on slots where
+    ``slot % period_slots == 0`` and the register holds its value in
+    between (telemetry keeps accumulating every slot).  The register defers
+    application to the next boundary regardless.
     """
 
     feature_names: tuple[str, ...]
     window_slots: int = 8
     hysteresis_slots: int = 1
+    period_slots: int = 1
     default_mode: int = 1
     backend: str = "auto"  # "auto" | "pallas" | "ref"
 
@@ -173,6 +177,8 @@ class SwitchConfig:
             raise ValueError("window_slots must be >= 1")
         if self.hysteresis_slots < 1:
             raise ValueError("hysteresis_slots must be >= 1")
+        if self.period_slots < 1:
+            raise ValueError("period_slots must be >= 1")
 
 
 class DeviceSwitchState(NamedTuple):
@@ -216,6 +222,8 @@ def switch_update(
     kpm_vecs: jax.Array,
     policy: DevicePolicy,
     cfg: SwitchConfig,
+    *,
+    decide: jax.Array | bool = True,
 ) -> tuple[DeviceSwitchState, jax.Array]:
     """Decision phase of slot ``n``: window push -> policy -> register.
 
@@ -223,6 +231,13 @@ def switch_update(
     order.  Returns the updated state (register possibly rewritten — but
     ``active_mode`` untouched: application waits for ``switch_boundary``)
     and the raw per-UE policy decision.
+
+    ``decide`` implements ``SwitchConfig.period_slots``: on hold slots
+    (``decide`` false) the telemetry still enters the window but the policy
+    is not consulted — register *and* hysteresis streak are frozen (a hold
+    slot neither advances nor resets the streak, so ``hysteresis_slots``
+    counts disagreeing *decision* slots) and the raw decision reported is
+    the held register.
     """
     rings = jax.vmap(ring_push)(state.rings, kpm_vecs)
     window = jax.vmap(lambda r: ring_window_mean(r, cfg.window_slots))(rings)
@@ -232,6 +247,10 @@ def switch_update(
     commit = streak >= jnp.int32(cfg.hysteresis_slots)
     pending = jnp.where(commit, raw, state.pending_mode)
     streak = jnp.where(commit, 0, streak)
+    if decide is not True:  # periodic decisions: freeze between decision slots
+        raw = jnp.where(decide, raw, state.pending_mode)
+        pending = jnp.where(decide, pending, state.pending_mode)
+        streak = jnp.where(decide, streak, state.streak)
     return (
         state._replace(rings=rings, pending_mode=pending, streak=streak),
         raw,
@@ -293,18 +312,22 @@ def host_replay_closed_loop(
             active_hist[s, u] = active[u]
             rings[u] = ring_push(rings[u], jnp.asarray(features[s, u]))
             window = ring_window_mean(rings[u], cfg.window_slots)
-            if is_threshold:
-                raw = int(host_policy(window, prev_mode=pending[u]))
+            if s % cfg.period_slots != 0:
+                # hold slot: register and streak frozen, held raw reported
+                raw = pending[u]
             else:
-                raw = int(host_policy(window))
-            raw_hist[s, u] = raw
-            if raw == pending[u]:
-                streak[u] = 0
-            else:
-                streak[u] += 1
-                if streak[u] >= cfg.hysteresis_slots:
-                    pending[u] = raw
+                if is_threshold:
+                    raw = int(host_policy(window, prev_mode=pending[u]))
+                else:
+                    raw = int(host_policy(window))
+                if raw == pending[u]:
                     streak[u] = 0
+                else:
+                    streak[u] += 1
+                    if streak[u] >= cfg.hysteresis_slots:
+                        pending[u] = raw
+                        streak[u] = 0
+            raw_hist[s, u] = raw
             pending_hist[s, u] = pending[u]
             # boundary into slot s+1
             if pending[u] != active[u]:

@@ -1,7 +1,7 @@
 """Switchable expert bank (paper 2, 3.1).
 
 A bank of N experts executes on the same input; a switch selects the
-designated output.  Two execution modes:
+designated output.  Three execution modes:
 
 * ``CONCURRENT`` — every expert runs each slot and the Pallas switch kernel
   (``repro.kernels.switch_select``) selects the output.  Zero switching
@@ -11,6 +11,18 @@ designated output.  Two execution modes:
   (XLA conditional: exactly one branch runs).  Saves compute/energy at the
   cost of at least a one-slot activation delay — quantified by the
   ``cost_model`` below.
+* ``GATED`` — the batched multi-UE compromise between the two: the cheap
+  non-designated experts run densely on every UE, while the designated
+  (expensive) expert runs only on the UEs whose mode selects it, compacted
+  into a dense capacity-``K`` sub-batch (stable cumsum partition, static
+  shapes), then scattered back over the cheap baseline by the fused
+  ``switch_scatter`` pass.  Compute scales with the *selected* expert mix —
+  the performance-per-watt posture the paper's Fig. 11 argues for — and the
+  output is bitwise-equal to ``CONCURRENT`` on the same mode vector as long
+  as no UE overflows the capacity.  UEs past capacity fall back to the
+  fail-safe ``default_mode`` expert for that slot (the real-time analogue of
+  the paper's slot-boundary guarantee) and are flagged in
+  ``BankOutput.overflow``.
 
 Mode numbering follows the paper: the bank is constructed with the
 *designated* expert first (mode 0 == its output is already in the downstream
@@ -28,12 +40,13 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.switch_select import switch_select
+from repro.kernels.switch_select import switch_scatter, switch_select
 
 
 class ExecutionMode(enum.Enum):
     CONCURRENT = "concurrent"
     SELECTED_ONLY = "selected_only"
+    GATED = "gated"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +56,9 @@ class Expert:
     ``fn(params, *inputs) -> output`` must return structurally identical
     pytrees across all experts in a bank (the uniform downstream interface).
     ``flops``/``bytes_hbm`` are static per-call costs used by the
-    energy/utilization proxy (DESIGN.md 2).
+    energy/utilization proxy (DESIGN.md 2).  In the batched multi-UE engine
+    a "call" serves one UE-slot, so these are per-UE-slot costs and the
+    executed-cost accounting below multiplies by served-UE counts.
     """
 
     name: str
@@ -58,6 +73,17 @@ class BankOutput:
     selected: Any  # pytree — contents of the designated buffer post-switch
     all_outputs: tuple | None  # per-expert outputs (concurrent mode only)
     mode: jax.Array
+    # -- executed-cost accounting (traced; ride the slot scan) --------------
+    # UEs each expert actually served this call ((n_experts,) int32).  In
+    # CONCURRENT mode every expert serves every UE; in GATED mode the
+    # designated expert serves only the compacted (capacity-capped) UEs.
+    executed_ue: jax.Array | None = None
+    # expert index that produced each UE's output ((n_ues,) int32; batched
+    # calls only).  Differs from ``mode`` exactly on capacity overflow.
+    served_by: jax.Array | None = None
+    # capacity-overflow flags ((n_ues,) bool; GATED only): UE selected the
+    # gated expert but fell back to ``default_mode`` this slot.
+    overflow: jax.Array | None = None
 
 
 class ExpertBank:
@@ -70,15 +96,26 @@ class ExpertBank:
         default_mode: int = 1,
         execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
         use_pallas_switch: bool = True,
+        gated_capacity: int | None = None,
     ):
         if len(experts) < 2:
             raise ValueError("an expert bank needs at least 2 experts")
         if not 0 <= default_mode < len(experts):
             raise ValueError(f"default_mode {default_mode} out of range")
+        if execution_mode is ExecutionMode.GATED and default_mode == 0:
+            raise ValueError(
+                "GATED gates the designated expert (mode 0); the fail-safe "
+                "default_mode must be a different, cheap expert"
+            )
+        if gated_capacity is not None and gated_capacity < 0:
+            raise ValueError(f"gated_capacity {gated_capacity} must be >= 0")
         self.experts = tuple(experts)
         self.default_mode = default_mode
         self.execution_mode = execution_mode
         self.use_pallas_switch = use_pallas_switch
+        #: dense sub-batch size for GATED execution; ``None`` == full batch
+        #: (no overflow possible), ``0`` == gated expert never runs.
+        self.gated_capacity = gated_capacity
 
     @property
     def n_experts(self) -> int:
@@ -97,6 +134,13 @@ class ExpertBank:
         output (different UEs can run different experts in the same slot).
         """
         mode = jnp.asarray(mode, jnp.int32)
+        if self.execution_mode is ExecutionMode.GATED:
+            if mode.ndim != 1:
+                raise ValueError(
+                    "GATED execution is the batched path: mode must be an "
+                    "(n_ues,) vector (use SELECTED_ONLY for scalar gating)"
+                )
+            return self._run_gated(mode, *inputs)
         if self.execution_mode is ExecutionMode.CONCURRENT:
             return self._run_concurrent(mode, *inputs)
         return self._run_selected(mode, *inputs)
@@ -114,7 +158,18 @@ class ExpertBank:
         else:  # oracle path (used by the property tests)
             stacked = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outputs)
             selected = jax.tree.map(lambda s: jnp.take(s, mode, axis=0), stacked)
-        return BankOutput(selected=selected, all_outputs=outputs, mode=mode)
+        n_served = (
+            jnp.full((self.n_experts,), mode.shape[0], jnp.int32)
+            if mode.ndim == 1
+            else jnp.ones((self.n_experts,), jnp.int32)
+        )
+        return BankOutput(
+            selected=selected,
+            all_outputs=outputs,
+            mode=mode,
+            executed_ue=n_served,
+            served_by=mode if mode.ndim == 1 else None,
+        )
 
     def _run_selected(self, mode: jax.Array, *inputs) -> BankOutput:
         if mode.ndim == 1:
@@ -122,29 +177,177 @@ class ExpertBank:
             # any expert some UE selects must execute.  Degenerate to the
             # concurrent cost envelope and gather per UE (predication), but
             # keep the SELECTED_ONLY interface (no all_outputs exposure).
+            # GATED execution is the cost-scaling alternative.
             from repro.kernels.switch_select.ref import (
                 switch_select_batched_tree_ref,
             )
 
             outputs = [e.fn(e.params, *inputs) for e in self.experts]
             selected = switch_select_batched_tree_ref(mode, outputs)
-            return BankOutput(selected=selected, all_outputs=None, mode=mode)
+            return BankOutput(
+                selected=selected,
+                all_outputs=None,
+                mode=mode,
+                executed_ue=jnp.full((self.n_experts,), mode.shape[0], jnp.int32),
+                served_by=mode,
+            )
         branches = [
             (lambda e: (lambda *xs: e.fn(e.params, *xs)))(e) for e in self.experts
         ]
         selected = jax.lax.switch(mode, branches, *inputs)
-        return BankOutput(selected=selected, all_outputs=None, mode=mode)
+        return BankOutput(
+            selected=selected,
+            all_outputs=None,
+            mode=mode,
+            executed_ue=(jnp.arange(self.n_experts) == mode).astype(jnp.int32),
+        )
+
+    def _run_gated(self, mode: jax.Array, *inputs) -> BankOutput:
+        """Compaction-gated execution: pay only for selected experts.
+
+        Every input leaf must carry a leading ``(n_ues,)`` axis.  The
+        cumsum-based stable partition and the static ``[:K]`` slice keep all
+        shapes static, so this path compiles inside a ``lax.scan`` body.
+        """
+        n_ues = mode.shape[0]
+        capacity = self.gated_capacity
+        capacity = n_ues if capacity is None else min(capacity, n_ues)
+
+        is_gated = mode == 0
+        # stable partition: each selected UE's row in the compact sub-batch
+        pos = jnp.cumsum(is_gated.astype(jnp.int32)) - 1
+        within = jnp.logical_and(is_gated, pos < capacity)
+        overflow = jnp.logical_and(is_gated, jnp.logical_not(within))
+        src = jnp.where(within, pos, -1).astype(jnp.int32)
+        # overflow UEs fall back to the fail-safe expert for this slot
+        eff_mode = jnp.where(overflow, jnp.int32(self.default_mode), mode)
+
+        # cheap experts run densely on all UEs
+        alt_outputs = [e.fn(e.params, *inputs) for e in self.experts[1:]]
+        if len(alt_outputs) == 1:
+            base = alt_outputs[0]
+        else:
+            from repro.kernels.switch_select.ref import (
+                switch_select_batched_tree_ref,
+            )
+
+            # values at gated UEs are placeholders (overwritten below)
+            base = switch_select_batched_tree_ref(
+                jnp.maximum(eff_mode, 1) - 1, alt_outputs
+            )
+
+        if capacity > 0:
+            # gather the selected UEs' inputs to the front, stable order
+            order = jnp.argsort(jnp.logical_not(is_gated).astype(jnp.int32),
+                                stable=True)
+            idx = order[:capacity]
+            compact_inputs = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                          inputs)
+            gated = self.experts[0]
+            compact_out = gated.fn(gated.params, *compact_inputs)
+            selected = switch_scatter(
+                src, compact_out, base,
+                backend="auto" if self.use_pallas_switch else "ref",
+            )
+        else:
+            selected = base
+
+        n_gated = jnp.sum(within.astype(jnp.int32))
+        executed = jnp.concatenate(
+            [n_gated[None], jnp.full((self.n_experts - 1,), n_ues, jnp.int32)]
+        )
+        served_by = jnp.where(within, 0, eff_mode).astype(jnp.int32)
+        return BankOutput(
+            selected=selected,
+            all_outputs=None,
+            mode=mode,
+            executed_ue=executed,
+            served_by=served_by,
+            overflow=overflow,
+        )
 
     # ---- static cost model (drives the energy/utilization proxy) ----
     def flops_for(self, mode: int | None = None) -> float:
         """FLOPs per slot: all experts (concurrent) or one (selected-only)."""
         if self.execution_mode is ExecutionMode.CONCURRENT:
             return float(sum(e.flops for e in self.experts))
+        if self.execution_mode is ExecutionMode.GATED:
+            raise ValueError(
+                "GATED cost depends on the realized mode mix: use "
+                "executed_flops(out) / executed_flops_per_ue(out)"
+            )
         assert mode is not None
         return float(self.experts[mode].flops)
 
     def bytes_for(self, mode: int | None = None) -> float:
         if self.execution_mode is ExecutionMode.CONCURRENT:
             return float(sum(e.bytes_hbm for e in self.experts))
+        if self.execution_mode is ExecutionMode.GATED:
+            raise ValueError(
+                "GATED cost depends on the realized mode mix: use "
+                "executed_bytes(out)"
+            )
         assert mode is not None
         return float(self.experts[mode].bytes_hbm)
+
+    # ---- executed cost model (scales with the realized expert mix) ----
+
+    def _executed(self, out: BankOutput, costs: jax.Array) -> jax.Array:
+        if out.executed_ue is None:
+            raise ValueError("BankOutput carries no executed_ue counts")
+        return jnp.sum(out.executed_ue.astype(jnp.float32) * costs)
+
+    def executed_flops(self, out: BankOutput) -> jax.Array:
+        """FLOPs this call actually executed (traced scalar).
+
+        ``sum_e served_ues[e] * flops[e]`` — in CONCURRENT mode this equals
+        ``n_ues * flops_for()``; in GATED mode the designated expert
+        contributes only its capacity-capped served count, so the total
+        scales linearly with the realized AI share.
+        """
+        return self._executed(
+            out, jnp.asarray([e.flops for e in self.experts], jnp.float32)
+        )
+
+    def executed_bytes(self, out: BankOutput) -> jax.Array:
+        """HBM bytes this call actually moved (traced scalar)."""
+        return self._executed(
+            out, jnp.asarray([e.bytes_hbm for e in self.experts], jnp.float32)
+        )
+
+    def provisioned_flops(self, n_ues: int) -> float:
+        """Static per-slot FLOPs the hardware is provisioned for (GATED).
+
+        The compact sub-batch has static capacity ``K``, so the gated
+        expert's GEMMs always process ``K`` rows — ``executed_flops`` counts
+        the *served* rows (the useful fraction); the difference is padding
+        waste when fewer UEs select the gated expert than ``K``.
+        """
+        if self.execution_mode is ExecutionMode.CONCURRENT:
+            return float(n_ues * sum(e.flops for e in self.experts))
+        if self.execution_mode is not ExecutionMode.GATED:
+            raise ValueError("provisioned cost is per-mode in SELECTED_ONLY: "
+                             "use n_ues * flops_for(mode)")
+        cap = n_ues if self.gated_capacity is None else min(
+            self.gated_capacity, n_ues
+        )
+        return float(
+            cap * self.experts[0].flops
+            + n_ues * sum(e.flops for e in self.experts[1:])
+        )
+
+    def executed_flops_per_ue(self, out: BankOutput) -> jax.Array:
+        """Per-UE executed FLOPs ((n_ues,) float32; batched calls only).
+
+        A UE's slot cost is every densely-run expert plus — under gating —
+        the designated expert only if it actually served this UE.  Summing
+        over UEs reproduces ``executed_flops``.
+        """
+        if out.served_by is None:
+            raise ValueError("per-UE accounting needs a batched (vector) call")
+        flops = jnp.asarray([e.flops for e in self.experts], jnp.float32)
+        if self.execution_mode is ExecutionMode.GATED:
+            dense = jnp.sum(flops[1:])
+            return dense + flops[0] * (out.served_by == 0).astype(jnp.float32)
+        # concurrent / degenerate selected-only: every expert ran every UE
+        return jnp.full(out.served_by.shape, jnp.sum(flops), jnp.float32)

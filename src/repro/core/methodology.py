@@ -85,6 +85,57 @@ def sensitivity_sweep(
     )
 
 
+def sensitivity_sweep_batched(
+    engine,
+    schedule,
+    *,
+    rhos: Sequence[float] = DEFAULT_RHOS,
+    n_trials: int = 8,
+    slots_per_trial: int = 8,
+    key: jax.Array | None = None,
+) -> SweepResult:
+    """Stage 1 on the batched slot engine: the rho grid rides the UE axis.
+
+    The host harness (``sensitivity_sweep``) dispatches one pipeline call
+    per ``(rho, trial)`` — O(R*T) host round-trips.  Here every
+    ``(rho, trial)`` pair becomes one UE of a single
+    ``slots_per_trial x (R*T)`` campaign (``BatchedPuschPipeline.
+    run_perturbed``): each UE runs the MMSE-only pipeline with AWGN
+    injected at its rho every slot, and the whole sweep is one compiled
+    scan.  The sample for a trial is its UE's final-slot KPM vector, after
+    ``slots_per_trial - 1`` slots of link-adaptation warm-up — the same
+    "perturb a settled link" regime the host harness reaches by carrying
+    ``LinkState`` across evaluations.
+
+    Returns a ``SweepResult`` shaped exactly like the host harness's, so
+    stages 2/3 (monotonicity filter, clustering) consume it unchanged.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    rhos_arr = np.asarray(list(rhos), np.float32)
+    n_rhos = rhos_arr.shape[0]
+    rho_per_ue = jnp.asarray(np.repeat(rhos_arr, n_trials))  # (R*T,)
+    _, traj = engine.run_perturbed(
+        schedule, rho_per_ue, n_slots=slots_per_trial, key=key
+    )
+    from repro.core.telemetry import flatten_kpm_sources
+
+    flat = flatten_kpm_sources(traj["kpms"])  # name -> (S, R*T)
+    names = tuple(flat.keys())
+    # final slot of each UE, regrouped to (R, T, K)
+    samples = np.stack(
+        [np.asarray(flat[n][-1], np.float64).reshape(n_rhos, n_trials)
+         for n in names],
+        axis=-1,
+    )
+    means = samples.mean(axis=1)
+    std = samples.std(axis=1, ddof=1) if n_trials > 1 else np.zeros_like(means)
+    ci95 = 1.96 * std / np.sqrt(max(n_trials, 1))
+    return SweepResult(
+        rhos=rhos_arr, kpm_names=names, means=means, ci95=ci95, samples=samples
+    )
+
+
 # -- Stage 2: monotonicity filtering -------------------------------------------
 
 

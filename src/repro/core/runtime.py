@@ -118,6 +118,30 @@ class BatchedRunHistory:
     def modes_for(self, ue: int) -> np.ndarray:
         return self.modes[:, ue]
 
+    @property
+    def ai_share(self) -> float:
+        """Fraction of slot-UEs actually *served* by the designated (AI)
+        expert — capacity-overflow slot-UEs fell back to the fail-safe
+        expert and do not count, keeping this consistent with the
+        executed-FLOPs accounting."""
+        served = self.modes == 0
+        if "gated_overflow" in self.outputs:
+            served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
+        return float(np.mean(served))
+
+    def executed_flops_per_slot(self) -> np.ndarray:
+        """Per-slot realized compute, summed over UEs ((S,) float64)."""
+        return np.asarray(
+            self.outputs["executed_flops"], np.float64
+        ).sum(axis=1)
+
+    @property
+    def overflow_slot_ues(self) -> int:
+        """Total capacity-overflow events (gated execution only; else 0)."""
+        if "gated_overflow" not in self.outputs:
+            return 0
+        return int(np.asarray(self.outputs["gated_overflow"]).sum())
+
     def kpm_series(self, name: str, ue: int = 0) -> np.ndarray:
         return self.kpms[name][:, ue]
 

@@ -62,6 +62,24 @@ SELECTED_KPMS: tuple[str, ...] = (
 
 ALL_CANDIDATE_KPMS: tuple[str, ...] = AERIAL_CANDIDATE_KPMS + OAI_CANDIDATE_KPMS
 
+#: Execution-cost leaves the batched engine adds to every trajectory.  They
+#: are *accounting*, not channel KPMs: excluded from policy feature vectors
+#: and from gated-vs-concurrent equivalence checks (the two paths agree on
+#: every physical output but deliberately differ in realized compute).
+#: ``BatchedRunHistory.executed_flops_per_slot()`` / ``overflow_slot_ues``
+#: are the aggregate views.
+EXECUTION_COST_KPMS: tuple[str, ...] = ("executed_flops", "gated_overflow")
+
+
+def physical_trajectory(traj: Mapping[str, jax.Array]) -> dict[str, jax.Array]:
+    """A trajectory's physical leaves: everything but the cost accounting.
+
+    This is the domain of the gated-vs-concurrent equivalence contract —
+    the two execution paths must agree bitwise on every leaf returned here
+    and are expected to differ on the ``EXECUTION_COST_KPMS`` leaves.
+    """
+    return {k: v for k, v in traj.items() if k not in EXECUTION_COST_KPMS}
+
 
 def kpm_vector(kpms: Mapping[str, jax.Array | float], names: Sequence[str]):
     """Order a KPM mapping into a dense feature vector."""

@@ -1,14 +1,27 @@
-from repro.kernels.switch_select.ops import switch_select, switch_select_leaf
+from repro.kernels.switch_select.ops import (
+    switch_scatter,
+    switch_select,
+    switch_select_leaf,
+)
 from repro.kernels.switch_select.ref import (
+    switch_gather_batched_ref,
+    switch_gather_batched_tree_ref,
     switch_select_ref,
     switch_select_tree_ref,
 )
-from repro.kernels.switch_select.switch_select import switch_select_2d
+from repro.kernels.switch_select.switch_select import (
+    switch_gather_batched_2d,
+    switch_select_2d,
+)
 
 __all__ = [
+    "switch_scatter",
     "switch_select",
     "switch_select_leaf",
     "switch_select_2d",
     "switch_select_ref",
     "switch_select_tree_ref",
+    "switch_gather_batched_2d",
+    "switch_gather_batched_ref",
+    "switch_gather_batched_tree_ref",
 ]

@@ -75,6 +75,30 @@ def switch_select_leaf(
     return undo(out2.reshape(-1)[:n])
 
 
+def _batched_tile_prep(n: int):
+    """Padding plan for per-UE payloads of ``n`` scalars each.
+
+    Per-UE payloads are typically far smaller than the scalar-path pad
+    quantum; pad rows to the float32 sublane minimum (8) for small leaves
+    and to the full block height for large ones so the tile always divides.
+    Returns ``(rows, cols, prep)`` where ``prep(v, lead)`` reshapes a
+    ``(lead, ...)`` real view to the padded ``(lead, rows, cols)`` layout.
+    """
+    cols = _PAD_BLOCK_COLS
+    pad = (-n) % cols
+    rows = (n + pad) // cols
+    row_quantum = 8 if rows <= _PAD_BLOCK_ROWS else _PAD_BLOCK_ROWS
+    row_pad = (-rows) % row_quantum
+    rows = rows + row_pad
+
+    def prep(v, lead):
+        f = v.reshape(lead, -1)
+        f = jnp.pad(f, ((0, 0), (0, pad + row_pad * cols)))
+        return f.reshape(lead, rows, cols)
+
+    return rows, cols, prep
+
+
 def switch_select_batched_leaf(
     modes: jax.Array,
     alternatives: Sequence[jax.Array],
@@ -95,23 +119,9 @@ def switch_select_batched_leaf(
     alt_views = [_to_real_view(a)[0] for a in alternatives]
 
     n = des_view.reshape(n_ues, -1).shape[1]
-    # per-UE payloads are typically far smaller than the scalar-path pad
-    # quantum; pad rows to the float32 sublane minimum (8) for small leaves
-    # and to the full block height for large ones so the tile always divides.
-    cols = _PAD_BLOCK_COLS
-    pad = (-n) % cols
-    rows = (n + pad) // cols
-    row_quantum = 8 if rows <= _PAD_BLOCK_ROWS else _PAD_BLOCK_ROWS
-    row_pad = (-rows) % row_quantum
-    rows = rows + row_pad
-
-    def prep(v):
-        f = v.reshape(n_ues, -1)
-        f = jnp.pad(f, ((0, 0), (0, pad + row_pad * cols)))
-        return f.reshape(n_ues, rows, cols)
-
-    des2 = prep(des_view)
-    alt2 = jnp.stack([prep(a) for a in alt_views], axis=0)
+    rows, cols, prep = _batched_tile_prep(n)
+    des2 = prep(des_view, n_ues)
+    alt2 = jnp.stack([prep(a, n_ues) for a in alt_views], axis=0)
     out2 = _k.switch_select_batched_2d(
         modes,
         alt2,
@@ -121,6 +131,78 @@ def switch_select_batched_leaf(
         interpret=interpret,
     )
     return undo(out2.reshape(n_ues, -1)[:, :n])
+
+
+def switch_gather_batched_leaf(
+    src: jax.Array,
+    compact: jax.Array,
+    designated: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Scatter one leaf's compact sub-batch back over the full UE batch.
+
+    ``src`` is ``(n_ues,)``; ``designated`` is ``(n_ues, ...)`` (the dense
+    baseline), ``compact`` ``(capacity, ...)`` with matching trailing shape.
+    UE ``u`` receives compact row ``src[u]`` when ``src[u] >= 0`` and keeps
+    its baseline otherwise.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    n_ues = designated.shape[0]
+    capacity = compact.shape[0]
+    des_view, undo = _to_real_view(designated)
+    comp_view = _to_real_view(compact)[0]
+
+    n = des_view.reshape(n_ues, -1).shape[1]
+    rows, cols, prep = _batched_tile_prep(n)
+    out2 = _k.switch_gather_batched_2d(
+        src,
+        prep(comp_view, capacity),
+        prep(des_view, n_ues),
+        block_rows=min(_PAD_BLOCK_ROWS, rows),
+        block_cols=cols,
+        interpret=interpret,
+    )
+    return undo(out2.reshape(n_ues, -1)[:, :n])
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def switch_scatter(src, compact, designated, *, backend: str = "auto"):
+    """Fused un-compaction over per-expert pytrees (gated execution path).
+
+    The gated bank runs the expensive expert on a dense capacity-``K``
+    sub-batch only; this op scatters those results back over the
+    cheap-expert baseline in one pass per leaf: UE ``u`` takes compact row
+    ``src[u]`` when ``src[u] >= 0`` and keeps its baseline buffer otherwise.
+
+    Args:
+      src: ``(n_ues,)`` int32 compact-row indices (negative == keep).
+      compact: pytree of ``(capacity, ...)`` leaves (``capacity >= 1``).
+      designated: structurally identical pytree of ``(n_ues, ...)`` leaves,
+        aliased to the output on the kernel path.
+      backend: ``"pallas"`` (TPU kernel), ``"ref"`` (pure-jnp gather/select)
+        or ``"auto"`` — pallas on TPU, ref as the CPU fallback.  Both are
+        bitwise-equal by construction: neither path does arithmetic on the
+        payload.
+
+    Returns:
+      The un-compacted pytree (baseline with gated results scattered in).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        from repro.kernels.switch_select.ref import switch_gather_batched_tree_ref
+
+        return switch_gather_batched_tree_ref(src, compact, designated)
+    if backend != "pallas":
+        raise ValueError(f"unknown switch_scatter backend {backend!r}")
+    return jax.tree.map(
+        lambda c, d: switch_gather_batched_leaf(src, c, d, interpret=False),
+        compact,
+        designated,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

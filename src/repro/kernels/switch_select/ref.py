@@ -55,3 +55,27 @@ def switch_select_batched_tree_ref(modes: jax.Array, outputs: list):
         return jnp.take_along_axis(stacked, idx, axis=0)[0]
 
     return jax.tree.map(leaf, *outputs)
+
+
+def switch_gather_batched_ref(
+    src: jax.Array, compact: jax.Array, designated: jax.Array
+) -> jax.Array:
+    """Un-compaction reference: UE ``u`` takes compact row ``src[u]`` when
+    ``src[u] >= 0`` and keeps its designated buffer otherwise.
+
+    ``compact`` is ``(capacity, ...)``, ``designated`` ``(n_ues, ...)``.
+    Pure gather + select — bitwise-equal to the Pallas kernel by
+    construction (no arithmetic touches the payload).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    safe = jnp.clip(src, 0, compact.shape[0] - 1)
+    taken = jnp.take(compact, safe, axis=0)  # (n_ues, ...)
+    keep = (src < 0).reshape((-1,) + (1,) * (designated.ndim - 1))
+    return jnp.where(keep, designated, taken)
+
+
+def switch_gather_batched_tree_ref(src: jax.Array, compact, designated):
+    """``switch_gather_batched_ref`` over per-expert pytrees, leaf-wise."""
+    return jax.tree.map(
+        lambda c, d: switch_gather_batched_ref(src, c, d), compact, designated
+    )

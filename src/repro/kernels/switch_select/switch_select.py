@@ -234,3 +234,108 @@ def switch_select_batched_2d(
         input_output_aliases={2: 0},
         interpret=interpret,
     )(modes, alternatives, designated)
+
+
+# -- compaction-gated variant -------------------------------------------------
+
+
+def _gather_kernel_batched(src_ref, compact_ref, des_ref, out_ref):
+    """Per-UE un-compaction: copy a compact-sub-batch row or keep the buffer."""
+    u = pl.program_id(0)
+    src = src_ref[u]
+
+    @pl.when(src < 0)
+    def _noop_path():
+        out_ref[...] = des_ref[...]
+
+    @pl.when(src >= 0)
+    def _copy_path():
+        out_ref[...] = compact_ref[...]
+
+
+def switch_gather_batched_2d(
+    src: jax.Array,
+    compact: jax.Array,
+    designated: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter a dense capacity-``K`` sub-batch back over the full UE batch.
+
+    The gated execution path runs the expensive expert only on the UEs that
+    selected it, compacted into ``compact``'s leading axis; this kernel fuses
+    selection and un-compaction into one pass over the designated buffers:
+    UE ``u`` keeps its buffer (the cheap-expert baseline) when
+    ``src[u] < 0`` — same single-tile no-op path as the scalar kernel — or
+    receives row ``src[u]`` of the compact sub-batch otherwise (coalesced
+    copy, tile-for-warp the paper's switch semantics with a gather
+    indirection steering the DMA source).
+
+    Args:
+      src: ``(n_ues,)`` int32; ``src[u] >= 0`` is UE ``u``'s row in the
+        compact sub-batch, ``src[u] < 0`` keeps the designated buffer.
+      compact: ``(capacity, rows, cols)`` dense sub-batch of the gated
+        expert's outputs (``capacity >= 1``; rows past the last selected UE
+        are padding and must never be referenced by ``src``).
+      designated: ``(n_ues, rows, cols)`` designated buffers holding the
+        baseline expert's outputs (aliased to the output).
+
+    Returns:
+      ``(n_ues, rows, cols)`` array aliased onto ``designated``.
+    """
+    n_ues, rows, cols = designated.shape
+    capacity = compact.shape[0]
+    if compact.shape[1:] != (rows, cols):
+        raise ValueError(f"compact {compact.shape} vs designated {designated.shape}")
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1 (skip the kernel when 0)")
+    if src.shape != (n_ues,):
+        raise ValueError(f"src {src.shape} vs n_ues {n_ues}")
+    block_rows = min(block_rows, rows)
+    block_cols = min(block_cols, cols)
+    if rows % block_rows or cols % block_cols:
+        raise ValueError(
+            f"shape ({rows},{cols}) not divisible by block "
+            f"({block_rows},{block_cols}); use ops.switch_scatter for padding"
+        )
+
+    src = jnp.asarray(src, jnp.int32)
+    grid = (n_ues, rows // block_rows, cols // block_cols)
+
+    def _sel(src_ref, u, i, j):
+        z = jnp.zeros_like(i)
+        keep = src_ref[u] < 0
+        return jnp.where(keep, z, i), jnp.where(keep, z, j)
+
+    def compact_index(u, i, j, src_ref):
+        k = jnp.maximum(src_ref[u], 0)
+        bi, bj = _sel(src_ref, u, i, j)
+        return (k, bi, bj)
+
+    def des_index(u, i, j, src_ref):
+        del i, j, src_ref
+        return (u, 0, 0)
+
+    def out_index(u, i, j, src_ref):
+        bi, bj = _sel(src_ref, u, i, j)
+        return (u, bi, bj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows, block_cols), compact_index),
+            pl.BlockSpec((1, block_rows, block_cols), des_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, block_cols), out_index),
+    )
+
+    return pl.pallas_call(
+        _gather_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_ues, rows, cols), designated.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(src, compact, designated)

@@ -165,6 +165,14 @@ def ai_estimate_from_ls(params: dict[str, Any], h_ls: jax.Array) -> jax.Array:
 #   (instead of kh*kw) and a single ``(O*W, kh*C*W) x (kh*C*W, B*H)``
 #   contraction — identical math to the eager conv, BLAS/MXU-friendly
 #   everywhere.
+#
+# Batch-composition stability (load-bearing for gated execution): every
+# per-UE output column of these GEMMs is bitwise-identical regardless of
+# the batch size B or the UE's position in it (the K-dim accumulation order
+# is per-column).  The compaction-gated bank relies on this to be
+# bitwise-equal to the concurrent path after gathering a capacity-K
+# sub-batch; the gated==concurrent equality tests
+# (tests/test_gated_execution.py) pin the property per backend.
 
 
 def _wfold_matrices(w: jax.Array, width: int) -> jax.Array:

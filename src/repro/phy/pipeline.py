@@ -437,6 +437,18 @@ class BatchedPuschPipeline:
     different experts in the same slot, selected by the batched Pallas
     switch kernel (``switch_select_batched_2d``).
 
+    With ``execution_mode=ExecutionMode.GATED`` the AI expert runs only on
+    the UEs whose committed mode selects it, compacted into a dense
+    capacity-``gated_capacity`` sub-batch inside the scan body (MMSE still
+    runs densely as the fail-safe baseline; the fused ``switch_scatter``
+    pass un-compacts the AI results over it).  Compute then scales with the
+    realized AI share instead of the concurrent cost envelope; UEs past
+    capacity fall back to MMSE for that slot and surface in the trajectory's
+    ``gated_overflow`` leaf.  Every trajectory additionally carries a per-UE
+    ``executed_flops`` leaf (the slot's realized compute, from the bank's
+    executed-cost accounting) so campaigns report the compute/energy proxy
+    as a function of the expert mix.
+
     Bit-level outputs (LLRs, TX bits) are a per-``qm`` dynamic shape and are
     deliberately not emitted — the engine produces per-slot-per-UE KPMs and
     TB outcomes (what campaigns and policies consume); use ``PuschPipeline``
@@ -451,6 +463,7 @@ class BatchedPuschPipeline:
         net: AiEstimatorConfig = AiEstimatorConfig(),
         execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
         use_pallas_switch: bool = True,
+        gated_capacity: int | None = None,
         rms_delay_spread_s: float = 100e-9,
     ):
         self.cfg = cfg
@@ -484,6 +497,7 @@ class BatchedPuschPipeline:
             default_mode=1,
             execution_mode=execution_mode,
             use_pallas_switch=use_pallas_switch,
+            gated_capacity=gated_capacity,
         )
 
     def _mmse_from_ls_batched(self, h_ls: jax.Array) -> jax.Array:
@@ -630,12 +644,39 @@ class BatchedPuschPipeline:
         modes: jax.Array,
         keys: jax.Array,
         p: ChannelParams,
+        rho: jax.Array | None = None,
     ):
         pre = jax.vmap(
             lambda snr, olla, key: self._ue_pre(profile, p, snr, olla, key)
         )(link.reported_snr_db, link.olla_offset_db, keys)
-        out = self.bank(jnp.asarray(modes, jnp.int32), pre["h_ls"])
-        new_link, outputs = jax.vmap(self._ue_post)(link, pre, out.selected)
+        n_ues = keys.shape[0]
+        if rho is None:
+            out = self.bank(jnp.asarray(modes, jnp.int32), pre["h_ls"])
+            h_sel = out.selected
+            exec_flops = self.bank.executed_flops_per_ue(out)
+            overflow = (
+                out.overflow.astype(jnp.int32)
+                if out.overflow is not None
+                else jnp.zeros((n_ues,), jnp.int32)
+            )
+        else:
+            # methodology stage 1 (paper Fig. 3): MMSE only, AWGN injected
+            # at node 2c — no switching, no AI in the loop.  ``rho`` is a
+            # per-UE intensity vector, so one batched slot evaluates a whole
+            # rho grid at once.
+            h_mmse = self._mmse_from_ls_batched(pre["h_ls"])
+            pkeys = jax.vmap(lambda k: jax.random.fold_in(k, 0x9e7))(keys)
+            h_sel = jax.vmap(perturb_estimate)(
+                h_mmse, jnp.asarray(rho, jnp.float32), pkeys
+            )
+            exec_flops = jnp.full(
+                (n_ues,), self.bank.experts[self.bank.default_mode].flops,
+                jnp.float32,
+            )
+            overflow = jnp.zeros((n_ues,), jnp.int32)
+        new_link, outputs = jax.vmap(self._ue_post)(link, pre, h_sel)
+        outputs["executed_flops"] = exec_flops
+        outputs["gated_overflow"] = overflow
         return new_link, outputs
 
     @partial(jax.jit, static_argnames=("self", "profile"))
@@ -664,6 +705,50 @@ class BatchedPuschPipeline:
         )
         return link, traj
 
+    @partial(jax.jit, static_argnames=("self", "profile"))
+    def _run_perturbed_scan(self, profile, link0, ue_keys, rho, params):
+        def step(carry, p):
+            link, slot_idx = carry
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
+            modes = jnp.ones((ue_keys.shape[0],), jnp.int32)  # MMSE-only stage
+            link, out = self._slot_core(profile, link, modes, keys, p, rho=rho)
+            return (link, slot_idx + 1), out
+
+        (link, _), traj = jax.lax.scan(step, (link0, jnp.int32(0)), params)
+        return link, traj
+
+    def run_perturbed(
+        self,
+        schedule: Callable[[int], ChannelConfig],
+        rho: jax.Array,
+        *,
+        n_slots: int,
+        key: jax.Array | None = None,
+        ue_keys: jax.Array | None = None,
+    ) -> tuple[DeviceLinkState, dict[str, Any]]:
+        """Methodology stage-1 campaign: per-UE perturbation intensities.
+
+        The host harness loops rho values one slot at a time; here the whole
+        rho grid rides the UE axis — UE ``u`` runs the MMSE-only pipeline
+        with AWGN injected at intensity ``rho[u]`` every slot, and the whole
+        ``n_slots x len(rho)`` sweep is one compiled scan.  PRNG derivation
+        matches ``run`` (per-UE fold_in), with an independent stream for the
+        injected noise.
+        """
+        rho = jnp.asarray(rho, jnp.float32)
+        n_ues = rho.shape[0]
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        if ue_keys is None:
+            ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
+                jnp.arange(n_ues)
+            )
+        elif ue_keys.shape[0] != n_ues:
+            raise ValueError(f"ue_keys {ue_keys.shape} vs rho {rho.shape}")
+        link = init_device_link(n_ues)
+        return self._run_perturbed_scan(profile, link, ue_keys, rho, params)
+
     # -- closed-loop scan ------------------------------------------------------
 
     def _closed_step(self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p):
@@ -679,7 +764,12 @@ class BatchedPuschPipeline:
         active = sw.active_mode
         link, out = self._slot_core(profile, link, active, keys, p)
         vecs = trajectory_kpm_matrix(out["kpms"], sw_cfg.feature_names)
-        sw, raw = switch_update(sw, vecs, policy, sw_cfg)
+        decide = (
+            True
+            if sw_cfg.period_slots == 1
+            else (slot_idx % jnp.int32(sw_cfg.period_slots)) == 0
+        )
+        sw, raw = switch_update(sw, vecs, policy, sw_cfg, decide=decide)
         out = dict(
             out,
             active_mode=active,
@@ -732,7 +822,9 @@ class BatchedPuschPipeline:
         ``sw_cfg.window_slots`` slots) feed the exported ``policy`` tables,
         and the decision is committed to the switch register, taking effect
         at the next slot boundary — the whole loop is one ``lax.scan`` with
-        zero host involvement.  PRNG derivation matches ``run`` exactly, so
+        zero host involvement.  ``sw_cfg.period_slots`` sets the dApp-style
+        decision periodicity: the policy is consulted every ``period_slots``
+        slots and the register holds in between.  PRNG derivation matches ``run`` exactly, so
         a closed-loop campaign whose decided modes happen to equal an
         open-loop grid produces the identical trajectory.
 

@@ -92,6 +92,44 @@ def test_device_matches_host_replay(engine, tree_policy, hysteresis_slots):
     assert (traj["active_mode"] == 0).any() and (traj["active_mode"] == 1).any()
 
 
+@pytest.mark.parametrize("period_slots,hysteresis_slots", [(2, 1), (5, 1), (3, 2)])
+def test_periodic_decisions_match_host_replay(
+    engine, tree_policy, period_slots, hysteresis_slots
+):
+    """``period_slots`` holds the register between decision slots, and the
+    host replay mirrors the same hold logic bitwise (the dApp's decision
+    periodicity, now honored inside the scan).  Hold slots freeze the
+    hysteresis streak rather than resetting it, so periodicity composes
+    with ``hysteresis_slots > 1`` (the (3, 2) case would deadlock on MMSE
+    forever if a hold slot counted as an agreeing decision)."""
+    sw_cfg, sw, traj = _campaign(
+        engine, tree_policy, window_slots=2, period_slots=period_slots,
+        hysteresis_slots=hysteresis_slots, backend="ref",
+    )
+    feats = np.asarray(trajectory_kpm_matrix(traj["kpms"], SELECTED_KPMS))
+    replay = host_replay_closed_loop(tree_policy, feats, sw_cfg)
+    np.testing.assert_array_equal(traj["active_mode"], replay["active_mode"])
+    np.testing.assert_array_equal(traj["raw_decision"], replay["raw_decision"])
+    np.testing.assert_array_equal(traj["pending_mode"], replay["pending_mode"])
+    np.testing.assert_array_equal(np.asarray(sw.n_switches), replay["n_switches"])
+    # the register may only move on decision slots (slot % period == 0)
+    pend = traj["pending_mode"]
+    changed = (pend[1:] != pend[:-1]).any(axis=1)
+    hold = (np.arange(1, N_SLOTS) % period_slots) != 0
+    assert not changed[hold].any(), "register rewritten on a hold slot"
+    # non-vacuous: the periodic policy still reacts to the poor phase
+    assert replay["n_switches"].sum() > 0
+
+
+def test_periodic_decisions_differ_from_every_slot(engine, tree_policy):
+    """period_slots must actually change behaviour (lagged reactions)."""
+    _, _, every = _campaign(engine, tree_policy, window_slots=2, backend="ref")
+    _, _, held = _campaign(
+        engine, tree_policy, window_slots=2, period_slots=5, backend="ref"
+    )
+    assert not np.array_equal(every["active_mode"], held["active_mode"])
+
+
 def test_closed_loop_tracks_conditions(engine, tree_policy):
     """Device-decided modes select AI (0) in the poor phase, MMSE before it."""
     _, _, traj = _campaign(engine, tree_policy, window_slots=2)

@@ -1,0 +1,360 @@
+"""Compaction-gated expert execution (GATED bank mode + gated slot engine).
+
+The contract under test, at every layer:
+
+* **bank** — ``ExecutionMode.GATED`` produces bitwise-identical selected
+  outputs to ``CONCURRENT`` on the same mode vector whenever no UE
+  overflows the capacity; overflowed UEs fall back to the ``default_mode``
+  expert with the ``overflow`` flag set; executed-UE counts / FLOPs scale
+  with the realized mix.
+* **engine** — gated and concurrent ``BatchedPuschPipeline`` campaigns are
+  bitwise-equal on every physical trajectory leaf, open- and closed-loop;
+  the ``executed_flops`` leaf matches the cost model (MMSE-only at AI share
+  0, linear in the share).
+* **kernel** — the fused un-compaction pass (``switch_gather_batched_2d``)
+  matches the pure-jnp oracle bitwise in interpret mode, across padding
+  edge cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expert_bank import BankOutput, ExecutionMode, Expert, ExpertBank
+from repro.core.telemetry import physical_trajectory
+from repro.kernels.switch_select.ops import switch_gather_batched_leaf, switch_scatter
+from repro.kernels.switch_select.ref import switch_gather_batched_ref
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.estimators import estimator_flops
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import BatchedPuschPipeline
+from repro.phy.scenario import GOOD, constant_schedule, good_poor_good_schedule
+
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG, NET)
+
+
+@pytest.fixture(scope="module")
+def engines(params):
+    conc = BatchedPuschPipeline(CFG, params, net=NET)
+    gated = BatchedPuschPipeline(
+        CFG, params, net=NET, execution_mode=ExecutionMode.GATED
+    )
+    return conc, gated
+
+
+_physical = physical_trajectory
+
+
+def _assert_tree_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a,
+        b,
+    )
+
+
+# -- fused un-compaction kernel ------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 6), (7,), (3, 5, 2), (1, 1), (257,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.complex64])
+def test_gather_kernel_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(sum(shape))
+    U, K = 6, 3
+
+    def draw(k, lead):
+        x = jax.random.normal(k, (lead,) + shape)
+        if jnp.issubdtype(dtype, jnp.complexfloating):
+            x = x + 1j * jax.random.normal(jax.random.fold_in(k, 9), (lead,) + shape)
+        return x.astype(dtype)
+
+    compact = draw(key, K)
+    des = draw(jax.random.fold_in(key, 1), U)
+    for src in (
+        [-1, 0, 2, -1, 1, -1],  # mixed
+        [-1] * U,  # all keep (pure no-op path)
+        [0, 1, 2, 0, 1, 2],  # all take
+    ):
+        src = jnp.asarray(src, jnp.int32)
+        got = switch_gather_batched_leaf(src, compact, des, interpret=True)
+        want = switch_gather_batched_ref(src, compact, des)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_kernel_single_ue_and_unit_capacity():
+    des = jax.random.normal(jax.random.PRNGKey(0), (1, 40))
+    compact = jax.random.normal(jax.random.PRNGKey(1), (1, 40))
+    for s in (-1, 0):
+        src = jnp.asarray([s], jnp.int32)
+        got = switch_gather_batched_leaf(src, compact, des, interpret=True)
+        want = switch_gather_batched_ref(src, compact, des)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_switch_scatter_pytree_backends():
+    key = jax.random.PRNGKey(3)
+    U, K = 5, 2
+    mk = lambda k, lead: {
+        "h": jax.random.normal(k, (lead, 3, 7)),
+        "aux": (jax.random.normal(jax.random.fold_in(k, 1), (lead, 11)),),
+    }
+    compact, des = mk(key, K), mk(jax.random.fold_in(key, 2), U)
+    src = jnp.asarray([1, -1, 0, -1, -1], jnp.int32)
+    ref = switch_scatter(src, compact, des, backend="ref")
+    # interpret-mode kernel path via the leaf wrapper (backend="pallas"
+    # requires a TPU; the leaf wrapper's interpret flag is the CPU check)
+    kern = jax.tree.map(
+        lambda c, d: switch_gather_batched_leaf(src, c, d, interpret=True),
+        compact,
+        des,
+    )
+    _assert_tree_equal(ref, kern)
+    with pytest.raises(ValueError):
+        switch_scatter(src, compact, des, backend="nope")
+
+
+# -- gated bank semantics ------------------------------------------------------
+
+
+def _toy_bank(**kw):
+    experts = [
+        Expert(name="ai", fn=lambda p, x: 2.0 * x + 1.0, flops=100.0),
+        Expert(name="mmse", fn=lambda p, x: -x, flops=7.0),
+    ]
+    return ExpertBank(experts, default_mode=1, **kw)
+
+
+@pytest.mark.parametrize("n_ues", [1, 3, 16])
+@pytest.mark.parametrize("capacity", [None, 0, 1, 2])
+def test_gated_bank_matches_concurrent_up_to_capacity(n_ues, capacity):
+    x = jax.random.normal(jax.random.PRNGKey(n_ues), (n_ues, 4, 6))
+    conc = _toy_bank()
+    gated = _toy_bank(
+        execution_mode=ExecutionMode.GATED, gated_capacity=capacity
+    )
+    for seed in range(4):
+        mode = jax.random.randint(jax.random.PRNGKey(seed), (n_ues,), 0, 2)
+        oc, og = conc(mode, x), gated(mode, x)
+        cap = n_ues if capacity is None else min(capacity, n_ues)
+        pos = np.cumsum(np.asarray(mode) == 0) - 1
+        within = (np.asarray(mode) == 0) & (pos < cap)
+        # within capacity: bitwise == concurrent; overflow: default expert
+        want = np.where(
+            within[:, None, None], np.asarray(oc.selected), np.asarray(-x)
+        )
+        np.testing.assert_array_equal(np.asarray(og.selected), want)
+        np.testing.assert_array_equal(
+            np.asarray(og.overflow), (np.asarray(mode) == 0) & ~within
+        )
+        served = int(within.sum())
+        np.testing.assert_array_equal(
+            np.asarray(og.executed_ue), [served, n_ues]
+        )
+        assert float(gated.executed_flops(og)) == served * 100.0 + n_ues * 7.0
+        # per-UE accounting sums to the total
+        per_ue = np.asarray(gated.executed_flops_per_ue(og))
+        assert per_ue.shape == (n_ues,)
+        np.testing.assert_allclose(per_ue.sum(), float(gated.executed_flops(og)))
+
+
+def test_gated_bank_all_ai_all_mmse():
+    U = 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (U, 8))
+    bank = _toy_bank(execution_mode=ExecutionMode.GATED)
+    out_ai = bank(jnp.zeros((U,), jnp.int32), x)
+    np.testing.assert_array_equal(np.asarray(out_ai.selected), np.asarray(2 * x + 1))
+    assert float(bank.executed_flops(out_ai)) == U * 100.0 + U * 7.0
+    out_mmse = bank(jnp.ones((U,), jnp.int32), x)
+    np.testing.assert_array_equal(np.asarray(out_mmse.selected), np.asarray(-x))
+    # AI share 0 == the cheap-expert-only cost model
+    assert float(bank.executed_flops(out_mmse)) == U * 7.0
+
+
+def test_gated_bank_three_experts():
+    """Gating composes with >2 experts: cheap ones stay dense."""
+    experts = [
+        Expert(name="ai", fn=lambda p, x: 2.0 * x, flops=100.0),
+        Expert(name="mmse", fn=lambda p, x: -x, flops=7.0),
+        Expert(name="ls", fn=lambda p, x: x + 3.0, flops=1.0),
+    ]
+    conc = ExpertBank(experts, default_mode=1)
+    gated = ExpertBank(
+        experts, default_mode=1, execution_mode=ExecutionMode.GATED,
+        gated_capacity=1,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 9))
+    mode = jnp.asarray([0, 2, 1, 0, 2, 1], jnp.int32)
+    oc, og = conc(mode, x), gated(mode, x)
+    # UE 0 within capacity, UE 3 overflows to default (mmse); others dense
+    want = np.asarray(oc.selected).copy()
+    want[3] = np.asarray(-x[3])
+    np.testing.assert_array_equal(np.asarray(og.selected), want)
+    np.testing.assert_array_equal(np.asarray(og.served_by), [0, 2, 1, 1, 2, 1])
+    np.testing.assert_array_equal(np.asarray(og.executed_ue), [1, 6, 6])
+
+
+def test_gated_bank_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        _toy_bank(execution_mode=ExecutionMode.GATED, gated_capacity=-1)
+    experts = [
+        Expert(name="a", fn=lambda p, x: x),
+        Expert(name="b", fn=lambda p, x: x),
+    ]
+    with pytest.raises(ValueError):
+        ExpertBank(experts, default_mode=0, execution_mode=ExecutionMode.GATED)
+    bank = _toy_bank(execution_mode=ExecutionMode.GATED)
+    with pytest.raises(ValueError):
+        bank(jnp.int32(0), jnp.zeros((4, 4)))  # scalar mode is not gateable
+
+
+def test_gated_cost_model_queries():
+    gated = _toy_bank(execution_mode=ExecutionMode.GATED, gated_capacity=2)
+    with pytest.raises(ValueError):
+        gated.flops_for()
+    # provisioned: capacity rows of AI + dense cheap experts
+    assert gated.provisioned_flops(8) == 2 * 100.0 + 8 * 7.0
+    conc = _toy_bank()
+    assert conc.provisioned_flops(8) == 8 * 107.0
+    out = BankOutput(selected=None, all_outputs=None, mode=jnp.int32(0))
+    with pytest.raises(ValueError):
+        conc.executed_flops(out)
+
+
+# -- gated slot engine ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_ues", [1, 3, 4])
+def test_engine_gated_matches_concurrent_open_loop(params, engines, n_ues):
+    """Bitwise equality on every physical leaf, incl. odd batch sizes."""
+    conc, _ = engines
+    gated = (
+        engines[1]
+        if n_ues == 4
+        else BatchedPuschPipeline(
+            CFG, params, net=NET, execution_mode=ExecutionMode.GATED
+        )
+    )
+    n_slots = 6
+    sched = good_poor_good_schedule(poor_start=2, poor_end=4)
+    rng = np.random.default_rng(n_ues)
+    modes = rng.integers(0, 2, size=(n_slots, n_ues)).astype(np.int32)
+    key = jax.random.PRNGKey(5)
+    _, tc = conc.run(sched, modes, n_slots=n_slots, n_ues=n_ues, key=key)
+    _, tg = gated.run(sched, modes, n_slots=n_slots, n_ues=n_ues, key=key)
+    _assert_tree_equal(_physical(tc), _physical(tg))
+    # gated accounting: per-slot executed FLOPs track the AI count exactly
+    f_ai, f_mmse = NET.flops(CFG), estimator_flops(CFG)
+    n_ai = (modes == 0).sum(axis=1)
+    np.testing.assert_allclose(
+        np.asarray(tg["executed_flops"]).sum(axis=1),
+        n_ai * f_ai + n_ues * f_mmse,
+        rtol=1e-6,
+    )
+    # concurrent accounting: the full envelope regardless of the mix
+    np.testing.assert_allclose(
+        np.asarray(tc["executed_flops"]).sum(axis=1),
+        n_ues * (f_ai + f_mmse),
+        rtol=1e-6,
+    )
+
+
+def test_engine_capacity_overflow_falls_back_to_mmse(params):
+    """UEs past capacity run MMSE that slot — bitwise — and are recorded."""
+    n_slots, n_ues = 5, 4
+    sched = constant_schedule(GOOD)
+    modes = np.zeros((n_slots, n_ues), np.int32)  # all-AI demand
+    modes[:, 3] = 1
+    gated = BatchedPuschPipeline(
+        CFG, params, net=NET,
+        execution_mode=ExecutionMode.GATED, gated_capacity=2,
+    )
+    conc = BatchedPuschPipeline(CFG, params, net=NET)
+    key = jax.random.PRNGKey(2)
+    _, tg = gated.run(sched, modes, n_slots=n_slots, n_ues=n_ues, key=key)
+    # UE 2 (third AI UE) overflows every slot -> served by MMSE: the
+    # trajectory must equal the concurrent run with UE 2 forced to MMSE
+    fallback = modes.copy()
+    fallback[:, 2] = 1
+    _, tc = conc.run(sched, fallback, n_slots=n_slots, n_ues=n_ues, key=key)
+    _assert_tree_equal(_physical(tg), _physical(tc))
+    overflow = np.asarray(tg["gated_overflow"])
+    np.testing.assert_array_equal(overflow[:, 2], np.ones(n_slots))
+    assert overflow.sum() == n_slots  # only UE 2, every slot
+    # capacity 0: the AI expert never runs; everything falls back
+    gated0 = BatchedPuschPipeline(
+        CFG, params, net=NET,
+        execution_mode=ExecutionMode.GATED, gated_capacity=0,
+    )
+    _, t0 = gated0.run(sched, modes, n_slots=n_slots, n_ues=n_ues, key=key)
+    _, tm = conc.run(sched, 1, n_slots=n_slots, n_ues=n_ues, key=key)
+    _assert_tree_equal(_physical(t0), _physical(tm))
+    f_mmse = estimator_flops(CFG)
+    np.testing.assert_allclose(
+        np.asarray(t0["executed_flops"]).sum(axis=1), n_ues * f_mmse, rtol=1e-6
+    )
+
+
+def test_engine_gated_matches_concurrent_closed_loop(params, engines):
+    """Device-decided trajectories agree bitwise, decisions included."""
+    from repro.core.closed_loop import SwitchConfig
+    from repro.core.policy import ThresholdPolicy
+    from repro.core.telemetry import SELECTED_KPMS
+
+    conc, gated = engines
+    n_slots, n_ues = 10, 4
+    sched = good_poor_good_schedule(poor_start=3, poor_end=7)
+    pol = ThresholdPolicy(
+        feature_idx=SELECTED_KPMS.index("snr"), threshold=8.0, hysteresis=0.5
+    ).to_device()
+    sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=2)
+    key = jax.random.PRNGKey(11)
+    _, swc, tc = conc.run_closed_loop(
+        sched, pol, sw_cfg, n_slots=n_slots, n_ues=n_ues, key=key
+    )
+    _, swg, tg = gated.run_closed_loop(
+        sched, pol, sw_cfg, n_slots=n_slots, n_ues=n_ues, key=key
+    )
+    _assert_tree_equal(_physical(tc), _physical(tg))
+    np.testing.assert_array_equal(
+        np.asarray(swc.n_switches), np.asarray(swg.n_switches)
+    )
+
+
+def test_batched_run_history_cost_helpers(params, engines):
+    from repro.core.runtime import BatchedRunHistory
+
+    _, gated = engines
+    n_slots, n_ues = 4, 4
+    modes = np.ones((n_slots, n_ues), np.int32)
+    modes[:, 0] = 0
+    _, traj = gated.run(
+        constant_schedule(GOOD), modes, n_slots=n_slots, n_ues=n_ues
+    )
+    hist = BatchedRunHistory.from_trajectory(modes, traj)
+    assert hist.ai_share == pytest.approx(0.25)
+    assert hist.overflow_slot_ues == 0
+    per_slot = hist.executed_flops_per_slot()
+    assert per_slot.shape == (n_slots,)
+    np.testing.assert_allclose(
+        per_slot, NET.flops(CFG) + n_ues * estimator_flops(CFG), rtol=1e-6
+    )
+    # ai_share counts *served* slot-UEs: with capacity 0 every AI selection
+    # overflows, so the share is 0 even though every committed mode is AI
+    gated0 = BatchedPuschPipeline(
+        CFG, params, net=NET,
+        execution_mode=ExecutionMode.GATED, gated_capacity=0,
+    )
+    all_ai = np.zeros((n_slots, n_ues), np.int32)
+    _, traj0 = gated0.run(
+        constant_schedule(GOOD), all_ai, n_slots=n_slots, n_ues=n_ues
+    )
+    hist0 = BatchedRunHistory.from_trajectory(all_ai, traj0)
+    assert hist0.ai_share == 0.0
+    assert hist0.overflow_slot_ues == n_slots * n_ues

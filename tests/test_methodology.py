@@ -13,6 +13,7 @@ from repro.core.methodology import (
     perturb_estimate,
     redundancy_reduction,
     sensitivity_sweep,
+    sensitivity_sweep_batched,
 )
 
 # -- Stage 1: Eq. (3) statistics -------------------------------------------------
@@ -67,6 +68,43 @@ def test_default_rho_grid_matches_paper():
     assert DEFAULT_RHOS[0] == 0.0 and DEFAULT_RHOS[-1] == 2.0
     assert len(DEFAULT_RHOS) == 21
     np.testing.assert_allclose(np.diff(DEFAULT_RHOS), 0.1)
+
+
+def test_sensitivity_sweep_batched_shapes_and_trends():
+    """Stage 1 on the scan engine: the rho grid rides the UE axis.
+
+    The batched sweep must return a host-shaped ``SweepResult`` whose KPM
+    degradation is monotone in rho (the property stage 2 filters on).
+    """
+    from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+    from repro.phy.nr import SlotConfig
+    from repro.phy.pipeline import BatchedPuschPipeline
+    from repro.phy.scenario import GOOD, constant_schedule
+
+    cfg = SlotConfig(n_prb=24)
+    net = AiEstimatorConfig(channels=8, n_res_blocks=1)
+    engine = BatchedPuschPipeline(
+        cfg, init_params(jax.random.PRNGKey(0), cfg, net), net=net
+    )
+    rhos = (0.0, 1.0, 2.0)
+    n_trials = 3
+    sweep = sensitivity_sweep_batched(
+        engine, constant_schedule(GOOD), rhos=rhos, n_trials=n_trials,
+        slots_per_trial=5,
+    )
+    assert isinstance(sweep, SweepResult)
+    k = len(sweep.kpm_names)
+    assert sweep.samples.shape == (len(rhos), n_trials, k)
+    assert sweep.means.shape == (len(rhos), k)
+    # SINR must degrade monotonically across the grid (paper Fig. 4)
+    sinr = sweep.means[:, sweep.kpm_names.index("sinr")]
+    assert sinr[0] > sinr[1] > sinr[2]
+    # deterministic in the key
+    again = sensitivity_sweep_batched(
+        engine, constant_schedule(GOOD), rhos=rhos, n_trials=n_trials,
+        slots_per_trial=5,
+    )
+    np.testing.assert_array_equal(sweep.samples, again.samples)
 
 
 # -- Stage 2 -----------------------------------------------------------------------
