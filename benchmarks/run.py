@@ -3,15 +3,18 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
                                                 [--json BENCH_<tag>.json]
 
-``--smoke`` is the CI fast path: tiny expert training, four sections only
+``--smoke`` is the CI fast path: tiny expert training, five sections only
 (switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
-equivalence + gated-execution contract), exits non-zero on any failure.
-Finishes in minutes where the full sweep takes an hour.
+equivalence + gated-execution contract + session-API dispatch/provenance),
+exits non-zero on any failure.  Finishes in minutes where the full sweep
+takes an hour.
 
 ``--json PATH`` additionally writes a machine-readable perf snapshot —
 slot-UEs/s, in-scan decision latency, and executed-FLOPs-per-slot across AI
 shares {0, 1/16, 1/2, 1} — so the repo's bench trajectory accumulates
-across PRs.
+across PRs.  The snapshot embeds the serialized ``CampaignSpec`` + its
+``spec_hash`` from the session section, so every perf number carries the
+exact campaign it was measured on.
 """
 
 from __future__ import annotations
@@ -50,6 +53,12 @@ def _json_payload(outs: dict) -> dict:
             }
             for share, row in gated["by_share"].items()
         }
+    session = outs.get("session")
+    if session:
+        # benchmark provenance: the exact campaign the numbers came from
+        payload["campaign_spec"] = session["spec"]
+        payload["campaign_spec_hash"] = session["spec_hash"]
+        payload["session_slot_ues_per_s"] = session["session_slot_ues_per_s"]
     return payload
 
 
@@ -76,6 +85,7 @@ def main() -> None:
         bench_methodology,
         bench_policy,
         bench_resources,
+        bench_session,
         bench_switch,
         bench_timeseries,
         roofline,
@@ -99,6 +109,11 @@ def main() -> None:
             # at AI share 0 equal the MMSE-only cost model
             ("gated", "Gated execution (smoke)", bench_gated.run,
              {"n_slots": 16, "n_ues": 4, "shares": (0.0, 0.25, 1.0)}),
+            # raises unless the declarative session reproduces the legacy
+            # closed loop bitwise and a per-UE heterogeneous campaign
+            # matches its per-UE host replay (spec JSON round-trip included)
+            ("session", "Session API (smoke)", bench_session.run,
+             {"n_slots": 12, "n_ues": 2}),
         ]
     else:
         sections = [
@@ -116,6 +131,10 @@ def main() -> None:
             ("gated", "Gated expert execution", bench_gated.run,
              {"n_slots": 30 if args.fast else 60,
               "n_ues": 8 if args.fast else 16}),
+            ("session", "Session API (declarative campaigns)",
+             bench_session.run,
+             {"n_slots": 24 if args.fast else 48,
+              "n_ues": 4 if args.fast else 8}),
             (None, "Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
             (None, "Fig. 11 GPU resources proxy", bench_resources.run, {}),
             (None, "Roofline (from dry-run)", roofline.run,

@@ -1,207 +1,210 @@
-"""Quickstart: ARCHES expert switching on UL channel estimation.
+"""Quickstart: ARCHES expert switching through the declarative session API.
 
-Builds the PUSCH pipeline with an MMSE + AI expert bank, trains the
-decision-tree switching policy from labelled telemetry, then runs the
-paper's Fig. 9 scenario (good -> poor -> good) under the full control loop
-(E3 + dApp + slot-boundary switch register).
+Every campaign is one ``CampaignSpec`` — scenario (by registry name),
+campaign shape, expert bank, switch/policy config, seeds — compiled and
+executed by ``ArchesSession``:
 
-With ``--n-ues N`` (N > 1) the expert profiling runs on the batched
-multi-UE slot engine — one compiled ``lax.scan`` per expert instead of
-O(slots x UEs) host dispatches — and a per-UE mode-vector demo slot is
-shown before the live single-UE control loop.
+    spec = CampaignSpec(path="closed_loop", scenario="good_poor_good", ...)
+    hist = ArchesSession(spec).run()     # -> BatchedRunHistory
 
-With ``--closed-loop`` (implies the batched engine) the trained policy is
-exported to flat device tables and the whole control loop — KPM window,
-tree inference, hysteresis, switch register — runs *inside* the slot scan:
-each UE's mode for slot n+1 is decided on device from slot n's telemetry,
-no host round-trip, and the run is verified bitwise against the host
-replay of the same policy.
+The demo walks the execution paths the session dispatches over:
 
-With ``--gated`` (implies the batched engine) a 1-in-4-UEs-on-AI campaign
-runs through the compaction-gated execution path — the AI expert executes
-only on a dense capacity-limited sub-batch of the UEs that selected it —
-and the demo prints the realized compute saving vs the concurrent bank,
-after verifying both paths produce bitwise-identical trajectories.
+* default — the paper's Fig. 9 scenario under the device-side closed loop
+  (policy tables evaluated inside the slot scan), verified bitwise against
+  the host replay of the same policy.
+* ``--host`` — the seed architecture: single-UE Python slot loop with the
+  full E3 + dApp control plane.
+* ``--gated`` — compaction-gated execution: the AI expert runs only on a
+  capacity-limited sub-batch of the UEs that selected it; prints the
+  realized compute saving and the capacity a recorded campaign suggests
+  (``suggest_gated_capacity``).
+* ``--heterogeneous`` — per-UE heterogeneity: the ``mixed_cell`` scenario
+  gives each UE its own channel schedule, and two different policies are
+  assigned across UEs (a ``PerUEPolicy`` table bank inside the scan).
 
-    PYTHONPATH=src python examples/quickstart.py [--n-ues 8] [--closed-loop]
-                                                 [--gated]
+Specs serialize: every section prints its campaign's ``spec_hash`` and the
+JSON round-trip is exercised before each run (what you ran is exactly what
+the provenance string says).
+
+    PYTHONPATH=src python examples/quickstart.py [--n-ues 4] [--host]
+                                                 [--gated] [--heterogeneous]
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dapp import DApp, connect_dapp
-from repro.core.e3 import E3Agent
-from repro.core.policy import (
-    DecisionTreePolicy,
-    fit_decision_tree,
-    profile_and_fit_tree,
+from repro.core.runtime import suggest_gated_capacity
+from repro.core.session import (
+    ArchesSession,
+    CampaignSpec,
+    ExpertBankSpec,
+    PolicySpec,
+    SwitchSpec,
+    spec_hash,
 )
-from repro.core.runtime import ArchesRuntime
-from repro.core.telemetry import SELECTED_KPMS
-from repro.phy.ai_estimator import AiEstimatorConfig, init_params
-from repro.phy.nr import SlotConfig
-from repro.phy.pipeline import BatchedPuschPipeline, LinkState, PuschPipeline
-from repro.phy.scenario import good_poor_good_schedule
+from repro.phy.scenario import make_schedule, scenario_names
 
 N_PHASE = 10
 
 
-def profile_host_loop(pipe, schedule, n_slots):
-    """Seed-style per-slot profiling (one UE, Python loop)."""
-    X, y = [], []
-    for mode in (0, 1):
-        link = LinkState()
-        for slot in range(n_slots):
-            ch = schedule(slot)
-            link, out, kpms = pipe.run_slot(jax.random.PRNGKey(slot), mode, link, ch)
-            flat = {**kpms["aerial"], **kpms["oai"]}
-            X.append([flat[k] for k in SELECTED_KPMS])
-            y.append(0 if ch.interference else 1)  # interference -> AI
-    return np.asarray(X, np.float32), np.asarray(y)
+def roundtrip(spec: CampaignSpec) -> CampaignSpec:
+    """Serialize -> parse, proving the spec is its own provenance record."""
+    restored = CampaignSpec.from_json(spec.to_json())
+    assert restored == spec
+    return restored
+
+
+def closed_loop_demo(n_ues: int) -> None:
+    spec = roundtrip(CampaignSpec(
+        path="closed_loop",
+        scenario="good_poor_good",
+        scenario_args=(("poor_start", N_PHASE), ("poor_end", 2 * N_PHASE)),
+        n_ues=n_ues,
+        n_slots=3 * N_PHASE,
+        seed=42,
+        policies=(PolicySpec(kind="tree", depth=2),),
+        switch=SwitchSpec(window_slots=2),
+    ))
+    session = ArchesSession(spec)
+    hist = session.run()
+
+    schedule = make_schedule(spec.scenario, **spec.scenario_kwargs)
+    print(f"== closed loop: decisions inside the scan "
+          f"({spec.n_ues} UEs x {spec.n_slots} slots) "
+          f"[spec {spec_hash(spec)}] ==")
+    for s in range(0, spec.n_slots, 3):
+        cond = "poor" if schedule(s).interference else "good"
+        row = "".join("A" if m == 0 else "M" for m in hist.modes[s])
+        print(f"slot {s:3d} [{cond}] per-UE experts: {row}")
+
+    replay = session.host_replay(hist)
+    match = np.array_equal(hist.modes, replay["active_mode"])
+    print(f"device == host replay: {'yes (bitwise)' if match else 'NO'}; "
+          f"switches/UE: {hist.n_switches.tolist()}")
+    if not match:
+        raise SystemExit("closed-loop equivalence violated")
+
+
+def host_demo() -> None:
+    spec = roundtrip(CampaignSpec(
+        path="host",
+        scenario="good_poor_good",
+        scenario_args=(("poor_start", N_PHASE), ("poor_end", 2 * N_PHASE)),
+        n_ues=1,
+        n_slots=3 * N_PHASE,
+        policies=(PolicySpec(kind="tree", depth=2, train_ues=2),),
+        switch=SwitchSpec(window_slots=2, ttl_slots=8),
+    ))
+    hist = ArchesSession(spec).run()
+
+    schedule = make_schedule(spec.scenario, **spec.scenario_kwargs)
+    names = {0: "AI  ", 1: "MMSE"}
+    print(f"\n== host loop: E3 + dApp control plane [spec {spec_hash(spec)}] ==")
+    for s in range(spec.n_slots):
+        cond = "poor" if schedule(s).interference else "good"
+        tput = hist.kpms["phy_throughput"][s, 0]
+        bar = "#" * int(tput / 2e6)
+        print(f"slot {s:3d} [{cond}] expert={names[int(hist.modes[s, 0])]} "
+              f"tput={tput / 1e6:5.1f} Mbps {bar}")
+    print("(decisions apply at slot n+1 — paper 3.3)")
+
+
+def gated_demo(n_ues: int) -> None:
+    n_ai = max(1, n_ues // 4)
+    modes = np.ones((3 * N_PHASE, n_ues), np.int32)
+    modes[:, :n_ai] = 0  # 1-in-4 UEs on AI
+    base = dict(
+        scenario="good_poor_good",
+        scenario_args=(("poor_start", N_PHASE), ("poor_end", 2 * N_PHASE)),
+        n_ues=n_ues,
+        n_slots=3 * N_PHASE,
+        modes=tuple(map(tuple, modes)),
+    )
+    gated = roundtrip(CampaignSpec(
+        path="gated",
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=n_ai),
+        **base,
+    ))
+    conc = CampaignSpec(path="batched", **base)
+
+    hist_g = ArchesSession(gated).run()
+    hist_c = ArchesSession(conc).run()
+
+    same = np.array_equal(hist_c.modes, hist_g.modes) and all(
+        np.array_equal(hist_c.kpms[k], hist_g.kpms[k]) for k in hist_c.kpms
+    )
+    fl_c = hist_c.executed_flops_per_slot().mean()
+    fl_g = hist_g.executed_flops_per_slot().mean()
+    print(f"\n== gated execution: {n_ai}/{n_ues} UEs on AI "
+          f"[spec {spec_hash(gated)}] ==")
+    print(f"executed compute:  concurrent {fl_c / 1e9:.3f} GFLOP/slot -> "
+          f"gated {fl_g / 1e9:.3f} GFLOP/slot "
+          f"({(1 - fl_g / fl_c) * 100:.0f}% saved)")
+    print(f"trajectories identical: {'yes (bitwise)' if same else 'NO'}; "
+          f"overflow slot-UEs: {hist_g.overflow_slot_ues}")
+    print(f"suggest_gated_capacity(history) -> "
+          f"{suggest_gated_capacity(hist_g)} (provisioned: {n_ai})")
+    if not same:
+        raise SystemExit("gated != concurrent trajectory")
+
+
+def heterogeneous_demo(n_ues: int) -> None:
+    spec = roundtrip(CampaignSpec(
+        path="closed_loop",
+        scenario="mixed_cell",
+        n_ues=n_ues,
+        n_slots=3 * N_PHASE,
+        seed=1,
+        policies=(
+            # train_scenario=None: per-UE campaign -> the tree trains on
+            # good_poor_good with its window scaled into the horizon
+            PolicySpec(kind="tree", depth=2),
+            PolicySpec(kind="threshold", feature="snr", threshold=18.0,
+                       hysteresis=2.0),
+        ),
+        policy_assignment=tuple(u % 2 for u in range(n_ues)),
+        switch=SwitchSpec(window_slots=2),
+    ))
+    session = ArchesSession(spec)
+    hist = session.run()
+
+    print(f"\n== per-UE heterogeneity: mixed_cell scenario, 2 policies "
+          f"[spec {spec_hash(spec)}] ==")
+    kinds = [spec.policies[i].kind for i in spec.policy_assignment]
+    print("UE ->", "  ".join(f"{u}:{k}" for u, k in enumerate(kinds)))
+    for s in range(0, spec.n_slots, 3):
+        row = "".join("A" if m == 0 else "M" for m in hist.modes[s])
+        print(f"slot {s:3d} per-UE experts: {row}")
+
+    replay = session.host_replay(hist)
+    match = np.array_equal(hist.modes, replay["active_mode"])
+    print(f"device == per-UE host replay: "
+          f"{'yes (bitwise)' if match else 'NO'}; "
+          f"switches/UE: {hist.n_switches.tolist()}")
+    if not match:
+        raise SystemExit("per-UE closed-loop equivalence violated")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n-ues", type=int, default=1,
-                    help="profile on the batched multi-UE engine (N > 1)")
-    ap.add_argument("--closed-loop", action="store_true",
-                    help="run the device-side closed loop (policy in the scan)")
+    ap.add_argument("--n-ues", type=int, default=4)
+    ap.add_argument("--host", action="store_true",
+                    help="also run the single-UE host loop (E3 + dApp)")
     ap.add_argument("--gated", action="store_true",
-                    help="demo compaction-gated execution (AI only where selected)")
+                    help="demo compaction-gated execution")
+    ap.add_argument("--heterogeneous", action="store_true",
+                    help="demo per-UE scenario + policy heterogeneity")
     args = ap.parse_args()
-    if (args.closed_loop or args.gated) and args.n_ues < 2:
-        args.n_ues = 4  # these paths live on the batched engine
 
-    cfg = SlotConfig(n_prb=24)
-    net = AiEstimatorConfig(channels=8, n_res_blocks=1)
-    params = init_params(jax.random.PRNGKey(0), cfg, net)
-    pipe = PuschPipeline(cfg, params, net=net)
-    schedule = good_poor_good_schedule(poor_start=N_PHASE, poor_end=2 * N_PHASE)
-    n_slots = 3 * N_PHASE
-
-    # -- 1. profile both experts over labelled slots (paper 5.3) ------------
-    if args.n_ues > 1:
-        print(f"== profiling experts on the batched engine "
-              f"({args.n_ues} UEs x {n_slots} slots per expert) ==")
-        engine = BatchedPuschPipeline(cfg, params, net=net)
-        policy = profile_and_fit_tree(
-            engine, schedule, n_slots=n_slots, n_ues=args.n_ues
-        )
-
-        # per-UE mode vector demo: odd UEs on MMSE, even UEs on AI, one slot
-        modes = (jnp.arange(args.n_ues) % 2).astype(jnp.int32)
-        _, demo = engine.run(schedule, modes, n_slots=1, n_ues=args.n_ues)
-        sinr = np.asarray(demo["kpms"]["aerial"]["sinr"])[0]
-        print("per-UE experts in one slot:",
-              " ".join(f"ue{u}={'AI' if int(modes[u]) == 0 else 'MMSE'}"
-                       f"({sinr[u]:.1f}dB)" for u in range(min(args.n_ues, 6))))
-    else:
-        print("== profiling experts for policy training ==")
-        X, y = profile_host_loop(pipe, schedule, n_slots)
-        tree = fit_decision_tree(X, y, depth=2)
-        policy = DecisionTreePolicy(tree, SELECTED_KPMS)
-    tree = policy.tree
-    top = np.argsort(-tree.importances)[:2]
-    print("policy features:",
-          ", ".join(f"{SELECTED_KPMS[i]} ({tree.importances[i]*100:.0f}%)"
-                    for i in top))
-
-    # -- 1a. compaction-gated execution (pay only for selected experts) -----
+    print("registered scenarios:", ", ".join(scenario_names()), "\n")
+    closed_loop_demo(max(args.n_ues, 2))
+    if args.host:
+        host_demo()
     if args.gated:
-        import time
-
-        from repro.core.expert_bank import ExecutionMode
-
-        n_ai = max(1, args.n_ues // 4)
-        gated_engine = BatchedPuschPipeline(
-            cfg, params, net=net,
-            execution_mode=ExecutionMode.GATED, gated_capacity=n_ai,
-        )
-        modes = np.ones((n_slots, args.n_ues), np.int32)
-        modes[:, :n_ai] = 0  # 1-in-4 UEs on AI, capacity provisioned to match
-
-        def timed(eng):
-            _, traj = eng.run(schedule, modes, n_slots=n_slots,
-                              n_ues=args.n_ues)  # warm/compile
-            jax.block_until_ready(traj["tb_ok"])
-            t0 = time.perf_counter()
-            _, traj = eng.run(schedule, modes, n_slots=n_slots,
-                              n_ues=args.n_ues)
-            jax.block_until_ready(traj["tb_ok"])
-            return time.perf_counter() - t0, traj
-
-        t_conc, traj_c = timed(engine)
-        t_gate, traj_g = timed(gated_engine)
-        from repro.core.telemetry import physical_trajectory
-
-        eq = jax.tree.map(
-            lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
-            physical_trajectory(traj_c), physical_trajectory(traj_g),
-        )
-        same = all(jax.tree.leaves(eq))
-        fl_c = np.asarray(traj_c["executed_flops"]).sum(axis=1).mean()
-        fl_g = np.asarray(traj_g["executed_flops"]).sum(axis=1).mean()
-        print(f"\n== gated execution: {n_ai}/{args.n_ues} UEs on AI ==")
-        print(f"executed compute:  concurrent {fl_c / 1e9:.3f} GFLOP/slot -> "
-              f"gated {fl_g / 1e9:.3f} GFLOP/slot "
-              f"({(1 - fl_g / fl_c) * 100:.0f}% saved)")
-        print(f"wall time:         {t_conc * 1e3:.0f} ms -> {t_gate * 1e3:.0f} ms "
-              f"({t_conc / t_gate:.2f}x vs concurrent; the demo net is tiny — "
-              "benchmarks/bench_gated.py shows the full-size engine)")
-        print(f"trajectories identical: {'yes (bitwise)' if same else 'NO'}; "
-              f"overflow slot-UEs: {int(np.asarray(traj_g['gated_overflow']).sum())}")
-        if not same:
-            raise SystemExit("gated != concurrent trajectory")
-
-    # -- 1b. device-side closed loop (policy compiled into the scan) --------
-    if args.closed_loop:
-        from repro.core.closed_loop import SwitchConfig, host_replay_closed_loop
-        from repro.core.runtime import ArchesRuntime as _RT
-
-        sw_cfg = SwitchConfig(feature_names=SELECTED_KPMS, window_slots=2)
-        runtime = _RT(closed_loop=True, engine=engine,
-                      device_policy=policy.to_device(), switch_config=sw_cfg)
-        hist = runtime.run_batched(schedule, n_slots=n_slots, n_ues=args.n_ues,
-                                   key=jax.random.PRNGKey(42))
-        feats = np.stack(
-            [hist.kpms[n] for n in SELECTED_KPMS], axis=-1
-        ).astype(np.float32)
-        replay = host_replay_closed_loop(policy, feats, sw_cfg)
-        match = np.array_equal(hist.modes, replay["active_mode"])
-        print(f"\n== closed loop: decisions inside the scan "
-              f"({args.n_ues} UEs x {n_slots} slots) ==")
-        for s in range(0, n_slots, 3):
-            cond = "poor" if schedule(s).interference else "good"
-            row = "".join("A" if m == 0 else "M" for m in hist.modes[s])
-            print(f"slot {s:3d} [{cond}] per-UE experts: {row}")
-        print(f"device == host replay: {'yes (bitwise)' if match else 'NO'}; "
-              f"switches/UE: {hist.n_switches.tolist()}")
-        if not match:
-            raise SystemExit("closed-loop equivalence violated")
-
-    # -- 2. live ARCHES loop -------------------------------------------------
-    print("\n== live run: good -> poor -> good ==")
-    agent = E3Agent()
-    dapp = DApp(policy, SELECTED_KPMS, window_slots=2)
-    connect_dapp(agent, dapp)
-    runtime = ArchesRuntime(
-        pipe.make_slot_fn(schedule), agent,
-        default_mode=1, fail_safe_mode=1, ttl_slots=8, keep_outputs=True,
-    )
-    hist = runtime.run(range(n_slots))
-
-    names = {0: "AI  ", 1: "MMSE"}
-    for r in hist.records:
-        cond = "poor" if schedule(r.slot).interference else "good"
-        bar = "#" * int(r.kpms["phy_throughput"] / 2e6)
-        print(f"slot {r.slot:3d} [{cond}] expert={names[r.active_mode]} "
-              f"tput={r.kpms['phy_throughput'] / 1e6:5.1f} Mbps {bar}")
-    print(f"\nswitches: {int(hist.final_state.n_switches)} "
-          "(decisions apply at slot n+1 — paper 3.3)")
+        gated_demo(max(args.n_ues, 4))
+    if args.heterogeneous:
+        heterogeneous_demo(max(args.n_ues, 4))
 
 
 if __name__ == "__main__":

@@ -4,10 +4,12 @@ from repro.core.closed_loop import (
     DeviceSwitchState,
     DeviceThresholdPolicy,
     DeviceTreePolicy,
+    PerUEPolicy,
     SwitchConfig,
     export_tree_tables,
     host_replay_closed_loop,
     init_device_switch,
+    per_ue_policy,
     policy_infer,
     switch_boundary,
     switch_update,
@@ -44,6 +46,16 @@ from repro.core.runtime import (
     RunHistory,
     SlotRecord,
     replay_batched_telemetry,
+    suggest_gated_capacity,
+)
+from repro.core.session import (
+    ArchesSession,
+    CampaignSpec,
+    ExecutionPath,
+    ExpertBankSpec,
+    PolicySpec,
+    SwitchSpec,
+    spec_hash,
 )
 from repro.core.switch import (
     SlotSwitchState,

@@ -12,6 +12,9 @@ Pieces:
 * ``DeviceTreePolicy`` / ``DeviceThresholdPolicy`` — host policies exported
   to flat device arrays (feature index / threshold / leaf-mode tables, plus
   the ``PackedTree`` MXU operands for the Pallas ``tree_infer`` kernel).
+* ``PerUEPolicy`` — a stacked bank of exported tables with a ``(U,)``
+  policy-index axis: UE ``u`` runs table ``policy_idx[u]`` inside the same
+  scan (per-UE policy heterogeneity; ``per_ue_policy`` builds one).
 * ``DeviceSwitchState`` — the scan-carry pytree: a per-UE rolling KPM window
   (``KPMRing`` vmapped over the UE axis), hysteresis streak counters, and
   the switch register (``pending_mode``) holding the mode that takes effect
@@ -33,7 +36,7 @@ the scan.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +84,39 @@ class DeviceThresholdPolicy(NamedTuple):
     mode_below: jax.Array  # int32
 
 
-DevicePolicy = DeviceTreePolicy | DeviceThresholdPolicy
+class PerUEPolicy(NamedTuple):
+    """Per-UE policy heterogeneity: a bank of exported tables + assignment.
+
+    ``tables`` stacks the exported device policies (trees and/or threshold
+    gates, any mix); ``policy_idx (U,)`` assigns each UE its table.
+    ``policy_infer`` evaluates every table on the full ``(U, F)`` feature
+    matrix and selects along the policy-index axis — all shapes static, so
+    the heterogeneous decision path compiles into the slot scan unchanged,
+    and each table's evaluation stays bitwise-identical to running that
+    table alone.  Retires the ROADMAP open item: different UEs in one
+    closed-loop campaign now run different exported policies.
+    """
+
+    tables: tuple  # tuple[DeviceTreePolicy | DeviceThresholdPolicy, ...]
+    policy_idx: jax.Array  # (U,) int32 — table index per UE
+
+
+def per_ue_policy(tables: "Sequence", assignment) -> PerUEPolicy:
+    """Build a validated ``PerUEPolicy`` from tables + per-UE assignment."""
+    tables = tuple(tables)
+    if not tables:
+        raise ValueError("per-UE policy needs at least one table")
+    idx = np.asarray(assignment, np.int32)
+    if idx.ndim != 1:
+        raise ValueError(f"assignment must be (n_ues,), got {idx.shape}")
+    if idx.min() < 0 or idx.max() >= len(tables):
+        raise ValueError(
+            f"assignment references tables outside [0, {len(tables)})"
+        )
+    return PerUEPolicy(tables=tables, policy_idx=jnp.asarray(idx))
+
+
+DevicePolicy = DeviceTreePolicy | DeviceThresholdPolicy | PerUEPolicy
 
 
 def export_tree_tables(
@@ -118,7 +153,23 @@ def policy_infer(
     Both are bitwise-equivalent (the kernel's one-hot feature gather is an
     exact matmul); the kernel tests assert it.  ``prev_mode`` only matters
     for the threshold policy's keep-band.
+
+    A ``PerUEPolicy`` evaluates each stacked table on the full batch and
+    gathers along its ``(U,)`` policy-index axis — UE ``u`` gets table
+    ``policy_idx[u]``'s decision, bitwise-equal to evaluating that table
+    alone (selection never touches the per-table arithmetic).
     """
+    if isinstance(policy, PerUEPolicy):
+        outs = jnp.stack(
+            [
+                policy_infer(t, x, prev_mode, backend=backend)
+                for t in policy.tables
+            ],
+            axis=0,
+        )  # (P, U)
+        return jnp.take_along_axis(
+            outs, policy.policy_idx[None, :], axis=0
+        )[0].astype(jnp.int32)
     if isinstance(policy, DeviceThresholdPolicy):
         v = x[:, policy.feature_idx]
         above = v > policy.hi
@@ -273,6 +324,8 @@ def host_replay_closed_loop(
     host_policy,
     features: np.ndarray,
     cfg: SwitchConfig,
+    *,
+    policy_idx=None,
 ) -> dict[str, np.ndarray]:
     """Replay the closed loop on host, slot by slot, per UE.
 
@@ -283,6 +336,11 @@ def host_replay_closed_loop(
     ``KPMRing`` arithmetic the scan carries (eagerly, one slot at a time),
     so any float matches bitwise; the control flow (hysteresis streak,
     switch register, boundary application) is plain Python ints.
+
+    Per-UE heterogeneous campaigns (device side: ``PerUEPolicy``) replay by
+    passing a *sequence* of host policies plus ``policy_idx`` — the same
+    ``(n_ues,)`` table assignment the device ran; UE ``u`` is replayed
+    through ``host_policy[policy_idx[u]]``.
 
     Returns ``{"active_mode", "raw_decision", "pending_mode", "n_switches"}``
     with ``(S, U)`` int arrays (``n_switches``: ``(U,)``).
@@ -296,7 +354,25 @@ def host_replay_closed_loop(
         raise ValueError(
             f"features carry {n_feat} KPMs, config names {len(cfg.feature_names)}"
         )
-    is_threshold = isinstance(host_policy, ThresholdPolicy)
+    if isinstance(host_policy, (list, tuple)):
+        if policy_idx is None:
+            raise ValueError("a per-UE policy sequence needs policy_idx")
+        idx = np.asarray(policy_idx, int)
+        if idx.shape != (n_ues,):
+            raise ValueError(f"policy_idx {idx.shape} vs n_ues {n_ues}")
+        if idx.size and (idx.min() < 0 or idx.max() >= len(host_policy)):
+            # mirror per_ue_policy: negatives would silently wrap here
+            raise ValueError(
+                f"policy_idx references policies outside [0, {len(host_policy)})"
+            )
+        policy_for_ue = [host_policy[int(i)] for i in idx]
+    else:
+        if policy_idx is not None:
+            raise ValueError(
+                "policy_idx given but host_policy is not a sequence — pass "
+                "the per-UE policy list the device campaign ran"
+            )
+        policy_for_ue = [host_policy] * n_ues
 
     rings = [ring_init(cfg.window_slots, n_feat) for _ in range(n_ues)]
     active = [cfg.default_mode] * n_ues
@@ -316,10 +392,11 @@ def host_replay_closed_loop(
                 # hold slot: register and streak frozen, held raw reported
                 raw = pending[u]
             else:
-                if is_threshold:
-                    raw = int(host_policy(window, prev_mode=pending[u]))
+                pol = policy_for_ue[u]
+                if isinstance(pol, ThresholdPolicy):
+                    raw = int(pol(window, prev_mode=pending[u]))
                 else:
-                    raw = int(host_policy(window))
+                    raw = int(pol(window))
                 if raw == pending[u]:
                     streak[u] = 0
                 else:

@@ -43,10 +43,31 @@ import jax.numpy as jnp
 from repro.kernels.switch_select import switch_scatter, switch_select
 
 
+def coerce_enum(cls: type, value, noun: str):
+    """Accept an enum member or its string value (the spec/JSON form).
+
+    Shared by the spec-facing enums (``ExecutionMode`` here,
+    ``ExecutionPath`` in ``repro.core.session``) so their coercion and
+    error shape cannot drift apart.
+    """
+    if isinstance(value, cls):
+        return value
+    try:
+        return cls(str(value).lower())
+    except ValueError:
+        raise ValueError(
+            f"unknown {noun} {value!r}; one of {[m.value for m in cls]}"
+        ) from None
+
+
 class ExecutionMode(enum.Enum):
     CONCURRENT = "concurrent"
     SELECTED_ONLY = "selected_only"
     GATED = "gated"
+
+    @classmethod
+    def coerce(cls, value: "ExecutionMode | str") -> "ExecutionMode":
+        return coerce_enum(cls, value, "execution mode")
 
 
 @dataclasses.dataclass(frozen=True)

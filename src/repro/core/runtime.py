@@ -16,6 +16,7 @@ Per slot n (paper timing semantics, 2/3.3):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Iterable, Mapping
 
 import jax
@@ -107,6 +108,31 @@ class BatchedRunHistory:
             ),
         )
 
+    @classmethod
+    def from_host(cls, hist: "RunHistory") -> "BatchedRunHistory":
+        """Lift a host-loop ``RunHistory`` into the batched result type.
+
+        The host loop serves one UE, so every array gets an ``(n_slots, 1)``
+        shape.  Scalar numeric outputs (``tb_ok`` / ``tbs`` / ``mcs`` /
+        ``phy_bits_per_s``) ride along when the run kept outputs — this is
+        what lets ``ArchesSession`` hand back one result type regardless of
+        the execution path.
+        """
+        modes = hist.modes[:, None].astype(np.int32)
+        names = list(hist.records[0].kpms) if hist.records else []
+        kpms = {
+            k: np.asarray([[r.kpms.get(k, np.nan)] for r in hist.records])
+            for k in names
+        }
+        outputs: dict[str, np.ndarray] = {}
+        if hist.records and isinstance(hist.records[0].output, Mapping):
+            for k in ("tb_ok", "tbs", "mcs", "phy_bits_per_s"):
+                if k in hist.records[0].output:
+                    outputs[k] = np.asarray(
+                        [[float(r.output[k])] for r in hist.records]
+                    )
+        return cls(modes=modes, kpms=kpms, outputs=outputs)
+
     @property
     def n_slots(self) -> int:
         return self.modes.shape[0]
@@ -188,6 +214,32 @@ def replay_batched_telemetry(agent: E3Agent, traj, *, n_slots: int | None = None
     return n
 
 
+def suggest_gated_capacity(
+    history: BatchedRunHistory, *, quantile: float = 1.0, headroom: int = 0
+) -> int:
+    """Pick ``gated_capacity`` from a recorded campaign's telemetry.
+
+    Dynamic capacity provisioning (ROADMAP): instead of a static knob, size
+    the gated sub-batch from the realized per-slot AI demand.  Demand at
+    slot ``s`` counts the UEs whose *committed* mode selected the designated
+    expert — including capacity-overflow UEs (flagged in ``gated_overflow``:
+    they selected AI but fell back), so an under-provisioned campaign
+    suggests a larger capacity than the one it ran with, not the cap it was
+    stuck at.
+
+    ``quantile`` trades provisioned FLOPs against overflow risk: ``1.0``
+    (default) covers the peak demand observed (a rerun of the same
+    trajectory overflows zero slot-UEs); ``0.95`` sheds the top 5% of
+    demand slots to the fail-safe expert.  ``headroom`` adds UEs of margin
+    on top.  The result is clamped to ``[0, n_ues]``.
+    """
+    if not 0.0 <= quantile <= 1.0:
+        raise ValueError(f"quantile {quantile} outside [0, 1]")
+    demand = (np.asarray(history.modes) == 0).sum(axis=1)
+    cap = int(np.ceil(np.quantile(demand, quantile))) + int(headroom)
+    return int(np.clip(cap, 0, history.n_ues))
+
+
 class ArchesRuntime:
     """Slot loop wiring pipeline, E3 agent and switch register.
 
@@ -228,12 +280,26 @@ class ArchesRuntime:
         ``device_policy`` (exported via ``DecisionTreePolicy.to_device`` /
         ``ThresholdPolicy.to_device``) and ``switch_config`` (a
         ``SwitchConfig``) replace ``slot_fn`` for the batched path.
+
+        .. deprecated::
+            The ``closed_loop=True`` kwarg bundle is the legacy entry
+            point.  Build closed-loop runtimes declaratively with
+            ``ArchesRuntime.from_spec(spec)`` (or run the whole campaign
+            through ``repro.core.session.ArchesSession``).
         """
-        if closed_loop and (engine is None or device_policy is None
-                            or switch_config is None):
-            raise ValueError(
-                "closed_loop=True needs engine, device_policy and switch_config"
+        if closed_loop:
+            warnings.warn(
+                "ArchesRuntime(closed_loop=True, engine=..., "
+                "device_policy=..., switch_config=...) is deprecated; use "
+                "ArchesRuntime.from_spec(spec) or ArchesSession(spec)",
+                DeprecationWarning,
+                stacklevel=2,
             )
+            if engine is None or device_policy is None or switch_config is None:
+                raise ValueError(
+                    "closed_loop=True needs engine, device_policy and "
+                    "switch_config"
+                )
         self.slot_fn = slot_fn
         self.agent = agent
         self.default_mode = default_mode
@@ -244,6 +310,50 @@ class ArchesRuntime:
         self.engine = engine
         self.device_policy = device_policy
         self.switch_config = switch_config
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        *,
+        engine: Any = None,
+        device_policy: Any = None,
+        agent: E3Agent | None = None,
+    ) -> "ArchesRuntime":
+        """Build a closed-loop runtime from a ``CampaignSpec``.
+
+        The spec-driven replacement for the deprecated ``closed_loop=True``
+        kwarg bundle: the switch configuration comes from ``spec.switch`` /
+        ``spec.feature_names``, and — unless pre-built components are
+        passed — the engine and exported device policy are compiled from
+        the spec by ``ArchesSession`` (one source of truth for both entry
+        points).
+        """
+        if engine is None or device_policy is None:
+            from repro.core.session import ArchesSession
+
+            # a pre-built engine is reused for policy training too — the
+            # session only constructs what was not passed in
+            session = ArchesSession(spec, engine=engine)
+            engine = engine if engine is not None else session.engine
+            device_policy = (
+                device_policy
+                if device_policy is not None
+                else session.device_policy
+            )
+        sw_cfg = spec.switch.to_config(spec.feature_names)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return cls(
+                agent=agent,
+                default_mode=sw_cfg.default_mode,
+                fail_safe_mode=sw_cfg.default_mode,
+                ttl_slots=spec.switch.ttl_slots,
+                closed_loop=True,
+                engine=engine,
+                device_policy=device_policy,
+                switch_config=sw_cfg,
+            )
 
     def run_batched(
         self,

@@ -1,0 +1,635 @@
+"""ArchesSession: one declarative entry point for every campaign shape.
+
+The repo grew four ways to run the switched PHY — ``PuschPipeline.run_slot``
+host loops, ``BatchedPuschPipeline.run`` / ``run_closed_loop`` /
+``run_perturbed``, and an ``ArchesRuntime`` whose constructor wanted a
+different kwarg bundle per mode.  This module replaces that sprawl with a
+single declarative surface:
+
+    spec = CampaignSpec(path="closed_loop", scenario="good_poor_good",
+                        n_ues=4, n_slots=30,
+                        policies=(PolicySpec(kind="tree"),))
+    hist = ArchesSession(spec).run()          # -> BatchedRunHistory
+
+``CampaignSpec`` is a frozen dataclass tree (scenario name + args, campaign
+shape, expert-bank config, execution path, switch/policy config, seeds)
+that round-trips to/from JSON (``to_json`` / ``from_json``; ``spec_hash``
+fingerprints it) so benchmark snapshots carry full provenance.
+``ArchesSession`` compiles the spec — AI params, expert bank, scenario
+schedules from the registry (``repro.phy.scenario``), trained/exported
+policies — and dispatches ``run()`` to one of five execution paths:
+
+* ``host`` — the seed architecture: per-slot Python loop, decisions travel
+  E3 agent -> dApp -> control inbox (single UE).
+* ``batched`` — open-loop multi-UE scan with a declared mode plan.
+* ``closed_loop`` — the decision path compiled into the scan
+  (``ArchesRuntime.from_spec``); supports per-UE policy heterogeneity via
+  ``policies`` + ``policy_assignment`` (a ``PerUEPolicy`` table bank).
+* ``gated`` — open-loop batched with compaction-gated expert execution.
+* ``perturbed`` — the methodology stage-1 sweep (``rho`` rides the UE axis).
+
+Every path returns the same ``BatchedRunHistory`` result type, and each is
+bitwise-equal on mode trajectories to its legacy entry point (the session
+builds the identical program; the test suite asserts it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.closed_loop import SwitchConfig, per_ue_policy
+from repro.core.expert_bank import ExecutionMode, coerce_enum
+from repro.core.runtime import ArchesRuntime, BatchedRunHistory
+from repro.core.telemetry import SELECTED_KPMS
+
+# -- execution paths -----------------------------------------------------------
+
+
+class ExecutionPath(enum.Enum):
+    """The campaign shapes ``ArchesSession.run`` dispatches over."""
+
+    HOST = "host"
+    BATCHED = "batched"
+    CLOSED_LOOP = "closed_loop"
+    GATED = "gated"
+    PERTURBED = "perturbed"
+
+    @classmethod
+    def coerce(cls, value: "ExecutionPath | str") -> "ExecutionPath":
+        return coerce_enum(cls, value, "execution path")
+
+
+# -- spec tree -----------------------------------------------------------------
+
+
+def _tuplify(x):
+    """Recursively normalize to the spec's JSON-stable form: lists/arrays
+    become tuples, numpy scalars become Python scalars."""
+    if isinstance(x, (list, tuple)):
+        return tuple(_tuplify(v) for v in x)
+    if isinstance(x, (np.ndarray, jax.Array)):
+        return _tuplify(np.asarray(x).tolist())
+    if isinstance(x, np.generic):
+        return x.item()
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertBankSpec:
+    """Expert-bank + AI-estimator configuration (one bank per campaign).
+
+    ``execution_mode`` is the bank's ``ExecutionMode`` value
+    (``concurrent`` / ``gated`` / ``selected_only``); ``gated_capacity``
+    sizes the compacted sub-batch (``None`` == full batch).  The AI expert
+    is the paper's ResNet estimator with ``channels`` / ``n_res_blocks``
+    and freshly initialized parameters from ``params_seed`` (campaigns
+    study switching, not estimator quality; pass trained params to
+    ``ArchesSession(ai_params=...)`` to override).
+    """
+
+    execution_mode: str = "concurrent"
+    gated_capacity: int | None = None
+    use_pallas_switch: bool = True
+    channels: int = 8
+    n_res_blocks: int = 1
+    params_seed: int = 0
+
+    def __post_init__(self):
+        # normalize enum members to their JSON-stable string value
+        object.__setattr__(
+            self,
+            "execution_mode",
+            ExecutionMode.coerce(self.execution_mode).value,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """One switching policy, declaratively.
+
+    ``kind="tree"`` — the paper's Gini decision tree, trained by profiling
+    both experts on ``train_scenario`` + ``train_scenario_args`` for
+    ``train_slots`` x ``train_ues`` slots per expert; deterministic given
+    the spec (the profiling campaign uses the engine's fixed key
+    derivation).  ``train_scenario=None`` defaults to the campaign
+    scenario when that is homogeneous; for per-UE campaigns it falls back
+    to ``good_poor_good`` with its poor window scaled into the training
+    horizon (so short campaigns still see both labels — training on a
+    single condition class yields a constant, never-switching tree).
+
+    ``kind="threshold"`` — the single-KPM gate with hysteresis: ``feature``
+    compared against ``threshold`` +- ``hysteresis``.
+    """
+
+    kind: str = "tree"
+    depth: int = 2
+    train_slots: int | None = None  # default: the campaign's n_slots
+    train_ues: int = 2
+    train_scenario: str | None = None
+    train_scenario_args: tuple = ()
+    feature: str = "snr"
+    threshold: float = 18.0
+    hysteresis: float = 0.0
+    mode_above: int = 1
+    mode_below: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("tree", "threshold"):
+            raise ValueError(f"unknown policy kind {self.kind!r}")
+        object.__setattr__(
+            self, "train_scenario_args", _tuplify(self.train_scenario_args)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchSpec:
+    """Declarative form of ``SwitchConfig`` (+ the host loop's TTL).
+
+    ``backend`` selects the in-scan tree evaluator (device paths only; the
+    host dApp calls the policy object directly).  ``hysteresis_slots`` is
+    an in-scan capability: the host path rejects values > 1 rather than
+    silently ignoring them.
+    """
+
+    window_slots: int = 8
+    hysteresis_slots: int = 1
+    period_slots: int = 1
+    default_mode: int = 1
+    backend: str = "auto"
+    ttl_slots: int = 16  # host loop only: fail-safe decay
+
+    def to_config(self, feature_names: Sequence[str]) -> SwitchConfig:
+        return SwitchConfig(
+            feature_names=tuple(feature_names),
+            window_slots=self.window_slots,
+            hysteresis_slots=self.hysteresis_slots,
+            period_slots=self.period_slots,
+            default_mode=self.default_mode,
+            backend=self.backend,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """A whole campaign as data: serialize it, hash it, run it.
+
+    ``scenario`` names a registry entry (``repro.phy.scenario``);
+    ``scenario_args`` are its factory kwargs as ``(key, value)`` pairs
+    (kept as pairs so the spec stays hashable and JSON-stable).  ``modes``
+    is the open-loop mode plan for the batched/gated paths — a scalar or a
+    nested tuple accepted by ``normalize_modes``.  ``policies`` +
+    ``policy_assignment`` declare the decision side: one entry == every UE
+    runs it; several + an ``(n_ues,)`` assignment == per-UE heterogeneity
+    in the closed loop.  ``rho`` is the perturbation grid of the
+    methodology path (it rides the UE axis, so ``n_ues == len(rho)``).
+    """
+
+    path: str = "batched"
+    scenario: str = "good_poor_good"
+    scenario_args: tuple = ()
+    n_ues: int = 4
+    n_slots: int = 30
+    n_prb: int = 24
+    seed: int = 0
+    modes: Any = 1
+    bank: ExpertBankSpec = dataclasses.field(default_factory=ExpertBankSpec)
+    policies: tuple = ()
+    policy_assignment: tuple | None = None
+    switch: SwitchSpec = dataclasses.field(default_factory=SwitchSpec)
+    feature_names: tuple = SELECTED_KPMS
+    rho: tuple | None = None
+
+    def __post_init__(self):
+        # normalize an enum member to its JSON-stable string value
+        object.__setattr__(self, "path", ExecutionPath.coerce(self.path).value)
+        for name in ("scenario_args", "policies", "feature_names"):
+            object.__setattr__(self, name, _tuplify(getattr(self, name)))
+        object.__setattr__(self, "modes", _tuplify(self.modes))
+        for name in ("policy_assignment", "rho"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, _tuplify(v))
+        if self.n_ues < 1 or self.n_slots < 1:
+            raise ValueError("n_ues and n_slots must be >= 1")
+        for k, _ in self.scenario_args:
+            if not isinstance(k, str):
+                raise ValueError("scenario_args must be (name, value) pairs")
+        if self.policy_assignment is not None:
+            if not self.policies:
+                raise ValueError(
+                    "policy_assignment indexes spec.policies, which is empty"
+                )
+            if len(self.policy_assignment) != self.n_ues:
+                raise ValueError(
+                    f"policy_assignment has {len(self.policy_assignment)} "
+                    f"entries for n_ues={self.n_ues}"
+                )
+            if not all(
+                0 <= int(i) < len(self.policies)
+                for i in self.policy_assignment
+            ):
+                raise ValueError("policy_assignment indexes out of range")
+
+    # -- derived views --------------------------------------------------------
+
+    @property
+    def execution_path(self) -> ExecutionPath:
+        return ExecutionPath.coerce(self.path)
+
+    @property
+    def scenario_kwargs(self) -> dict:
+        return dict(self.scenario_args)
+
+    # -- JSON round trip -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CampaignSpec":
+        d = dict(d)
+        if "bank" in d and not isinstance(d["bank"], ExpertBankSpec):
+            d["bank"] = ExpertBankSpec(**d["bank"])
+        if "switch" in d and not isinstance(d["switch"], SwitchSpec):
+            d["switch"] = SwitchSpec(**d["switch"])
+        if "policies" in d:
+            d["policies"] = tuple(
+                p if isinstance(p, PolicySpec) else PolicySpec(**p)
+                for p in d["policies"]
+            )
+        return cls(**d)
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys) — the provenance string."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CampaignSpec":
+        return cls.from_dict(json.loads(s))
+
+
+def spec_hash(spec: CampaignSpec) -> str:
+    """Short stable fingerprint of a spec's canonical JSON."""
+    return hashlib.sha256(spec.to_json().encode()).hexdigest()[:16]
+
+
+# -- the session façade --------------------------------------------------------
+
+
+class ArchesSession:
+    """Compile a ``CampaignSpec`` into runnable components and run it.
+
+    Construction is lazy-but-cached: the slot config and scenario resolve
+    immediately (cheap, and validation fails fast); AI params, engines and
+    trained policies build on first use and are reused across ``run()``
+    calls.  ``run()`` always returns a ``BatchedRunHistory`` — host-loop
+    campaigns are lifted to the ``(n_slots, 1)`` shape — so downstream
+    tooling (KPM series, ``suggest_gated_capacity``, benchmark snapshots)
+    is path-agnostic.
+    """
+
+    def __init__(
+        self,
+        spec: CampaignSpec,
+        *,
+        ai_params: Any = None,
+        host_policies: Sequence | None = None,
+        engine: Any = None,
+    ):
+        """Overrides (all optional) let a caller reuse pre-built components:
+        trained ``ai_params``, already-fitted ``host_policies``, or a
+        compiled ``engine`` (which must match the spec's bank — the session
+        trusts it)."""
+        from repro.phy.nr import SlotConfig
+        from repro.phy.scenario import get_scenario
+
+        self.spec = spec
+        self.path = spec.execution_path
+        self._validate()
+        self.cfg = SlotConfig(n_prb=spec.n_prb)
+        scenario = get_scenario(spec.scenario)
+        self.schedule = scenario.schedule(
+            n_ues=spec.n_ues if scenario.per_ue else None,
+            **spec.scenario_kwargs,
+        )
+        self._ai_params = ai_params
+        self._host_policies = (
+            tuple(host_policies) if host_policies is not None else None
+        )
+        self._engine = engine
+        self._train_engine = None
+        self._pipeline = None
+        self._device_policy = None
+
+    # -- validation ------------------------------------------------------------
+
+    def _validate(self) -> None:
+        from repro.phy.scenario import get_scenario
+
+        spec, path = self.spec, self.path
+        bank_mode = ExecutionMode.coerce(spec.bank.execution_mode)
+        if len(spec.policies) > 1 and spec.policy_assignment is None:
+            raise ValueError(
+                "several policies need an explicit policy_assignment "
+                "(which UE runs which table)"
+            )
+        if path is ExecutionPath.HOST:
+            if spec.n_ues != 1:
+                raise ValueError("the host loop serves one UE: n_ues must be 1")
+            if bank_mode is ExecutionMode.GATED:
+                raise ValueError("gated execution is the batched path")
+            if not spec.policies:
+                raise ValueError("the host loop needs one PolicySpec")
+            if get_scenario(spec.scenario).per_ue:
+                raise ValueError(
+                    f"scenario {spec.scenario!r} is per-UE; the host path "
+                    "needs a homogeneous scenario"
+                )
+            if spec.switch.hysteresis_slots != 1:
+                raise ValueError(
+                    "the host E3/dApp loop has no hysteresis streak; "
+                    "hysteresis_slots > 1 needs the closed_loop path"
+                )
+        if path is ExecutionPath.CLOSED_LOOP and not spec.policies:
+            raise ValueError("closed_loop needs at least one PolicySpec")
+        if path is ExecutionPath.PERTURBED:
+            if spec.rho is None:
+                raise ValueError("perturbed needs a rho grid")
+            if len(spec.rho) != spec.n_ues:
+                raise ValueError(
+                    f"rho rides the UE axis: len(rho)={len(spec.rho)} "
+                    f"must equal n_ues={spec.n_ues}"
+                )
+        # the path name is the declaration: "gated" implies a gated bank
+        # (normalized on the session, never mutating the user's spec)
+        self.bank_spec = (
+            dataclasses.replace(spec.bank, execution_mode="gated")
+            if path is ExecutionPath.GATED
+            and bank_mode is ExecutionMode.CONCURRENT
+            else spec.bank
+        )
+        if path is ExecutionPath.GATED and ExecutionMode.coerce(
+            self.bank_spec.execution_mode
+        ) is not ExecutionMode.GATED:
+            raise ValueError(
+                f"path='gated' with a {self.bank_spec.execution_mode!r} bank "
+                "would silently run un-gated; declare the bank gated (or "
+                "concurrent, which the path normalizes)"
+            )
+
+    # -- compiled components ---------------------------------------------------
+
+    @property
+    def net(self):
+        from repro.phy.ai_estimator import AiEstimatorConfig
+
+        return AiEstimatorConfig(
+            channels=self.bank_spec.channels,
+            n_res_blocks=self.bank_spec.n_res_blocks,
+        )
+
+    @property
+    def ai_params(self):
+        if self._ai_params is None:
+            from repro.phy.ai_estimator import init_params
+
+            self._ai_params = init_params(
+                jax.random.PRNGKey(self.bank_spec.params_seed), self.cfg, self.net
+            )
+        return self._ai_params
+
+    @property
+    def engine(self):
+        """The batched multi-UE engine configured per the bank spec."""
+        if self._engine is None:
+            from repro.phy.pipeline import BatchedPuschPipeline
+
+            bank = self.bank_spec
+            self._engine = BatchedPuschPipeline(
+                self.cfg,
+                self.ai_params,
+                net=self.net,
+                execution_mode=ExecutionMode.coerce(bank.execution_mode),
+                use_pallas_switch=bank.use_pallas_switch,
+                gated_capacity=bank.gated_capacity,
+            )
+        return self._engine
+
+    @property
+    def pipeline(self):
+        """The single-UE host pipeline (host path only)."""
+        if self._pipeline is None:
+            from repro.phy.pipeline import PuschPipeline
+
+            bank = self.bank_spec
+            self._pipeline = PuschPipeline(
+                self.cfg,
+                self.ai_params,
+                net=self.net,
+                execution_mode=ExecutionMode.coerce(bank.execution_mode),
+                use_pallas_switch=bank.use_pallas_switch,
+            )
+        return self._pipeline
+
+    def _training_engine(self):
+        """A concurrent engine for expert profiling (shared when possible)."""
+        mode = ExecutionMode.coerce(self.bank_spec.execution_mode)
+        if mode is ExecutionMode.CONCURRENT:
+            return self.engine
+        if self._train_engine is None:
+            from repro.phy.pipeline import BatchedPuschPipeline
+
+            self._train_engine = BatchedPuschPipeline(
+                self.cfg,
+                self.ai_params,
+                net=self.net,
+                execution_mode=ExecutionMode.CONCURRENT,
+                use_pallas_switch=self.bank_spec.use_pallas_switch,
+            )
+        return self._train_engine
+
+    def _train_schedule(self, ps: PolicySpec):
+        from repro.phy.scenario import get_scenario, good_poor_good_schedule
+
+        if ps.train_scenario is not None:
+            sc = get_scenario(ps.train_scenario)
+            if sc.per_ue:
+                raise ValueError(
+                    f"train_scenario {ps.train_scenario!r} is per-UE; "
+                    "policies train on one labelled condition stream"
+                )
+            return sc.schedule(**dict(ps.train_scenario_args))
+        if callable(self.schedule):  # homogeneous campaign scenario
+            return self.schedule
+        # heterogeneous campaign: fall back to the paper's Fig. 9 stream
+        # with the poor window scaled into the training horizon — the
+        # default 100..200 window would sit past a short campaign's end and
+        # label every slot 'good', training a constant tree
+        n = ps.train_slots or self.spec.n_slots
+        return good_poor_good_schedule(poor_start=n // 3, poor_end=2 * n // 3)
+
+    @property
+    def host_policies(self) -> tuple:
+        """The host policy objects, trained/built per ``spec.policies``."""
+        if self._host_policies is None:
+            from repro.core.policy import ThresholdPolicy, profile_and_fit_tree
+
+            built = []
+            for ps in self.spec.policies:
+                if ps.kind == "threshold":
+                    built.append(
+                        ThresholdPolicy(
+                            feature_idx=self.spec.feature_names.index(ps.feature),
+                            threshold=ps.threshold,
+                            hysteresis=ps.hysteresis,
+                            mode_above=ps.mode_above,
+                            mode_below=ps.mode_below,
+                        )
+                    )
+                else:
+                    built.append(
+                        profile_and_fit_tree(
+                            self._training_engine(),
+                            self._train_schedule(ps),
+                            n_slots=ps.train_slots or self.spec.n_slots,
+                            n_ues=ps.train_ues,
+                            depth=ps.depth,
+                            feature_names=self.spec.feature_names,
+                        )
+                    )
+            self._host_policies = tuple(built)
+        return self._host_policies
+
+    @property
+    def device_policy(self):
+        """Exported device tables: one table, or a per-UE ``PerUEPolicy``."""
+        if self._device_policy is None:
+            spec = self.spec
+            tables = tuple(p.to_device() for p in self.host_policies)
+            if len(tables) == 1 and spec.policy_assignment is None:
+                self._device_policy = tables[0]
+            else:
+                if spec.policy_assignment is None:
+                    # only reachable via a host_policies override longer
+                    # than spec.policies (spec-level specs validate earlier)
+                    raise ValueError(
+                        "several policies need an explicit policy_assignment"
+                    )
+                self._device_policy = per_ue_policy(
+                    tables, spec.policy_assignment
+                )
+        return self._device_policy
+
+    def host_replay(self, hist: BatchedRunHistory) -> dict:
+        """Replay a closed-loop history through the host policy objects.
+
+        The equivalence oracle, packaged with the session's own feature
+        order, switch config and per-UE assignment so callers (quickstart,
+        benchmarks) cannot drift from the in-scan stacking: returns
+        ``host_replay_closed_loop``'s dict; compare ``hist.modes`` against
+        ``result["active_mode"]`` for the bitwise contract.
+        """
+        from repro.core.closed_loop import host_replay_closed_loop
+
+        spec = self.spec
+        feats = np.stack(
+            [hist.kpms[n] for n in spec.feature_names], axis=-1
+        ).astype(np.float32)
+        sw_cfg = spec.switch.to_config(spec.feature_names)
+        if len(self.host_policies) == 1 and spec.policy_assignment is None:
+            return host_replay_closed_loop(self.host_policies[0], feats, sw_cfg)
+        assignment = (
+            spec.policy_assignment
+            if spec.policy_assignment is not None
+            else (0,) * spec.n_ues
+        )
+        return host_replay_closed_loop(
+            list(self.host_policies), feats, sw_cfg, policy_idx=assignment
+        )
+
+    # -- execution -------------------------------------------------------------
+
+    def run(self) -> BatchedRunHistory:
+        """Execute the campaign; one result type for every path."""
+        runner = {
+            ExecutionPath.HOST: self._run_host,
+            ExecutionPath.BATCHED: self._run_open_loop,
+            ExecutionPath.GATED: self._run_open_loop,
+            ExecutionPath.CLOSED_LOOP: self._run_closed_loop,
+            ExecutionPath.PERTURBED: self._run_perturbed,
+        }[self.path]
+        return runner()
+
+    def _run_host(self) -> BatchedRunHistory:
+        from repro.core.dapp import DApp, connect_dapp
+        from repro.core.e3 import E3Agent
+
+        spec = self.spec
+        agent = E3Agent()
+        # the single UE may still be assigned any declared policy table
+        pol = spec.policy_assignment[0] if spec.policy_assignment else 0
+        dapp = DApp(
+            self.host_policies[pol],
+            spec.feature_names,
+            window_slots=spec.switch.window_slots,
+            period_slots=spec.switch.period_slots,
+        )
+        connect_dapp(agent, dapp)
+        runtime = ArchesRuntime(
+            self.pipeline.make_slot_fn(self.schedule),
+            agent,
+            default_mode=spec.switch.default_mode,
+            fail_safe_mode=spec.switch.default_mode,
+            ttl_slots=spec.switch.ttl_slots,
+            keep_outputs=True,
+        )
+        return BatchedRunHistory.from_host(runtime.run(range(spec.n_slots)))
+
+    def _run_open_loop(self) -> BatchedRunHistory:
+        from repro.phy.pipeline import normalize_modes
+
+        spec = self.spec
+        modes = normalize_modes(
+            np.asarray(spec.modes, np.int32), spec.n_slots, spec.n_ues
+        )
+        _, traj = self.engine.run(
+            self.schedule,
+            modes,
+            n_slots=spec.n_slots,
+            n_ues=spec.n_ues,
+            key=jax.random.PRNGKey(spec.seed),
+        )
+        return BatchedRunHistory.from_trajectory(modes, traj)
+
+    def _run_closed_loop(self) -> BatchedRunHistory:
+        spec = self.spec
+        runtime = ArchesRuntime.from_spec(
+            spec, engine=self.engine, device_policy=self.device_policy
+        )
+        return runtime.run_batched(
+            self.schedule,
+            n_slots=spec.n_slots,
+            n_ues=spec.n_ues,
+            key=jax.random.PRNGKey(spec.seed),
+        )
+
+    def _run_perturbed(self) -> BatchedRunHistory:
+        spec = self.spec
+        rho = jnp.asarray(spec.rho, jnp.float32)
+        _, traj = self.engine.run_perturbed(
+            self.schedule,
+            rho,
+            n_slots=spec.n_slots,
+            key=jax.random.PRNGKey(spec.seed),
+        )
+        # stage 1 is MMSE-only by construction: the mode grid is all-1
+        modes = np.ones((spec.n_slots, spec.n_ues), np.int32)
+        return BatchedRunHistory.from_trajectory(modes, traj)

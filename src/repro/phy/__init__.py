@@ -21,9 +21,19 @@ from repro.phy.pipeline import LinkState, PuschPipeline
 from repro.phy.scenario import (
     GOOD,
     POOR,
+    POOR_WINDOW,
+    PoorWindow,
+    Scenario,
+    bursty_interference_schedule,
     condition_label,
     constant_schedule,
+    get_scenario,
     good_poor_good_schedule,
+    make_schedule,
+    register_scenario,
+    scenario_names,
+    scenario_params,
+    snr_ramp_schedule,
 )
 
 __all__ = [
@@ -48,7 +58,17 @@ __all__ = [
     "PuschPipeline",
     "GOOD",
     "POOR",
+    "POOR_WINDOW",
+    "PoorWindow",
+    "Scenario",
+    "bursty_interference_schedule",
     "condition_label",
     "constant_schedule",
+    "get_scenario",
     "good_poor_good_schedule",
+    "make_schedule",
+    "register_scenario",
+    "scenario_names",
+    "scenario_params",
+    "snr_ramp_schedule",
 ]

@@ -270,6 +270,31 @@ def channel_params_schedule(
     return cfgs[0].profile, jax.tree.map(lambda *ls: jnp.stack(ls, 0), *params)
 
 
+def channel_params_ue_schedule(
+    cfg: SlotConfig, schedules, n_slots: int
+) -> tuple[TdlProfile, ChannelParams]:
+    """Per-UE heterogeneous schedules -> one stacked ``ChannelParams``.
+
+    ``schedules`` is one slot schedule per UE; every leaf of the result
+    carries a leading ``(n_slots, n_ues)`` shape (slot axis first so the
+    stack rides ``lax.scan`` unchanged; the engine vmaps the UE axis).  All
+    schedules must share one TDL profile — the per-UE axis varies the
+    *conditions* (SNR, interference), not the propagation environment,
+    mirroring a single cell with heterogeneous users.
+    """
+    pairs = [channel_params_schedule(cfg, s, n_slots) for s in schedules]
+    profiles = {profile for profile, _ in pairs}
+    if len(profiles) > 1:
+        raise ValueError(
+            "per-UE traced schedules require a single shared TDL profile; "
+            f"got {len(profiles)}"
+        )
+    params = jax.tree.map(
+        lambda *ls: jnp.stack(ls, 1), *[p for _, p in pairs]
+    )
+    return pairs[0][0], params
+
+
 def _interference_symbol_mask_traced(
     key: jax.Array, cfg: SlotConfig, p: ChannelParams
 ) -> jax.Array:

@@ -45,6 +45,7 @@ from repro.phy.channel import (
     TdlProfile,
     apply_channel,
     channel_params_schedule,
+    channel_params_ue_schedule,
     simulate_slot_channel,
     simulate_slot_channel_traced,
 )
@@ -418,6 +419,27 @@ def normalize_modes(modes, n_slots: int, n_ues: int) -> jax.Array:
     raise ValueError(f"modes shape {m.shape} vs (n_slots={n_slots}, n_ues={n_ues})")
 
 
+def resolve_schedule(
+    cfg: SlotConfig, schedule, n_slots: int, n_ues: int
+) -> tuple[TdlProfile, ChannelParams]:
+    """Lower a scenario to traced per-slot channel params.
+
+    ``schedule`` is either one ``schedule(slot) -> ChannelConfig`` callable
+    (all UEs share the conditions; params leaves ``(n_slots, ...)``) or a
+    per-UE sequence of them (heterogeneous cell; leaves
+    ``(n_slots, n_ues, ...)``).
+    """
+    if callable(schedule):
+        return channel_params_schedule(cfg, schedule, n_slots)
+    schedules = list(schedule)
+    if len(schedules) != n_ues:
+        raise ValueError(
+            f"per-UE schedule list has {len(schedules)} entries for "
+            f"n_ues={n_ues}"
+        )
+    return channel_params_ue_schedule(cfg, schedules, n_slots)
+
+
 class BatchedPuschPipeline:
     """Multi-UE PUSCH slot engine: vmapped stages + scan-compiled slot loop.
 
@@ -646,9 +668,15 @@ class BatchedPuschPipeline:
         p: ChannelParams,
         rho: jax.Array | None = None,
     ):
-        pre = jax.vmap(
-            lambda snr, olla, key: self._ue_pre(profile, p, snr, olla, key)
-        )(link.reported_snr_db, link.olla_offset_db, keys)
+        if jnp.ndim(p.noise_var) == 1:
+            # per-UE heterogeneous conditions: params carry a (U,) axis
+            pre = jax.vmap(
+                lambda snr, olla, key, pu: self._ue_pre(profile, pu, snr, olla, key)
+            )(link.reported_snr_db, link.olla_offset_db, keys, p)
+        else:
+            pre = jax.vmap(
+                lambda snr, olla, key: self._ue_pre(profile, p, snr, olla, key)
+            )(link.reported_snr_db, link.olla_offset_db, keys)
         n_ues = keys.shape[0]
         if rho is None:
             out = self.bank(jnp.asarray(modes, jnp.int32), pre["h_ls"])
@@ -739,7 +767,7 @@ class BatchedPuschPipeline:
         n_ues = rho.shape[0]
         if key is None:
             key = jax.random.PRNGKey(0)
-        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        profile, params = resolve_schedule(self.cfg, schedule, n_slots, n_ues)
         if ue_keys is None:
             ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
                 jnp.arange(n_ues)
@@ -835,7 +863,7 @@ class BatchedPuschPipeline:
         """
         if key is None:
             key = jax.random.PRNGKey(0)
-        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        profile, params = resolve_schedule(self.cfg, schedule, n_slots, n_ues)
         if ue_keys is None:
             ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
                 jnp.arange(n_ues)
@@ -876,7 +904,9 @@ class BatchedPuschPipeline:
 
         Args:
           schedule: ``schedule(slot) -> ChannelConfig`` scenario (one TDL
-            profile across the run; conditions may change per slot).
+            profile across the run; conditions may change per slot), or a
+            per-UE sequence of such schedules (heterogeneous cell — UE
+            ``u`` follows ``schedule[u]``; all share one TDL profile).
           modes: expert selection — scalar, per-slot ``(S,)``, per-UE
             ``(U,)`` or full ``(S, U)`` grid.
           key: root PRNG key; UE ``u`` in slot ``s`` consumes
@@ -895,7 +925,7 @@ class BatchedPuschPipeline:
         """
         if key is None:
             key = jax.random.PRNGKey(0)
-        profile, params = channel_params_schedule(self.cfg, schedule, n_slots)
+        profile, params = resolve_schedule(self.cfg, schedule, n_slots, n_ues)
         modes = normalize_modes(modes, n_slots, n_ues)
         if ue_keys is None:
             ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(

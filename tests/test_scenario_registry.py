@@ -1,0 +1,134 @@
+"""Scenario registry: named lookup, traced-params emission, PoorWindow dedup."""
+
+import numpy as np
+import pytest
+
+from repro.phy import scenario as S
+from repro.phy.channel import ChannelConfig, channel_params_ue_schedule
+from repro.phy.nr import SlotConfig
+
+CFG = SlotConfig(n_prb=24)
+NAMED = ("good", "poor", "good_poor_good", "bursty_interference",
+         "snr_ramp", "mixed_cell")
+
+
+def test_all_named_scenarios_registered():
+    for name in NAMED:
+        assert name in S.scenario_names()
+
+
+@pytest.mark.parametrize("name", NAMED)
+def test_registry_lookup_resolves_to_schedules(name):
+    sc = S.get_scenario(name)
+    assert sc.name == name and sc.description
+    sched = sc.schedule(n_ues=3 if sc.per_ue else None)
+    if sc.per_ue:
+        assert len(sched) == 3
+        assert all(isinstance(s(0), ChannelConfig) for s in sched)
+    else:
+        assert isinstance(sched(0), ChannelConfig)
+
+
+@pytest.mark.parametrize("name", NAMED)
+def test_every_scenario_emits_traced_channel_params(name):
+    """Registry -> device-traceable ChannelParams, homogeneous or per-UE."""
+    n_slots, n_ues = 6, 2
+    profile, params = S.scenario_params(
+        CFG, name, n_slots=n_slots, n_ues=n_ues
+    )
+    expected = (n_slots, n_ues) if S.get_scenario(name).per_ue else (n_slots,)
+    assert params.noise_var.shape == expected
+    assert params.sc_mask.shape == expected + (CFG.n_sc,)
+
+
+def test_per_ue_scenario_requires_n_ues():
+    with pytest.raises(ValueError, match="per-UE"):
+        S.get_scenario("mixed_cell").schedule()
+
+
+def test_unknown_scenario_lists_registry():
+    with pytest.raises(KeyError, match="good_poor_good"):
+        S.get_scenario("no_such_scenario")
+
+
+def test_register_duplicate_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        S.register_scenario("good", lambda: S.constant_schedule(S.GOOD))
+    # overwrite=True is the explicit escape hatch (restore the original)
+    orig = S.get_scenario("good")
+    S.register_scenario("good", orig.factory, overwrite=True,
+                        description=orig.description)
+
+
+def test_register_custom_scenario_roundtrip():
+    name = "test_custom_scenario"
+    try:
+        S.register_scenario(
+            name, lambda: S.constant_schedule(S.POOR), description="test"
+        )
+        assert S.make_schedule(name)(0) == S.POOR
+    finally:
+        S._SCENARIOS.pop(name, None)
+
+
+# -- PoorWindow: one source of truth for the Fig. 9 boundaries -----------------
+
+
+def test_poor_window_defaults_shared():
+    sched = S.good_poor_good_schedule()
+    w = S.POOR_WINDOW
+    for slot in (0, w.start - 1, w.start, (w.start + w.end) // 2, w.end - 1,
+                 w.end, w.end + 50):
+        in_window = slot in w
+        assert sched(slot).interference == in_window
+        assert S.condition_label(slot) == (0 if in_window else 1)
+
+
+def test_poor_window_custom_bounds_consistent():
+    sched = S.good_poor_good_schedule(poor_start=3, poor_end=5)
+    got = [sched(s).interference for s in range(7)]
+    assert got == [False, False, False, True, True, False, False]
+    labels = [S.condition_label(s, poor_start=3, poor_end=5) for s in range(7)]
+    assert labels == [1, 1, 1, 0, 0, 1, 1]
+
+
+# -- new scenario semantics ----------------------------------------------------
+
+
+def test_bursty_interference_duty_cycle():
+    sched = S.bursty_interference_schedule(period=8, burst_slots=3)
+    on = [sched(s).interference for s in range(16)]
+    assert on == ([True] * 3 + [False] * 5) * 2
+    with pytest.raises(ValueError, match="burst_slots"):
+        S.bursty_interference_schedule(period=4, burst_slots=5)
+    with pytest.raises(ValueError, match="period"):
+        S.bursty_interference_schedule(period=0, burst_slots=0)
+
+
+def test_snr_ramp_sweeps_and_returns():
+    sched = S.snr_ramp_schedule(snr_hi_db=14.0, snr_lo_db=2.0, period=8)
+    snrs = [sched(s).snr_db for s in range(9)]
+    assert snrs[0] == pytest.approx(14.0)
+    assert snrs[4] == pytest.approx(2.0)  # trough at period/2
+    assert snrs[8] == pytest.approx(14.0)  # periodic
+    assert not any(sched(s).interference for s in range(9))
+    assert all(np.diff(snrs[:5]) < 0) and all(np.diff(snrs[4:]) > 0)
+    # an odd period must still repeat exactly every `period` slots
+    odd = S.snr_ramp_schedule(period=7)
+    assert [odd(s).snr_db for s in range(7)] == pytest.approx(
+        [odd(s + 7).snr_db for s in range(7)]
+    )
+    assert odd(3).snr_db != odd(0).snr_db
+    with pytest.raises(ValueError, match="period"):
+        S.snr_ramp_schedule(period=0)
+
+
+def test_mixed_cell_is_heterogeneous():
+    scheds = S.make_schedule("mixed_cell", n_ues=4)
+    # UE 0 stays clean; UE 1/2 see interference at some slot
+    assert not any(scheds[0](s).interference for s in range(30))
+    assert any(scheds[1](s).interference for s in range(30))
+    assert any(scheds[2](s).interference for s in range(30))
+    # the per-UE stack is traced-schedule compatible (shared profile)
+    profile, params = channel_params_ue_schedule(CFG, scheds, 6)
+    assert params.interf_on.shape == (6, 4)
