@@ -3,18 +3,19 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
                                                 [--json BENCH_<tag>.json]
 
-``--smoke`` is the CI fast path: tiny expert training, five sections only
+``--smoke`` is the CI fast path: tiny expert training, six sections only
 (switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
-equivalence + gated-execution contract + session-API dispatch/provenance),
-exits non-zero on any failure.  Finishes in minutes where the full sweep
-takes an hour.
+equivalence + gated-execution contract + session-API dispatch/provenance +
+sharded-engine parity/scaling), exits non-zero on any failure.  Finishes in
+minutes where the full sweep takes an hour.
 
 ``--json PATH`` additionally writes a machine-readable perf snapshot —
-slot-UEs/s, in-scan decision latency, and executed-FLOPs-per-slot across AI
-shares {0, 1/16, 1/2, 1} — so the repo's bench trajectory accumulates
-across PRs.  The snapshot embeds the serialized ``CampaignSpec`` + its
-``spec_hash`` from the session section, so every perf number carries the
-exact campaign it was measured on.
+slot-UEs/s, in-scan decision latency, executed-FLOPs-per-slot across AI
+shares {0, 1/16, 1/2, 1}, and the sharded-engine parity/scaling row — so
+the repo's bench trajectory accumulates across PRs.  The snapshot embeds
+the serialized ``CampaignSpec`` + its ``spec_hash`` from the session
+section, so every perf number carries the exact campaign it was measured
+on.
 """
 
 from __future__ import annotations
@@ -59,6 +60,15 @@ def _json_payload(outs: dict) -> dict:
         payload["campaign_spec"] = session["spec"]
         payload["campaign_spec_hash"] = session["spec_hash"]
         payload["session_slot_ues_per_s"] = session["session_slot_ues_per_s"]
+    sharded = outs.get("sharded")
+    if sharded:
+        payload["sharded"] = {
+            "parity": sharded["parity"],
+            "one_device_slot_ues_per_s":
+                sharded["one_device_slot_ues_per_s"],
+            "forced_shards": sharded["forced"]["n_shards"],
+            "forced_slot_ues_per_s": sharded["forced"]["slot_ues_per_s"],
+        }
     return payload
 
 
@@ -86,6 +96,7 @@ def main() -> None:
         bench_policy,
         bench_resources,
         bench_session,
+        bench_sharded,
         bench_switch,
         bench_timeseries,
         roofline,
@@ -114,6 +125,11 @@ def main() -> None:
             # matches its per-UE host replay (spec JSON round-trip included)
             ("session", "Session API (smoke)", bench_session.run,
              {"n_slots": 12, "n_ues": 2}),
+            # raises unless the sharded entry is bitwise-equal to the
+            # unsharded engine on 1 device; also runs the same campaign on
+            # a forced-8-shard CPU mesh (subprocess) for scaling numbers
+            ("sharded", "Sharded multi-cell engine (smoke)",
+             bench_sharded.run, {"n_slots": 10, "n_ues": 8}),
         ]
     else:
         sections = [
@@ -135,6 +151,10 @@ def main() -> None:
              bench_session.run,
              {"n_slots": 24 if args.fast else 48,
               "n_ues": 4 if args.fast else 8}),
+            ("sharded", "Sharded multi-cell engine",
+             bench_sharded.run,
+             {"n_slots": 16 if args.fast else 32,
+              "n_ues": 8 if args.fast else 16}),
             (None, "Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
             (None, "Fig. 11 GPU resources proxy", bench_resources.run, {}),
             (None, "Roofline (from dry-run)", roofline.run,

@@ -63,6 +63,17 @@ from repro.core.switch import (
     init_switch_state,
     slot_boundary,
 )
+from repro.core.topology import (
+    CellTopology,
+    TopologySpec,
+    make_cpu_mesh,
+    make_production_mesh,
+    make_ue_mesh,
+    per_shard_capacity,
+    run_closed_loop_sharded,
+    run_perturbed_sharded,
+    run_sharded,
+)
 from repro.core.telemetry import (
     AERIAL_CANDIDATE_KPMS,
     AERIAL_CUMULATIVE_KPMS,

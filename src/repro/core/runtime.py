@@ -67,9 +67,16 @@ class BatchedRunHistory:
     # closed-loop extras (device-decided campaigns only)
     decisions: np.ndarray | None = None  # (S, U) raw per-slot policy output
     n_switches: np.ndarray | None = None  # (U,) boundary transitions
+    # multi-cell extras (sharded-topology campaigns only)
+    cell_of_ue: np.ndarray | None = None  # (U,) int32 global cell ids
+    # gated capacity the campaign actually provisioned (auto-capacity runs
+    # record the chosen K here; None == not a capacity-provisioned run)
+    provisioned_capacity: int | None = None
 
     @classmethod
-    def from_trajectory(cls, modes, traj) -> "BatchedRunHistory":
+    def from_trajectory(
+        cls, modes, traj, *, cell_of_ue=None, provisioned_capacity=None
+    ) -> "BatchedRunHistory":
         """Build from ``BatchedPuschPipeline.run`` output."""
         from repro.core.telemetry import flatten_kpm_sources
 
@@ -79,10 +86,17 @@ class BatchedRunHistory:
         outputs = {
             k: np.asarray(v) for k, v in traj.items() if k != "kpms"
         }
-        return cls(modes=np.asarray(modes), kpms=kpms, outputs=outputs)
+        return cls(
+            modes=np.asarray(modes), kpms=kpms, outputs=outputs,
+            cell_of_ue=None if cell_of_ue is None else np.asarray(cell_of_ue),
+            provisioned_capacity=provisioned_capacity,
+        )
 
     @classmethod
-    def from_closed_loop(cls, traj, final_switch=None) -> "BatchedRunHistory":
+    def from_closed_loop(
+        cls, traj, final_switch=None, *, cell_of_ue=None,
+        provisioned_capacity=None,
+    ) -> "BatchedRunHistory":
         """Build from ``BatchedPuschPipeline.run_closed_loop`` output.
 
         ``modes`` are the *device-decided* per-slot active modes; the raw
@@ -106,6 +120,8 @@ class BatchedRunHistory:
                 if final_switch is None
                 else np.asarray(final_switch.n_switches)
             ),
+            cell_of_ue=None if cell_of_ue is None else np.asarray(cell_of_ue),
+            provisioned_capacity=provisioned_capacity,
         )
 
     @classmethod
@@ -175,6 +191,50 @@ class BatchedRunHistory:
         """Cell-level aggregate: per-slot mean over UEs."""
         return self.kpms[name].mean(axis=1)
 
+    # -- per-cell reductions (sharded multi-cell campaigns) -----------------
+
+    def _cells(self) -> np.ndarray:
+        if self.cell_of_ue is None:
+            raise ValueError(
+                "this history has no cell layout — per-cell reductions need "
+                "a campaign run under a TopologySpec"
+            )
+        return np.asarray(self.cell_of_ue)
+
+    @property
+    def n_cells(self) -> int:
+        return int(self._cells().max()) + 1
+
+    @property
+    def per_cell_ai_share(self) -> np.ndarray:
+        """Per-cell fraction of slot-UEs *served* by the AI expert ((C,)).
+
+        Same served-not-selected semantics as ``ai_share`` (capacity
+        overflow falls back and does not count), reduced over each cell's
+        member UEs.
+        """
+        cells = self._cells()
+        served = self.modes == 0
+        if "gated_overflow" in self.outputs:
+            served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
+        return np.asarray([
+            served[:, cells == c].mean() for c in range(self.n_cells)
+        ])
+
+    def per_cell_kpm(self, name: str) -> np.ndarray:
+        """Per-slot per-cell mean of one KPM ((S, C))."""
+        cells = self._cells()
+        v = self.kpms[name]
+        return np.stack(
+            [v[:, cells == c].mean(axis=1) for c in range(self.n_cells)],
+            axis=1,
+        )
+
+    @property
+    def per_cell_throughput(self) -> np.ndarray:
+        """Per-cell mean PHY throughput over the campaign ((C,) bit/s)."""
+        return self.per_cell_kpm("phy_throughput").mean(axis=0)
+
     def per_ue(self, ue: int) -> list[SlotRecord]:
         """One UE's trajectory as host-loop-style slot records."""
         return [
@@ -215,7 +275,11 @@ def replay_batched_telemetry(agent: E3Agent, traj, *, n_slots: int | None = None
 
 
 def suggest_gated_capacity(
-    history: BatchedRunHistory, *, quantile: float = 1.0, headroom: int = 0
+    history: BatchedRunHistory,
+    *,
+    quantile: float = 1.0,
+    headroom: int = 0,
+    n_shards: int = 1,
 ) -> int:
     """Pick ``gated_capacity`` from a recorded campaign's telemetry.
 
@@ -232,12 +296,30 @@ def suggest_gated_capacity(
     trajectory overflows zero slot-UEs); ``0.95`` sheds the top 5% of
     demand slots to the fail-safe expert.  ``headroom`` adds UEs of margin
     on top.  The result is clamped to ``[0, n_ues]``.
+
+    Under a sharded topology compaction is *shard-local*, so pass the
+    campaign's ``n_shards``: demand is then measured per contiguous
+    UE-slice shard (the ``shard_map`` partitioning of the axis) and the
+    returned campaign-wide capacity is ``n_shards`` times the worst
+    shard's quantile demand (+ per-shard headroom) — covering a
+    shard-local spike that a campaign-wide count would hide.
     """
     if not 0.0 <= quantile <= 1.0:
         raise ValueError(f"quantile {quantile} outside [0, 1]")
-    demand = (np.asarray(history.modes) == 0).sum(axis=1)
-    cap = int(np.ceil(np.quantile(demand, quantile))) + int(headroom)
-    return int(np.clip(cap, 0, history.n_ues))
+    modes = np.asarray(history.modes)
+    n_ues = modes.shape[1]
+    if n_shards < 1 or n_ues % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} does not divide n_ues={n_ues}"
+        )
+    per = n_ues // n_shards
+    cap_shard = max(
+        int(np.ceil(np.quantile(
+            (modes[:, s * per:(s + 1) * per] == 0).sum(axis=1), quantile
+        )))
+        for s in range(n_shards)
+    ) + int(headroom)
+    return int(np.clip(cap_shard * n_shards, 0, n_ues))
 
 
 class ArchesRuntime:

@@ -28,6 +28,13 @@ policies — and dispatches ``run()`` to one of five execution paths:
 * ``gated`` — open-loop batched with compaction-gated expert execution.
 * ``perturbed`` — the methodology stage-1 sweep (``rho`` rides the UE axis).
 
+A spec with a ``topology`` (``repro.core.topology.TopologySpec``) runs the
+same campaign as ``n_cells`` cells sharded over a 1-D UE device mesh: the
+batched/gated/closed-loop/perturbed paths dispatch to the ``shard_map``
+entries (per-shard gated compaction, per-cell channel offsets + inter-cell
+coupling), and the history gains the per-cell reductions.  On a 1-device
+mesh the sharded program is bitwise-equal to the unsharded one.
+
 Every path returns the same ``BatchedRunHistory`` result type, and each is
 bitwise-equal on mode trajectories to its legacy entry point (the session
 builds the identical program; the test suite asserts it).
@@ -47,8 +54,13 @@ import numpy as np
 
 from repro.core.closed_loop import SwitchConfig, per_ue_policy
 from repro.core.expert_bank import ExecutionMode, coerce_enum
-from repro.core.runtime import ArchesRuntime, BatchedRunHistory
+from repro.core.runtime import (
+    ArchesRuntime,
+    BatchedRunHistory,
+    suggest_gated_capacity,
+)
 from repro.core.telemetry import SELECTED_KPMS
+from repro.core.topology import CellTopology, TopologySpec, per_shard_capacity
 
 # -- execution paths -----------------------------------------------------------
 
@@ -190,6 +202,8 @@ class CampaignSpec:
     runs it; several + an ``(n_ues,)`` assignment == per-UE heterogeneity
     in the closed loop.  ``rho`` is the perturbation grid of the
     methodology path (it rides the UE axis, so ``n_ues == len(rho)``).
+    ``topology`` (a ``TopologySpec`` or its dict form) shards the campaign
+    as a multi-cell layout over the UE device mesh.
     """
 
     path: str = "batched"
@@ -206,10 +220,18 @@ class CampaignSpec:
     switch: SwitchSpec = dataclasses.field(default_factory=SwitchSpec)
     feature_names: tuple = SELECTED_KPMS
     rho: tuple | None = None
+    # multi-cell sharded layout (None == single cell on one device)
+    topology: TopologySpec | None = None
 
     def __post_init__(self):
         # normalize an enum member to its JSON-stable string value
         object.__setattr__(self, "path", ExecutionPath.coerce(self.path).value)
+        if self.topology is not None and not isinstance(
+            self.topology, TopologySpec
+        ):
+            object.__setattr__(
+                self, "topology", TopologySpec(**dict(self.topology))
+            )
         for name in ("scenario_args", "policies", "feature_names"):
             object.__setattr__(self, name, _tuplify(getattr(self, name)))
         object.__setattr__(self, "modes", _tuplify(self.modes))
@@ -237,6 +259,43 @@ class CampaignSpec:
                 for i in self.policy_assignment
             ):
                 raise ValueError("policy_assignment indexes out of range")
+        # path/bank mismatches fail at spec construction (so also at
+        # ``from_json``) with a clear message instead of a trace-time shape
+        # error or a silently mispriced campaign
+        bank_mode = ExecutionMode.coerce(self.bank.execution_mode)
+        path = self.execution_path
+        if path is ExecutionPath.GATED and bank_mode is (
+            ExecutionMode.SELECTED_ONLY
+        ):
+            raise ValueError(
+                "path='gated' with a 'selected_only' bank would silently "
+                "run un-gated at the concurrent cost envelope; declare the "
+                "bank 'gated' (or 'concurrent', which the path normalizes)"
+            )
+        if path is ExecutionPath.PERTURBED and bank_mode is not (
+            ExecutionMode.CONCURRENT
+        ):
+            raise ValueError(
+                f"path='perturbed' ignores the expert bank (stage 1 is "
+                f"MMSE-only by construction); a {bank_mode.value!r} bank "
+                "spec would never take effect — drop it"
+            )
+        if path is ExecutionPath.HOST and bank_mode is ExecutionMode.GATED:
+            raise ValueError(
+                "gated execution is the batched path: the host loop serves "
+                "one UE and has no sub-batch to compact"
+            )
+        if self.topology is not None:
+            if path is ExecutionPath.HOST:
+                raise ValueError(
+                    "a sharded topology needs a batched path: the host "
+                    "loop serves one UE on one device"
+                )
+            if self.n_ues % self.topology.n_cells:
+                raise ValueError(
+                    f"topology n_cells={self.topology.n_cells} does not "
+                    f"divide n_ues={self.n_ues}"
+                )
 
     # -- derived views --------------------------------------------------------
 
@@ -260,6 +319,10 @@ class CampaignSpec:
             d["bank"] = ExpertBankSpec(**d["bank"])
         if "switch" in d and not isinstance(d["switch"], SwitchSpec):
             d["switch"] = SwitchSpec(**d["switch"])
+        if d.get("topology") is not None and not isinstance(
+            d["topology"], TopologySpec
+        ):
+            d["topology"] = TopologySpec(**d["topology"])
         if "policies" in d:
             d["policies"] = tuple(
                 p if isinstance(p, PolicySpec) else PolicySpec(**p)
@@ -313,6 +376,12 @@ class ArchesSession:
 
         self.spec = spec
         self.path = spec.execution_path
+        #: resolved sharded layout (None == single-device, single-cell)
+        self.cell_topology = (
+            CellTopology.build(spec.topology, spec.n_ues)
+            if spec.topology is not None
+            else None
+        )
         self._validate()
         self.cfg = SlotConfig(n_prb=spec.n_prb)
         scenario = get_scenario(spec.scenario)
@@ -344,8 +413,6 @@ class ArchesSession:
         if path is ExecutionPath.HOST:
             if spec.n_ues != 1:
                 raise ValueError("the host loop serves one UE: n_ues must be 1")
-            if bank_mode is ExecutionMode.GATED:
-                raise ValueError("gated execution is the batched path")
             if not spec.policies:
                 raise ValueError("the host loop needs one PolicySpec")
             if get_scenario(spec.scenario).per_ue:
@@ -376,14 +443,42 @@ class ArchesSession:
             and bank_mode is ExecutionMode.CONCURRENT
             else spec.bank
         )
-        if path is ExecutionPath.GATED and ExecutionMode.coerce(
-            self.bank_spec.execution_mode
-        ) is not ExecutionMode.GATED:
-            raise ValueError(
-                f"path='gated' with a {self.bank_spec.execution_mode!r} bank "
-                "would silently run un-gated; declare the bank gated (or "
-                "concurrent, which the path normalizes)"
-            )
+        # path='gated' + selected_only already raised in CampaignSpec
+        # __post_init__, so after normalization the gated path always
+        # carries a gated bank
+        assert (
+            path is not ExecutionPath.GATED
+            or ExecutionMode.coerce(self.bank_spec.execution_mode)
+            is ExecutionMode.GATED
+        )
+        if self.cell_topology is not None:
+            topo = self.cell_topology
+            if (
+                ExecutionMode.coerce(self.bank_spec.execution_mode)
+                is ExecutionMode.GATED
+                and self.bank_spec.gated_capacity is not None
+            ):
+                # fail at spec-compile time, not as a scan shape error
+                per_shard_capacity(
+                    self.bank_spec.gated_capacity, topo.n_shards
+                )
+            declared_cells = spec.scenario_kwargs.get("n_cells")
+            if declared_cells is None:
+                # a cell-aware scenario factory not passed n_cells uses its
+                # own default — that count must agree with the topology too
+                import inspect
+
+                p = inspect.signature(
+                    get_scenario(spec.scenario).factory
+                ).parameters.get("n_cells")
+                if p is not None and p.default is not inspect.Parameter.empty:
+                    declared_cells = p.default
+            if declared_cells is not None and declared_cells != topo.n_cells:
+                raise ValueError(
+                    f"scenario lays out n_cells={declared_cells} but the "
+                    f"topology lays out {topo.n_cells} cells — one cell "
+                    "count per campaign (pass n_cells in scenario_args)"
+                )
 
     # -- compiled components ---------------------------------------------------
 
@@ -406,21 +501,41 @@ class ArchesSession:
             )
         return self._ai_params
 
+    def _engine_capacity(self, campaign_capacity: int | None) -> int | None:
+        """The engine-level gated capacity for a campaign-wide one.
+
+        Compaction is shard-local under a topology, so the engine's
+        capacity is the per-shard share of the campaign capacity.
+        """
+        if (
+            campaign_capacity is None
+            or self.cell_topology is None
+            or ExecutionMode.coerce(self.bank_spec.execution_mode)
+            is not ExecutionMode.GATED
+        ):
+            return campaign_capacity
+        return per_shard_capacity(
+            campaign_capacity, self.cell_topology.n_shards
+        )
+
+    def _build_engine(self, campaign_capacity: int | None):
+        from repro.phy.pipeline import BatchedPuschPipeline
+
+        bank = self.bank_spec
+        return BatchedPuschPipeline(
+            self.cfg,
+            self.ai_params,
+            net=self.net,
+            execution_mode=ExecutionMode.coerce(bank.execution_mode),
+            use_pallas_switch=bank.use_pallas_switch,
+            gated_capacity=self._engine_capacity(campaign_capacity),
+        )
+
     @property
     def engine(self):
         """The batched multi-UE engine configured per the bank spec."""
         if self._engine is None:
-            from repro.phy.pipeline import BatchedPuschPipeline
-
-            bank = self.bank_spec
-            self._engine = BatchedPuschPipeline(
-                self.cfg,
-                self.ai_params,
-                net=self.net,
-                execution_mode=ExecutionMode.coerce(bank.execution_mode),
-                use_pallas_switch=bank.use_pallas_switch,
-                gated_capacity=bank.gated_capacity,
-            )
+            self._engine = self._build_engine(self.bank_spec.gated_capacity)
         return self._engine
 
     @property
@@ -557,8 +672,21 @@ class ArchesSession:
 
     # -- execution -------------------------------------------------------------
 
-    def run(self) -> BatchedRunHistory:
-        """Execute the campaign; one result type for every path."""
+    def run(self, *, auto_capacity: bool = False) -> BatchedRunHistory:
+        """Execute the campaign; one result type for every path.
+
+        ``auto_capacity=True`` (gated banks only) sizes ``gated_capacity``
+        from the campaign's own demand before the main run instead of
+        trusting the declared knob: open-loop paths read peak demand
+        straight off the declared mode plan (no extra compile); the closed
+        loop runs a full-capacity pre-pass and feeds its realized demand to
+        ``suggest_gated_capacity`` (two compiles, both host-driven).  The
+        gated bank is re-provisioned with the chosen campaign-wide capacity
+        ``K`` (rounded up to a per-shard-equal split under a topology) and
+        the history records it in ``provisioned_capacity``.
+        """
+        if auto_capacity:
+            return self._run_auto_capacity()
         runner = {
             ExecutionPath.HOST: self._run_host,
             ExecutionPath.BATCHED: self._run_open_loop,
@@ -567,6 +695,63 @@ class ArchesSession:
             ExecutionPath.PERTURBED: self._run_perturbed,
         }[self.path]
         return runner()
+
+    def _run_auto_capacity(self) -> BatchedRunHistory:
+        spec = self.spec
+        if ExecutionMode.coerce(self.bank_spec.execution_mode) is not (
+            ExecutionMode.GATED
+        ):
+            raise ValueError(
+                "auto_capacity sizes a gated bank; this campaign's bank is "
+                f"{self.bank_spec.execution_mode!r}"
+            )
+        if self.path in (ExecutionPath.GATED, ExecutionPath.BATCHED):
+            # open loop: demand is the declared plan — no pre-pass needed
+            from repro.phy.pipeline import normalize_modes
+
+            demand_hist = BatchedRunHistory(
+                modes=np.asarray(
+                    normalize_modes(
+                        np.asarray(spec.modes, np.int32),
+                        spec.n_slots, spec.n_ues,
+                    )
+                ),
+                kpms={}, outputs={},
+            )
+        elif self.path is ExecutionPath.CLOSED_LOOP:
+            # pre-pass at full capacity (overflow impossible), then size
+            # from the demand the decisions actually realized
+            pre_spec = dataclasses.replace(
+                spec,
+                bank=dataclasses.replace(spec.bank, gated_capacity=None),
+            )
+            pre = ArchesSession(
+                pre_spec,
+                ai_params=self.ai_params,
+                host_policies=self.host_policies,
+            )
+            demand_hist = pre.run()
+        else:
+            raise ValueError(
+                f"auto_capacity does not apply to path={spec.path!r}"
+            )
+        n_shards = (
+            1 if self.cell_topology is None else self.cell_topology.n_shards
+        )
+        # compaction is shard-local: provisioning covers the worst *shard's*
+        # peak demand (a shard-local spike overflows even when the
+        # campaign-wide count would fit), with >= 1 slot per shard
+        cap = max(
+            suggest_gated_capacity(demand_hist, n_shards=n_shards),
+            n_shards,
+        )
+        self._engine = self._build_engine(cap)
+        runner = (
+            self._run_closed_loop
+            if self.path is ExecutionPath.CLOSED_LOOP
+            else self._run_open_loop
+        )
+        return dataclasses.replace(runner(), provisioned_capacity=cap)
 
     def _run_host(self) -> BatchedRunHistory:
         from repro.core.dapp import DApp, connect_dapp
@@ -593,6 +778,14 @@ class ArchesSession:
         )
         return BatchedRunHistory.from_host(runtime.run(range(spec.n_slots)))
 
+    @property
+    def _cells(self):
+        return (
+            None
+            if self.cell_topology is None
+            else self.cell_topology.cell_of_ue
+        )
+
     def _run_open_loop(self) -> BatchedRunHistory:
         from repro.phy.pipeline import normalize_modes
 
@@ -600,17 +793,46 @@ class ArchesSession:
         modes = normalize_modes(
             np.asarray(spec.modes, np.int32), spec.n_slots, spec.n_ues
         )
-        _, traj = self.engine.run(
-            self.schedule,
-            modes,
-            n_slots=spec.n_slots,
-            n_ues=spec.n_ues,
-            key=jax.random.PRNGKey(spec.seed),
+        if self.cell_topology is not None:
+            from repro.core.topology import run_sharded
+
+            _, traj = run_sharded(
+                self.engine,
+                self.cell_topology,
+                self.schedule,
+                modes,
+                n_slots=spec.n_slots,
+                key=jax.random.PRNGKey(spec.seed),
+            )
+        else:
+            _, traj = self.engine.run(
+                self.schedule,
+                modes,
+                n_slots=spec.n_slots,
+                n_ues=spec.n_ues,
+                key=jax.random.PRNGKey(spec.seed),
+            )
+        return BatchedRunHistory.from_trajectory(
+            modes, traj, cell_of_ue=self._cells
         )
-        return BatchedRunHistory.from_trajectory(modes, traj)
 
     def _run_closed_loop(self) -> BatchedRunHistory:
         spec = self.spec
+        if self.cell_topology is not None:
+            from repro.core.topology import run_closed_loop_sharded
+
+            _, final_switch, traj = run_closed_loop_sharded(
+                self.engine,
+                self.cell_topology,
+                self.schedule,
+                self.device_policy,
+                spec.switch.to_config(spec.feature_names),
+                n_slots=spec.n_slots,
+                key=jax.random.PRNGKey(spec.seed),
+            )
+            return BatchedRunHistory.from_closed_loop(
+                traj, final_switch, cell_of_ue=self._cells
+            )
         runtime = ArchesRuntime.from_spec(
             spec, engine=self.engine, device_policy=self.device_policy
         )
@@ -624,12 +846,26 @@ class ArchesSession:
     def _run_perturbed(self) -> BatchedRunHistory:
         spec = self.spec
         rho = jnp.asarray(spec.rho, jnp.float32)
-        _, traj = self.engine.run_perturbed(
-            self.schedule,
-            rho,
-            n_slots=spec.n_slots,
-            key=jax.random.PRNGKey(spec.seed),
-        )
+        if self.cell_topology is not None:
+            from repro.core.topology import run_perturbed_sharded
+
+            _, traj = run_perturbed_sharded(
+                self.engine,
+                self.cell_topology,
+                self.schedule,
+                rho,
+                n_slots=spec.n_slots,
+                key=jax.random.PRNGKey(spec.seed),
+            )
+        else:
+            _, traj = self.engine.run_perturbed(
+                self.schedule,
+                rho,
+                n_slots=spec.n_slots,
+                key=jax.random.PRNGKey(spec.seed),
+            )
         # stage 1 is MMSE-only by construction: the mode grid is all-1
         modes = np.ones((spec.n_slots, spec.n_ues), np.int32)
-        return BatchedRunHistory.from_trajectory(modes, traj)
+        return BatchedRunHistory.from_trajectory(
+            modes, traj, cell_of_ue=self._cells
+        )

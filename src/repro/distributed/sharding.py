@@ -1,7 +1,7 @@
 """Logical-axis sharding rules (DP/FSDP/TP/EP) for the model zoo.
 
 Weights and activations are annotated with *logical* axis names; a rules
-table maps them to mesh axes.  The production meshes (launch/mesh.py):
+table maps them to mesh axes.  The production meshes (core/topology.py):
 
   single-pod  (16, 16)      axes ("data", "model")
   multi-pod   (2, 16, 16)   axes ("pod", "data", "model")

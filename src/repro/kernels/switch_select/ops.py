@@ -176,6 +176,14 @@ def switch_scatter(src, compact, designated, *, backend: str = "auto"):
     cheap-expert baseline in one pass per leaf: UE ``u`` takes compact row
     ``src[u]`` when ``src[u] >= 0`` and keeps its baseline buffer otherwise.
 
+    Shape discipline: every index in ``src`` addresses a row of *this
+    call's* ``compact`` operand — there is no global UE numbering.  Under
+    the sharded multi-cell engine (``repro.core.topology``) the op runs
+    inside ``shard_map`` with ``n_ues`` == the shard-local UE slice and
+    ``capacity`` == the per-shard gated capacity, so the scatter is a
+    purely local data movement (no cross-device collective; the
+    distributed tests audit the lowered HLO for this).
+
     Args:
       src: ``(n_ues,)`` int32 compact-row indices (negative == keep).
       compact: pytree of ``(capacity, ...)`` leaves (``capacity >= 1``).

@@ -40,7 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import make_rules, mesh_context
 from repro.launch import specs as S
-from repro.launch.mesh import make_production_mesh
+from repro.core.topology import make_production_mesh
 from repro.models import Model, get_config, shapes_for
 from repro.models.config import ALL_SHAPES, ARCH_IDS
 from repro.train.step import TrainConfig, train_step

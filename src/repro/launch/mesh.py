@@ -1,35 +1,14 @@
-"""Production meshes (multi-pod dry-run spec).
+"""Deprecated shim: the mesh factories moved to ``repro.core.topology``.
 
-``make_production_mesh`` is a FUNCTION so importing this module never
-touches jax device state (the dry-run must set XLA_FLAGS before any jax
-initialization).
-
-  single-pod: (16, 16)    = 256 chips, axes ("data", "model")
-  multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
-
-Physical mapping on the v5e target: "model" follows the ICI torus minor
-dimension (TP collectives stay on-chip-neighbour links), "data" the major
-dimension, "pod" crosses the inter-pod DCN — which is why the default
-sharding rules put only pure-DP gradient reductions on the pod axis
-(DESIGN.md, distributed/sharding.py).
+The production-mesh helpers were orphaned here (and used a
+``jax.sharding.AxisType`` API this jax version does not ship); the campaign
+topology layer is their real home now — it adds the 1-D UE mesh
+(``make_ue_mesh``) the sharded multi-cell engine runs on.  Import from
+``repro.core.topology`` directly.
 """
 
-from __future__ import annotations
-
-import jax
-
-
-def _auto(n: int):
-    # pin Auto axis types: jax 0.9 flips the default to Explicit
-    return (jax.sharding.AxisType.Auto,) * n
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
-
-
-def make_cpu_mesh(n_data: int = 1, n_model: int = 1):
-    """Tiny mesh for CPU integration tests (requires forced host devices)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))
+from repro.core.topology import (  # noqa: F401
+    make_cpu_mesh,
+    make_production_mesh,
+    make_ue_mesh,
+)

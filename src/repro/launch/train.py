@@ -21,7 +21,7 @@ from repro.checkpoint.store import CheckpointManager
 from repro.data.tokens import TokenStream
 from repro.distributed.sharding import make_rules, mesh_context
 from repro.launch import specs as S
-from repro.launch.mesh import make_production_mesh
+from repro.core.topology import make_production_mesh
 from repro.models.config import ARCH_IDS, get_config
 from repro.models.model import Model
 from repro.train.loop import run_training

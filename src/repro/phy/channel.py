@@ -295,6 +295,122 @@ def channel_params_ue_schedule(
     return pairs[0][0], params
 
 
+# -- multi-cell coupling (sharded topology layer) ------------------------------
+#
+# A campaign laid out as ``n_cells`` cells on the UE axis couples cells
+# through the channel: a cell whose members see interference raises the
+# effective noise floor of *other* cells (neighbour-cell UL leakage, the
+# same physics as ``ChannelConfig.interference`` but at cell granularity).
+# ``CellParams`` carries the per-cell knobs; ``apply_cell_coupling`` folds
+# them into a slot's per-UE ``ChannelParams``.  The per-cell mean load is
+# computed from exact {0,1} counts (segment-sum of ``interf_on``), so its
+# value is independent of how the UE axis is partitioned across devices —
+# the property that makes sharded and unsharded campaigns bitwise-equal.
+# Under ``shard_map`` the count reduction is one ``psum`` over the UE mesh
+# axis: the only cross-shard collective in the whole slot scan.
+
+
+class CellParams(NamedTuple):
+    """Per-cell channel offsets + inter-cell coupling (pytree; replicated).
+
+    ``noise_scale``/``inr_scale`` are *linear* per-cell multipliers applied
+    to every member UE's thermal noise / interference power (host-converted
+    from dB offsets, like ``ChannelParams``).  ``coupling`` scales the
+    inter-cell leakage term: cell ``c``'s noise floor is multiplied by
+    ``1 + coupling * mean_load_of_other_cells(c)`` where a cell's load is
+    the fraction of its member UEs with interference active this slot.
+    ``ues_per_cell`` rides along as a traced scalar so shard-local code
+    never needs the global UE count.
+    """
+
+    noise_scale: jax.Array  # (n_cells,) float32 linear
+    inr_scale: jax.Array  # (n_cells,) float32 linear
+    coupling: jax.Array  # () float32 — inter-cell leakage coefficient
+    ues_per_cell: jax.Array  # () float32 — global UEs per cell
+
+
+def cell_params(
+    n_cells: int,
+    ues_per_cell: int,
+    *,
+    noise_offsets_db=(),
+    inr_offsets_db=(),
+    coupling: float = 0.0,
+) -> CellParams:
+    """Lower per-cell dB offsets to the traced ``CellParams`` pytree.
+
+    Empty offset tuples mean "no offset" (all-ones scales); otherwise one
+    entry per cell is required.
+    """
+    def lin(offs, noun):
+        if not len(offs):
+            return jnp.ones((n_cells,), jnp.float32)
+        if len(offs) != n_cells:
+            raise ValueError(
+                f"{noun} has {len(offs)} entries for n_cells={n_cells}"
+            )
+        return jnp.asarray(
+            10.0 ** (np.asarray(offs, np.float64) / 10.0), jnp.float32
+        )
+
+    return CellParams(
+        noise_scale=lin(noise_offsets_db, "noise_offsets_db"),
+        inr_scale=lin(inr_offsets_db, "inr_offsets_db"),
+        coupling=jnp.float32(coupling),
+        ues_per_cell=jnp.float32(ues_per_cell),
+    )
+
+
+def apply_cell_coupling(
+    p: ChannelParams,
+    cell_of_ue: jax.Array,
+    cells: CellParams,
+    *,
+    axis_name: str | None = None,
+) -> ChannelParams:
+    """Fold per-cell offsets + inter-cell leakage into one slot's params.
+
+    ``p`` carries per-UE leaves (``noise_var`` etc. shaped ``(U,)`` — the
+    local shard's UEs under ``shard_map``); ``cell_of_ue (U,)`` maps them to
+    global cell ids.  The per-cell interference load is a mean of {0,1}
+    activity flags, so partial sums are exact integers and the reduction
+    commutes across any sharding — with ``axis_name`` set, shard-local
+    partial counts are combined with a single ``lax.psum`` (the scan's only
+    cross-device collective; compaction and scatter stay shard-local).
+    """
+    n_cells = cells.noise_scale.shape[0]
+    interf = jnp.broadcast_to(p.interf_on, cell_of_ue.shape)
+    load = jax.ops.segment_sum(interf, cell_of_ue, num_segments=n_cells)
+    if axis_name is not None:
+        load = jax.lax.psum(load, axis_name)
+    mean_load = load / cells.ues_per_cell  # (C,) exact counts / exact count
+    if n_cells > 1:
+        other = (jnp.sum(mean_load) - mean_load) / (n_cells - 1)
+    else:
+        other = jnp.zeros_like(mean_load)
+    noise_mult = cells.noise_scale * (1.0 + cells.coupling * other)  # (C,)
+    noise_scale_ue = jnp.take(noise_mult, cell_of_ue)  # (U,)
+    inr_scale_ue = jnp.take(cells.inr_scale, cell_of_ue)
+    return p._replace(
+        noise_var=p.noise_var * noise_scale_ue,
+        inr_lin=p.inr_lin * inr_scale_ue,
+    )
+
+
+def broadcast_params_to_ues(params: ChannelParams, n_ues: int) -> ChannelParams:
+    """Give homogeneous ``(S, ...)`` params an explicit ``(S, U, ...)`` UE
+    axis (already-per-UE params pass through).  The sharded engine always
+    runs the per-UE path so every leaf can be partitioned along UEs."""
+    if params.noise_var.ndim == 2:
+        return params
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x[:, None], (x.shape[0], n_ues) + x.shape[1:]
+        ),
+        params,
+    )
+
+
 def _interference_symbol_mask_traced(
     key: jax.Array, cfg: SlotConfig, p: ChannelParams
 ) -> jax.Array:

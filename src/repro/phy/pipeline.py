@@ -40,9 +40,11 @@ from repro.phy import dmrs as dmrs_mod
 from repro.phy import qam
 from repro.phy.ai_estimator import AiEstimatorConfig, ai_estimate_from_ls
 from repro.phy.channel import (
+    CellParams,
     ChannelConfig,
     ChannelParams,
     TdlProfile,
+    apply_cell_coupling,
     apply_channel,
     channel_params_schedule,
     channel_params_ue_schedule,
@@ -667,7 +669,23 @@ class BatchedPuschPipeline:
         keys: jax.Array,
         p: ChannelParams,
         rho: jax.Array | None = None,
+        cell_of_ue: jax.Array | None = None,
+        cell_params: CellParams | None = None,
+        cell_axis: str | None = None,
     ):
+        if cell_of_ue is not None:
+            # multi-cell topology: fold per-cell offsets + inter-cell
+            # coupling into this slot's per-UE knobs.  Under shard_map,
+            # ``cell_axis`` names the UE mesh axis and the per-cell mean is
+            # the scan's only cross-device collective.
+            if jnp.ndim(p.noise_var) != 1:
+                raise ValueError(
+                    "cell coupling needs per-UE ChannelParams leaves; "
+                    "broadcast_params_to_ues the schedule first"
+                )
+            p = apply_cell_coupling(
+                p, cell_of_ue, cell_params, axis_name=cell_axis
+            )
         if jnp.ndim(p.noise_var) == 1:
             # per-UE heterogeneous conditions: params carry a (U,) axis
             pre = jax.vmap(
@@ -719,13 +737,20 @@ class BatchedPuschPipeline:
         """One compiled multi-UE slot. ``modes``/``keys`` carry the UE axis."""
         return self._slot_core(profile, link, modes, keys, p)
 
-    @partial(jax.jit, static_argnames=("self", "profile"))
-    def _run_scan(self, profile, link0, ue_keys, modes, params):
+    @partial(jax.jit, static_argnames=("self", "profile", "cell_axis"))
+    def _run_scan(
+        self, profile, link0, ue_keys, modes, params,
+        cell_of_ue=None, cell_params=None, *, cell_axis=None,
+    ):
         def step(carry, xs):
             link, slot_idx = carry
             modes_s, p = xs
             keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
-            link, out = self._slot_core(profile, link, modes_s, keys, p)
+            link, out = self._slot_core(
+                profile, link, modes_s, keys, p,
+                cell_of_ue=cell_of_ue, cell_params=cell_params,
+                cell_axis=cell_axis,
+            )
             return (link, slot_idx + 1), out
 
         (link, _), traj = jax.lax.scan(
@@ -733,13 +758,20 @@ class BatchedPuschPipeline:
         )
         return link, traj
 
-    @partial(jax.jit, static_argnames=("self", "profile"))
-    def _run_perturbed_scan(self, profile, link0, ue_keys, rho, params):
+    @partial(jax.jit, static_argnames=("self", "profile", "cell_axis"))
+    def _run_perturbed_scan(
+        self, profile, link0, ue_keys, rho, params,
+        cell_of_ue=None, cell_params=None, *, cell_axis=None,
+    ):
         def step(carry, p):
             link, slot_idx = carry
             keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
             modes = jnp.ones((ue_keys.shape[0],), jnp.int32)  # MMSE-only stage
-            link, out = self._slot_core(profile, link, modes, keys, p, rho=rho)
+            link, out = self._slot_core(
+                profile, link, modes, keys, p, rho=rho,
+                cell_of_ue=cell_of_ue, cell_params=cell_params,
+                cell_axis=cell_axis,
+            )
             return (link, slot_idx + 1), out
 
         (link, _), traj = jax.lax.scan(step, (link0, jnp.int32(0)), params)
@@ -779,7 +811,10 @@ class BatchedPuschPipeline:
 
     # -- closed-loop scan ------------------------------------------------------
 
-    def _closed_step(self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p):
+    def _closed_step(
+        self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
+        cell_of_ue=None, cell_params=None, cell_axis=None,
+    ):
         """One closed-loop slot: boundary-committed modes in, decision out.
 
         ``sw.active_mode`` (committed at the previous boundary) drives the
@@ -790,7 +825,11 @@ class BatchedPuschPipeline:
         """
         keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
         active = sw.active_mode
-        link, out = self._slot_core(profile, link, active, keys, p)
+        link, out = self._slot_core(
+            profile, link, active, keys, p,
+            cell_of_ue=cell_of_ue, cell_params=cell_params,
+            cell_axis=cell_axis,
+        )
         vecs = trajectory_kpm_matrix(out["kpms"], sw_cfg.feature_names)
         decide = (
             True
@@ -807,12 +846,16 @@ class BatchedPuschPipeline:
         sw = switch_boundary(sw)
         return link, sw, out
 
-    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg"))
-    def _run_closed_scan(self, profile, sw_cfg, link0, sw0, ue_keys, params, policy):
+    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg", "cell_axis"))
+    def _run_closed_scan(
+        self, profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+        cell_of_ue=None, cell_params=None, *, cell_axis=None,
+    ):
         def step(carry, p):
             link, sw, slot_idx = carry
             link, sw, out = self._closed_step(
-                profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p
+                profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
+                cell_of_ue, cell_params, cell_axis,
             )
             return (link, sw, slot_idx + 1), out
 

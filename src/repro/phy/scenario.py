@@ -28,6 +28,10 @@ Registered entries:
   return one schedule per UE; the batched engine stacks them into
   ``ChannelParams`` with a ``(n_slots, n_ues)`` leading shape
   (``scenario_params``).
+* ``multi_cell`` — **per-cell composition**: ``n_cells`` cells, cell ``c``
+  running the named registered scenario ``per_cell_scenario[c]`` on all of
+  its member UEs (contiguous equal slices of the UE axis, the same layout
+  ``repro.core.topology`` shards across devices).
 
 All registered scenarios share the ``INDOOR_LOS`` profile, so any mix of
 them is device-traceable in one scan (including per-UE mixes).
@@ -251,6 +255,44 @@ def _mixed_cell(
     return [bases[u % len(bases)] for u in range(n_ues)]
 
 
+def _multi_cell(
+    n_ues: int,
+    *,
+    n_cells: int = 2,
+    per_cell_scenario: Sequence[str] = ("good", "poor"),
+) -> list:
+    """Multi-cell campaign: cell ``c`` runs a named registered scenario.
+
+    Composes *existing* registry entries per cell: ``per_cell_scenario``
+    names one homogeneous scenario per cell (cycled when shorter than
+    ``n_cells``), and every member UE of a cell follows its cell's
+    schedule.  The cell layout matches ``repro.core.topology``: UE ``u``
+    belongs to cell ``u // (n_ues / n_cells)``.  Referenced entries must be
+    homogeneous (a per-UE entry has no single per-cell condition stream).
+    """
+    if n_cells < 1:
+        raise ValueError(f"n_cells {n_cells} must be >= 1")
+    if n_ues % n_cells:
+        raise ValueError(
+            f"n_cells={n_cells} does not divide n_ues={n_ues}: cells "
+            "partition the UE axis into equal sub-batches"
+        )
+    names = tuple(per_cell_scenario)
+    if not names:
+        raise ValueError("per_cell_scenario names at least one scenario")
+    cell_schedules = []
+    for c in range(n_cells):
+        sc = get_scenario(names[c % len(names)])  # unknown name -> KeyError
+        if sc.per_ue:
+            raise ValueError(
+                f"per_cell_scenario entry {sc.name!r} is per-UE; each cell "
+                "needs one homogeneous condition stream"
+            )
+        cell_schedules.append(sc.schedule())
+    ues_per_cell = n_ues // n_cells
+    return [cell_schedules[u // ues_per_cell] for u in range(n_ues)]
+
+
 register_scenario(
     "good", lambda: constant_schedule(GOOD),
     description="LOS, no interference (paper: UE1->gNB1 clean)",
@@ -274,4 +316,8 @@ register_scenario(
 register_scenario(
     "mixed_cell", _mixed_cell, per_ue=True,
     description="per-UE heterogeneous: good / good_poor_good / bursty mix",
+)
+register_scenario(
+    "multi_cell", _multi_cell, per_ue=True,
+    description="n_cells cells, each running a named registered scenario",
 )

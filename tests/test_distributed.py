@@ -1,5 +1,28 @@
-"""Sharding rules + gradient compression (no real multi-device needed:
-AbstractMesh drives PartitionSpec construction and jit.lower)."""
+"""Distributed execution: the real sharded engine on a multi-device mesh.
+
+The centrepiece runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag must be
+set before jax initializes, which the in-process suite cannot do): an
+8-shard UE mesh executes the open-loop, gated and closed-loop scans and
+asserts the PR-5 contracts —
+
+* closed-loop mode trajectories replay **bitwise** through
+  ``host_replay_closed_loop`` (the same oracle every single-device PR
+  shipped, now across 8 devices);
+* the sharded trajectory equals the unsharded cell-coupled reference
+  bitwise (the per-cell mean is exact {0,1} counting, so its value is
+  sharding-invariant);
+* the compiled gated program's HLO contains the cell-mean ``all-reduce``
+  and **no** ``all-gather`` / ``all-to-all`` / ``collective-permute`` —
+  per-shard compaction never gathers across devices inside the scan.
+
+Sharding-rule construction (AbstractMesh-driven PartitionSpecs) and
+gradient compression keep their coverage below.
+"""
+
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +36,118 @@ from repro.distributed.sharding import make_rules, spec
 SINGLE = AbstractMesh((("data", 16), ("model", 16)))
 MULTI = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 RULES = make_rules()
+
+
+# -- the sharded engine on a forced 8-device CPU mesh --------------------------
+
+_SHARDED_CHECK = r"""
+import numpy as np, jax, jax.numpy as jnp
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.core.closed_loop import SwitchConfig, host_replay_closed_loop
+from repro.core.expert_bank import ExecutionMode
+from repro.core.policy import ThresholdPolicy
+from repro.core.telemetry import SELECTED_KPMS, flatten_kpm_sources
+from repro.core.topology import (
+    CellTopology, TopologySpec, open_loop_fn, run_closed_loop_sharded,
+    run_sharded,
+)
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.channel import broadcast_params_to_ues
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import (
+    BatchedPuschPipeline, init_device_link, resolve_schedule,
+)
+from repro.phy.scenario import good_poor_good_schedule
+
+S, U = 6, 8
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+params = init_params(jax.random.PRNGKey(0), CFG, NET)
+sched = good_poor_good_schedule(poor_start=2, poor_end=4)
+topo = CellTopology.build(
+    TopologySpec(n_cells=4, coupling=0.3, n_shards=8), U
+)
+assert topo.n_shards == 8, topo.n_shards
+
+engine = BatchedPuschPipeline(CFG, params, net=NET)
+
+# 1) closed loop across 8 shards: device modes == host replay, bitwise
+policy = ThresholdPolicy(
+    feature_idx=SELECTED_KPMS.index("snr"), threshold=18.0, hysteresis=2.0
+)
+sw_cfg = SwitchConfig(
+    feature_names=SELECTED_KPMS, window_slots=2, backend="ref"
+)
+_, fsw, traj = run_closed_loop_sharded(
+    engine, topo, sched, policy.to_device(), sw_cfg,
+    n_slots=S, key=jax.random.PRNGKey(7),
+)
+kpms = flatten_kpm_sources(traj["kpms"])
+feats = np.stack([np.asarray(kpms[n]) for n in SELECTED_KPMS], axis=-1)
+replay = host_replay_closed_loop(policy, feats, sw_cfg)
+assert np.array_equal(np.asarray(traj["active_mode"]),
+                      replay["active_mode"]), "closed-loop replay diverged"
+assert np.asarray(fsw.n_switches).sum() > 0, "vacuous: nothing switched"
+
+# 2) 8-shard open loop == unsharded cell-coupled reference, bitwise
+key = jax.random.PRNGKey(3)
+_, t8 = run_sharded(engine, topo, sched, 1, n_slots=S, key=key)
+_, tu = run_sharded(engine, topo, sched, 1, n_slots=S, key=key,
+                    sharded=False)
+for leaf in ("tb_ok", "mcs", "phy_bits_per_s"):
+    assert np.array_equal(np.asarray(t8[leaf]), np.asarray(tu[leaf])), leaf
+sinr8 = np.asarray(t8["kpms"]["aerial"]["sinr"])
+assert np.array_equal(sinr8, np.asarray(tu["kpms"]["aerial"]["sinr"]))
+
+# 3) gated compaction is shard-local: HLO collective audit
+geng = BatchedPuschPipeline(
+    CFG, params, net=NET,
+    execution_mode=ExecutionMode.GATED, gated_capacity=1,  # per shard
+)
+profile, p = resolve_schedule(CFG, sched, S, U)
+p = broadcast_params_to_ues(p, U)
+ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(jnp.arange(U))
+modes = jnp.ones((S, U), jnp.int32).at[:, ::2].set(0)
+fn = open_loop_fn(geng, topo, profile)
+args = (init_device_link(U), ue_keys, modes, p,
+        jnp.asarray(topo.cell_of_ue), topo.cell_params)
+hlo = jax.jit(fn).lower(*args).compile().as_text()
+assert "all-reduce" in hlo, "expected the cell-mean psum to lower"
+for bad in ("all-gather", "all-to-all", "collective-permute"):
+    assert bad not in hlo, f"cross-device {bad} in the gated scan"
+_, gt = jax.jit(fn)(*args)
+assert int(np.asarray(gt["gated_overflow"]).sum()) == 0  # 1 AI UE per shard
+
+print("SHARDED-8 OK")
+"""
+
+
+def test_sharded_engine_on_forced_8_device_mesh():
+    """Run the real sharded engine on 8 forced host devices (subprocess:
+    XLA_FLAGS must precede jax initialization)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHECK],
+        env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert proc.returncode == 0, (
+        f"sharded check failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}"
+    )
+    assert "SHARDED-8 OK" in proc.stdout
+
+
+# -- sharding-rule construction (AbstractMesh, no devices needed) --------------
 
 
 def test_batch_sharded_on_pod_and_data():
@@ -74,9 +209,6 @@ def test_rules_override():
 def test_unknown_logical_axis_raises():
     with pytest.raises(KeyError):
         spec((4,), ("nonsense",), SINGLE, RULES)
-
-
-# -- param pspecs for a real model -------------------------------------------------
 
 
 def test_model_param_pspecs_valid():

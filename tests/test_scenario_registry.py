@@ -13,7 +13,7 @@ NAMED = ("good", "poor", "good_poor_good", "bursty_interference",
 
 
 def test_all_named_scenarios_registered():
-    for name in NAMED:
+    for name in NAMED + ("multi_cell",):
         assert name in S.scenario_names()
 
 
@@ -132,3 +132,42 @@ def test_mixed_cell_is_heterogeneous():
     # the per-UE stack is traced-schedule compatible (shared profile)
     profile, params = channel_params_ue_schedule(CFG, scheds, 6)
     assert params.interf_on.shape == (6, 4)
+
+
+def test_multi_cell_composes_registry_entries_per_cell():
+    scheds = S.make_schedule(
+        "multi_cell", n_ues=6, n_cells=3,
+        per_cell_scenario=("good", "poor", "good"),
+    )
+    assert len(scheds) == 6
+    # contiguous equal cells: UEs {0,1} good, {2,3} poor, {4,5} good
+    for u in (0, 1, 4, 5):
+        assert not any(scheds[u](s).interference for s in range(10))
+    for u in (2, 3):
+        assert all(scheds[u](s).interference for s in range(10))
+    # shorter name lists cycle over cells
+    cycled = S.make_schedule("multi_cell", n_ues=4, n_cells=4,
+                             per_cell_scenario=("good", "poor"))
+    assert not cycled[0](0).interference and not cycled[2](0).interference
+    assert cycled[1](0).interference and cycled[3](0).interference
+    # the per-cell stack lowers to traced per-UE params (shared profile)
+    profile, params = channel_params_ue_schedule(CFG, scheds, 5)
+    assert params.interf_on.shape == (5, 6)
+
+
+def test_multi_cell_error_paths():
+    """Misconfiguration fails at schedule build time with a clear message,
+    not as a shape error deep in the scan."""
+    with pytest.raises(ValueError, match="does not divide"):
+        S.make_schedule("multi_cell", n_ues=4, n_cells=3)
+    with pytest.raises(KeyError, match="registered"):
+        S.make_schedule("multi_cell", n_ues=4, n_cells=2,
+                        per_cell_scenario=("good", "no_such_scenario"))
+    with pytest.raises(ValueError, match="per-UE"):
+        S.make_schedule("multi_cell", n_ues=4, n_cells=2,
+                        per_cell_scenario=("good", "mixed_cell"))
+    with pytest.raises(ValueError, match="at least one"):
+        S.make_schedule("multi_cell", n_ues=4, n_cells=2,
+                        per_cell_scenario=())
+    with pytest.raises(ValueError, match="n_cells"):
+        S.make_schedule("multi_cell", n_ues=4, n_cells=0)

@@ -1,0 +1,459 @@
+"""Sharded multi-cell topology: layout validation, parity, collectives.
+
+The tentpole contract, tested on the 1-device CI mesh:
+
+* every sharded execution path (open-loop, gated, closed-loop, perturbed)
+  is **bitwise-equal on all physical trajectory leaves** to the unsharded
+  engine under a trivial topology (no offsets, no coupling — the scales
+  multiply by exactly 1.0), and to the unsharded *cell-coupled* program
+  under a non-trivial one;
+* gated compaction stays shard-local: the sharded gated program's jaxpr
+  contains the cell-mean ``psum`` and **no** gather/permute collective
+  (the multi-device HLO variant of this assertion lives in
+  ``tests/test_distributed.py``, which forces an 8-device CPU mesh in a
+  subprocess);
+* misconfiguration (cells not dividing UEs, per-shard capacity < 1,
+  unknown per-cell scenario names) fails at spec/build time with a clear
+  message, not as a shape error deep in the scan.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import SwitchConfig
+from repro.core.expert_bank import ExecutionMode
+from repro.core.policy import ThresholdPolicy
+from repro.core.runtime import BatchedRunHistory
+from repro.core.session import (
+    ArchesSession,
+    CampaignSpec,
+    ExpertBankSpec,
+    PolicySpec,
+    SwitchSpec,
+    spec_hash,
+)
+from repro.core.telemetry import SELECTED_KPMS
+from repro.core.topology import (
+    CellTopology,
+    TopologySpec,
+    make_ue_mesh,
+    open_loop_fn,
+    per_shard_capacity,
+    run_closed_loop_sharded,
+    run_perturbed_sharded,
+    run_sharded,
+)
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import BatchedPuschPipeline
+from repro.phy.scenario import good_poor_good_schedule
+
+N_SLOTS, N_UES = 6, 4
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+SCHED = good_poor_good_schedule(poor_start=2, poor_end=4)
+TRIVIAL = TopologySpec(n_cells=2)
+COUPLED = TopologySpec(
+    n_cells=2, coupling=0.5, cell_noise_offsets_db=(0.0, 3.0)
+)
+
+# the physical per-slot-per-UE leaves the bitwise contract covers
+PHYSICAL_LEAVES = ("tb_ok", "tbs", "mcs", "phy_bits_per_s",
+                   "executed_flops", "gated_overflow")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG, NET)
+
+
+@pytest.fixture(scope="module")
+def engine(params):
+    return BatchedPuschPipeline(CFG, params, net=NET)
+
+
+@pytest.fixture(scope="module")
+def gated_engine(params):
+    return BatchedPuschPipeline(
+        CFG, params, net=NET,
+        execution_mode=ExecutionMode.GATED, gated_capacity=1,
+    )
+
+
+def assert_traj_equal(a, b):
+    for leaf in PHYSICAL_LEAVES:
+        np.testing.assert_array_equal(
+            np.asarray(a[leaf]), np.asarray(b[leaf]), err_msg=leaf
+        )
+    for source, kpms in a["kpms"].items():
+        for name in kpms:
+            np.testing.assert_array_equal(
+                np.asarray(kpms[name]),
+                np.asarray(b["kpms"][source][name]),
+                err_msg=f"{source}/{name}",
+            )
+
+
+# -- layout / spec validation --------------------------------------------------
+
+
+def test_topology_spec_validation():
+    with pytest.raises(ValueError, match="n_cells"):
+        TopologySpec(n_cells=0)
+    with pytest.raises(ValueError, match="n_shards"):
+        TopologySpec(n_shards=0)
+    with pytest.raises(ValueError, match="cell_noise_offsets_db"):
+        TopologySpec(n_cells=2, cell_noise_offsets_db=(1.0,))
+    with pytest.raises(ValueError, match="cell_inr_offsets_db"):
+        TopologySpec(n_cells=3, cell_inr_offsets_db=(0.0, 1.0))
+
+
+def test_build_requires_divisible_layout():
+    with pytest.raises(ValueError, match="does not divide n_ues"):
+        CellTopology.build(TopologySpec(n_cells=3), n_ues=4)
+    with pytest.raises(ValueError, match="n_shards=3"):
+        CellTopology.build(TopologySpec(n_shards=3), n_ues=4)
+
+
+def test_per_shard_capacity_validation():
+    assert per_shard_capacity(8, 4) == 2
+    with pytest.raises(ValueError, match="does not divide"):
+        per_shard_capacity(5, 2)
+    with pytest.raises(ValueError, match="< 1 per shard"):
+        per_shard_capacity(0, 2)
+
+
+def test_make_ue_mesh_degrades_to_available_devices():
+    # the CI container has one device: any request degrades to 1 shard
+    mesh = make_ue_mesh(8, n_ues=16)
+    assert mesh.shape["ues"] <= len(jax.devices())
+    assert 16 % mesh.shape["ues"] == 0
+    assert make_ue_mesh(None, n_ues=7).shape["ues"] in (1, 7)
+
+
+def test_cell_layout():
+    topo = CellTopology.build(TopologySpec(n_cells=2), n_ues=4)
+    np.testing.assert_array_equal(topo.cell_of_ue, [0, 0, 1, 1])
+    assert topo.n_cells == 2 and topo.n_shards >= 1
+    assert float(topo.cell_params.ues_per_cell) == 2.0
+
+
+def test_spec_level_topology_validation():
+    with pytest.raises(ValueError, match="does not divide"):
+        CampaignSpec(n_ues=4, topology=TopologySpec(n_cells=3))
+    with pytest.raises(ValueError, match="host"):
+        CampaignSpec(path="host", n_ues=1, policies=(PolicySpec(),),
+                     topology=TopologySpec())
+    # per-shard capacity misconfiguration surfaces at session compile time
+    with pytest.raises(ValueError, match="per shard|does not divide"):
+        ArchesSession(CampaignSpec(
+            path="gated", n_ues=4, n_slots=2,
+            bank=ExpertBankSpec(execution_mode="gated", gated_capacity=0),
+            topology=TopologySpec(n_cells=2),
+        ))
+    # scenario-declared cell count must agree with the topology
+    with pytest.raises(ValueError, match="one cell count"):
+        ArchesSession(CampaignSpec(
+            path="batched", scenario="multi_cell",
+            scenario_args=(("n_cells", 4),),
+            n_ues=4, n_slots=2, topology=TopologySpec(n_cells=2),
+        ))
+
+
+def test_topology_spec_json_round_trip():
+    spec = CampaignSpec(
+        path="batched", n_ues=4, n_slots=2,
+        topology=TopologySpec(n_cells=2, coupling=0.25,
+                              cell_noise_offsets_db=(0.0, 1.5)),
+    )
+    back = CampaignSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.topology, TopologySpec)
+    assert spec_hash(back) == spec_hash(spec)
+    # the topology is part of the fingerprint
+    assert spec_hash(back) != spec_hash(
+        CampaignSpec(path="batched", n_ues=4, n_slots=2)
+    )
+
+
+def test_path_bank_mismatches_raise_at_spec_time():
+    with pytest.raises(ValueError, match="un-gated"):
+        CampaignSpec(path="gated",
+                     bank=ExpertBankSpec(execution_mode="selected_only"))
+    with pytest.raises(ValueError, match="MMSE-only"):
+        CampaignSpec(path="perturbed", n_ues=2, rho=(0.0, 0.5),
+                     bank=ExpertBankSpec(execution_mode="gated"))
+    with pytest.raises(ValueError, match="batched path"):
+        CampaignSpec(path="host", n_ues=1, policies=(PolicySpec(),),
+                     bank=ExpertBankSpec(execution_mode="gated"))
+    # ...and therefore also at from_json time
+    good = CampaignSpec(path="gated", n_ues=2, n_slots=2)
+    bad = good.to_json().replace('"concurrent"', '"selected_only"')
+    with pytest.raises(ValueError, match="un-gated"):
+        CampaignSpec.from_json(bad)
+
+
+# -- bitwise parity: sharded entry vs the unsharded engine ---------------------
+
+
+def test_open_loop_sharded_matches_unsharded_engine(engine):
+    topo = CellTopology.build(TRIVIAL, N_UES)
+    modes = np.ones((N_SLOTS, N_UES), np.int32)
+    modes[:, 0] = 0
+    key = jax.random.PRNGKey(3)
+    link_s, traj_s = run_sharded(
+        engine, topo, SCHED, modes, n_slots=N_SLOTS, key=key
+    )
+    link_u, traj_u = engine.run(
+        SCHED, modes, n_slots=N_SLOTS, n_ues=N_UES, key=key
+    )
+    assert_traj_equal(traj_s, traj_u)
+    np.testing.assert_array_equal(
+        np.asarray(link_s.cum_phy_bits), np.asarray(link_u.cum_phy_bits)
+    )
+
+
+def test_gated_sharded_matches_unsharded_engine(gated_engine):
+    topo = CellTopology.build(TRIVIAL, N_UES)
+    modes = np.ones((N_SLOTS, N_UES), np.int32)
+    modes[:, 0] = 0
+    modes[3:, 2] = 0  # second AI UE -> capacity-1 overflow slots exist
+    key = jax.random.PRNGKey(3)
+    _, traj_s = run_sharded(
+        gated_engine, topo, SCHED, modes, n_slots=N_SLOTS, key=key
+    )
+    _, traj_u = gated_engine.run(
+        SCHED, modes, n_slots=N_SLOTS, n_ues=N_UES, key=key
+    )
+    assert_traj_equal(traj_s, traj_u)
+    assert np.asarray(traj_s["gated_overflow"]).sum() > 0  # non-vacuous
+
+
+def test_closed_loop_sharded_matches_unsharded_engine(engine):
+    topo = CellTopology.build(TRIVIAL, N_UES)
+    policy = ThresholdPolicy(
+        feature_idx=SELECTED_KPMS.index("snr"), threshold=18.0, hysteresis=2.0
+    )
+    sw_cfg = SwitchConfig(
+        feature_names=SELECTED_KPMS, window_slots=2, backend="ref"
+    )
+    key = jax.random.PRNGKey(7)
+    _, fsw_s, traj_s = run_closed_loop_sharded(
+        engine, topo, SCHED, policy.to_device(), sw_cfg,
+        n_slots=N_SLOTS, key=key,
+    )
+    _, fsw_u, traj_u = engine.run_closed_loop(
+        SCHED, policy.to_device(), sw_cfg,
+        n_slots=N_SLOTS, n_ues=N_UES, key=key,
+    )
+    assert_traj_equal(traj_s, traj_u)
+    for leaf in ("active_mode", "raw_decision", "pending_mode"):
+        np.testing.assert_array_equal(
+            np.asarray(traj_s[leaf]), np.asarray(traj_u[leaf]), err_msg=leaf
+        )
+    np.testing.assert_array_equal(
+        np.asarray(fsw_s.n_switches), np.asarray(fsw_u.n_switches)
+    )
+
+
+def test_perturbed_sharded_matches_unsharded_engine(engine):
+    topo = CellTopology.build(TRIVIAL, N_UES)
+    rho = np.asarray([0.0, 0.3, 0.6, 1.0], np.float32)
+    key = jax.random.PRNGKey(5)
+    _, traj_s = run_perturbed_sharded(
+        engine, topo, SCHED, rho, n_slots=N_SLOTS, key=key
+    )
+    _, traj_u = engine.run_perturbed(SCHED, rho, n_slots=N_SLOTS, key=key)
+    assert_traj_equal(traj_s, traj_u)
+
+
+# -- cell coupling -------------------------------------------------------------
+
+
+def test_coupled_topology_sharded_matches_unsharded_reference(engine):
+    """With offsets + coupling on, the sharded program must equal the same
+    cell-coupled program run unpartitioned — and must *differ* from the
+    uncoupled engine (the coupling is not a no-op)."""
+    topo = CellTopology.build(COUPLED, N_UES)
+    key = jax.random.PRNGKey(3)
+    _, traj_s = run_sharded(engine, topo, SCHED, 1, n_slots=N_SLOTS, key=key)
+    _, traj_r = run_sharded(
+        engine, topo, SCHED, 1, n_slots=N_SLOTS, key=key, sharded=False
+    )
+    assert_traj_equal(traj_s, traj_r)
+    _, traj_plain = engine.run(
+        SCHED, 1, n_slots=N_SLOTS, n_ues=N_UES, key=key
+    )
+    sinr = lambda t: np.asarray(t["kpms"]["aerial"]["sinr"])
+    assert not np.array_equal(sinr(traj_s), sinr(traj_plain))
+    # cell 0 has no offset, but inter-cell leakage from cell 1's poor
+    # phase still shifts its noise floor during the interference window
+    assert not np.array_equal(sinr(traj_s)[:, :2], sinr(traj_plain)[:, :2])
+
+
+def test_cell_offsets_order_ues_by_cell(engine):
+    """A 3 dB per-cell noise offset must degrade that cell's measured SINR
+    relative to the clean cell (sanity on the broadcast direction)."""
+    topo = CellTopology.build(
+        TopologySpec(n_cells=2, cell_noise_offsets_db=(0.0, 10.0)), N_UES
+    )
+    _, traj = run_sharded(
+        engine, topo, SCHED, 1, n_slots=N_SLOTS, key=jax.random.PRNGKey(0)
+    )
+    sinr = np.asarray(traj["kpms"]["aerial"]["sinr"])
+    assert sinr[:, :2].mean() > sinr[:, 2:].mean() + 3.0
+
+
+# -- collective contract -------------------------------------------------------
+
+
+def test_gated_sharded_jaxpr_has_psum_but_no_gather(gated_engine):
+    """Compaction must stay shard-local: the only collective in the sharded
+    gated program is the cell-mean psum (channel layer); the bank's
+    compact/scatter path introduces no cross-device gather/permute."""
+    from repro.phy.channel import broadcast_params_to_ues
+    from repro.phy.pipeline import init_device_link, resolve_schedule
+    import jax.numpy as jnp
+
+    topo = CellTopology.build(COUPLED, N_UES)
+    profile, p = resolve_schedule(CFG, SCHED, N_SLOTS, N_UES)
+    p = broadcast_params_to_ues(p, N_UES)
+    ue_keys = jax.vmap(
+        lambda u: jax.random.fold_in(jax.random.PRNGKey(0), u)
+    )(jnp.arange(N_UES))
+    modes = jnp.ones((N_SLOTS, N_UES), jnp.int32).at[:, 0].set(0)
+    fn = open_loop_fn(gated_engine, topo, profile)
+    jaxpr = str(jax.make_jaxpr(fn)(
+        init_device_link(N_UES), ue_keys, modes, p,
+        jnp.asarray(topo.cell_of_ue), topo.cell_params,
+    ))
+    assert "psum" in jaxpr
+    for collective in ("all_gather", "all_to_all", "ppermute",
+                       "pgather", "pswapaxes"):
+        assert collective not in jaxpr, collective
+
+
+# -- session integration -------------------------------------------------------
+
+
+def test_session_sharded_campaign_end_to_end(params):
+    spec = CampaignSpec(
+        path="closed_loop",
+        scenario="multi_cell",
+        scenario_args=(("n_cells", 2), ("per_cell_scenario", ("good", "poor"))),
+        n_ues=N_UES,
+        n_slots=8,
+        seed=1,
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=18.0, hysteresis=2.0),),
+        switch=SwitchSpec(window_slots=2, backend="ref"),
+        topology=TopologySpec(n_cells=2, coupling=0.4,
+                              cell_noise_offsets_db=(0.0, 2.0)),
+    )
+    assert CampaignSpec.from_json(spec.to_json()) == spec
+    session = ArchesSession(spec, ai_params=params)
+    hist = session.run()
+    # per-cell reductions carry the layout
+    np.testing.assert_array_equal(hist.cell_of_ue, [0, 0, 1, 1])
+    assert hist.per_cell_ai_share.shape == (2,)
+    assert hist.per_cell_throughput.shape == (2,)
+    assert hist.per_cell_kpm("snr").shape == (8, 2)
+    # the poor cell leans on the AI expert; the clean cell does not
+    assert hist.per_cell_ai_share[1] > hist.per_cell_ai_share[0]
+    # the closed loop still replays bitwise through the host policy
+    replay = session.host_replay(hist)
+    np.testing.assert_array_equal(hist.modes, replay["active_mode"])
+
+
+def test_session_auto_capacity_open_loop(params):
+    modes = np.ones((N_SLOTS, N_UES), np.int32)
+    modes[:, 0] = 0
+    modes[3:, 1] = 0  # peak demand 2
+    spec = CampaignSpec(
+        path="gated", scenario="good_poor_good",
+        scenario_args=(("poor_start", 2), ("poor_end", 4)),
+        n_ues=N_UES, n_slots=N_SLOTS, modes=tuple(map(tuple, modes)),
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=4),
+        topology=TopologySpec(n_cells=2),
+    )
+    hist = ArchesSession(spec, ai_params=params).run(auto_capacity=True)
+    assert hist.provisioned_capacity == 2
+    assert hist.overflow_slot_ues == 0
+    assert hist.ai_share > 0
+
+
+def test_session_auto_capacity_closed_loop(params):
+    """Two-compile pre-pass: the closed loop sizes its own capacity from a
+    full-capacity dry run, and the re-provisioned campaign has zero
+    overflow by construction (quantile 1.0)."""
+    spec = CampaignSpec(
+        path="closed_loop", scenario="good_poor_good",
+        scenario_args=(("poor_start", 2), ("poor_end", 5)),
+        n_ues=N_UES, n_slots=N_SLOTS, seed=2,
+        bank=ExpertBankSpec(execution_mode="gated"),
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=18.0, hysteresis=2.0),),
+        switch=SwitchSpec(window_slots=2, backend="ref"),
+    )
+    session = ArchesSession(spec, ai_params=params)
+    hist = session.run(auto_capacity=True)
+    assert hist.provisioned_capacity is not None
+    assert hist.provisioned_capacity >= 1
+    assert hist.overflow_slot_ues == 0
+    # the re-provisioned engine is what actually ran
+    assert session.engine.bank.gated_capacity == hist.provisioned_capacity
+
+
+def test_auto_capacity_rejects_ungated_bank():
+    with pytest.raises(ValueError, match="auto_capacity"):
+        ArchesSession(CampaignSpec(path="batched", n_ues=2, n_slots=2)).run(
+            auto_capacity=True
+        )
+
+
+# -- per-cell reductions on plain histories ------------------------------------
+
+
+def test_per_cell_reductions_need_a_topology():
+    hist = BatchedRunHistory(
+        modes=np.zeros((2, 2), np.int32), kpms={}, outputs={}
+    )
+    with pytest.raises(ValueError, match="per-cell"):
+        _ = hist.per_cell_ai_share
+
+
+def test_per_cell_ai_share_counts_served_not_selected():
+    modes = np.zeros((2, 4), np.int32)  # everyone selects AI
+    overflow = np.zeros((2, 4), np.int32)
+    overflow[:, 3] = 1  # one UE of cell 1 always overflows
+    hist = BatchedRunHistory(
+        modes=modes, kpms={}, outputs={"gated_overflow": overflow},
+        cell_of_ue=np.asarray([0, 0, 1, 1]),
+    )
+    np.testing.assert_allclose(hist.per_cell_ai_share, [1.0, 0.5])
+
+
+def test_suggest_gated_capacity_covers_shard_local_spikes():
+    """Per-shard compaction means a shard-local demand spike must drive the
+    campaign capacity even when the campaign-wide count would fit."""
+    from repro.core.runtime import suggest_gated_capacity
+
+    modes = np.ones((4, 4), np.int32)
+    modes[2, 0] = modes[2, 1] = 0  # both AI UEs live in shard 0 of 2
+    hist = BatchedRunHistory(modes=modes, kpms={}, outputs={})
+    assert suggest_gated_capacity(hist) == 2  # campaign-wide peak
+    # 2 shards: shard 0 peaks at 2 -> per-shard 2 -> campaign 4
+    assert suggest_gated_capacity(hist, n_shards=2) == 4
+    with pytest.raises(ValueError, match="does not divide"):
+        suggest_gated_capacity(hist, n_shards=3)
+
+
+def test_topology_rejects_scenario_default_cell_count_mismatch():
+    """multi_cell's *default* n_cells (2) must also be checked against the
+    topology — not just an explicitly passed value."""
+    with pytest.raises(ValueError, match="one cell count"):
+        ArchesSession(CampaignSpec(
+            path="batched", scenario="multi_cell",
+            n_ues=8, n_slots=2, topology=TopologySpec(n_cells=4),
+        ))
