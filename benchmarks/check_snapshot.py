@@ -1,0 +1,181 @@
+"""Schema/regression gate for the committed perf snapshot.
+
+Two checks, both against the repo's committed ``BENCH_<tag>.json``:
+
+1. **Schema compatibility** — the snapshot must parse, declare the
+   ``arches-bench-v1`` schema, and carry every key current tooling reads
+   (engine/gated/fused/bf16 rates, the campaign provenance hash, the host
+   fingerprint).  A PR that renames a payload field without migrating the
+   committed snapshot fails here, not six PRs later when someone plots the
+   trajectory.
+
+2. **Regression** — when a freshly measured candidate snapshot is supplied
+   (``--candidate``, or automatically by ``benchmarks.run --smoke --json``),
+   every ``*slot_ues_per_s`` rate is compared against the committed
+   baseline.  A >20% drop on a *comparable* host (same platform, machine,
+   CPU count, and JAX backend) exits non-zero; on a different host the
+   deltas are printed as warnings only, since cross-host wall-clock is
+   meaningless.
+
+Usage:  PYTHONPATH=src python -m benchmarks.check_snapshot [BASELINE]
+                                                           [--candidate NEW]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: the committed snapshot this repo's trajectory is anchored to
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr6.json"
+
+#: wall-clock regression tolerance on comparable hosts
+REGRESSION_FRAC = 0.20
+
+SCHEMA = "arches-bench-v1"
+
+#: top-level keys every v1 snapshot must carry
+REQUIRED_KEYS = (
+    "schema",
+    "host",
+    "slot_ues_per_s",
+    "gated",
+    "campaign_spec_hash",
+)
+
+#: per-share keys inside the ``gated`` section
+REQUIRED_GATED_KEYS = (
+    "executed_flops_per_slot",
+    "gated_slot_ues_per_s",
+    "concurrent_slot_ues_per_s",
+    "fused_slot_ues_per_s",
+    "bf16_slot_ues_per_s",
+    "fused_speedup_vs_unfused",
+    "bf16_audit_tripped",
+)
+
+#: the acceptance sweep: these AI shares must be present in every snapshot
+REQUIRED_SHARES = ("0.0625", "0.25", "1")
+
+#: host-fingerprint fields that must match for rate comparison
+HOST_FIELDS = ("platform", "machine", "cpu_count", "jax_backend")
+
+
+def _load(path: Path) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"snapshot unreadable: {path}: {exc}")
+        return None
+
+
+def validate_schema(payload: dict, label: str) -> list[str]:
+    """Return a list of schema violations (empty == compatible)."""
+    errors: list[str] = []
+    if payload.get("schema") != SCHEMA:
+        errors.append(
+            f"{label}: schema is {payload.get('schema')!r}, want {SCHEMA!r}"
+        )
+    for key in REQUIRED_KEYS:
+        if key not in payload:
+            errors.append(f"{label}: missing top-level key {key!r}")
+    host = payload.get("host", {})
+    for field in HOST_FIELDS:
+        if field not in host:
+            errors.append(f"{label}: host fingerprint missing {field!r}")
+    gated = payload.get("gated", {})
+    for share in REQUIRED_SHARES:
+        if share not in gated:
+            errors.append(f"{label}: gated sweep missing AI share {share!r}")
+    for share, row in gated.items():
+        for key in REQUIRED_GATED_KEYS:
+            if key not in row:
+                errors.append(f"{label}: gated[{share!r}] missing {key!r}")
+    return errors
+
+
+def _rates(payload: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten every ``*slot_ues_per_s`` scalar out of the payload."""
+    found: dict[str, float] = {}
+    for key, val in payload.items():
+        path = f"{prefix}{key}"
+        if isinstance(val, dict):
+            found.update(_rates(val, prefix=f"{path}."))
+        elif key.endswith("slot_ues_per_s") and isinstance(val, (int, float)):
+            found[path] = float(val)
+    return found
+
+
+def check(baseline: Path | str, candidate: Path | str | None = None) -> int:
+    """Run both gates; return a process exit code (0 == pass)."""
+    baseline = Path(baseline)
+    base = _load(baseline)
+    if base is None:
+        return 1
+    errors = validate_schema(base, baseline.name)
+    for err in errors:
+        print(f"SCHEMA  {err}")
+    if errors:
+        return 1
+    print(f"schema ok: {baseline.name} ({SCHEMA})")
+
+    if candidate is None:
+        return 0
+    candidate = Path(candidate)
+    if candidate.resolve() == baseline.resolve():
+        print("candidate is the baseline itself; nothing to compare")
+        return 0
+    cand = _load(candidate)
+    if cand is None:
+        return 1
+    errors = validate_schema(cand, candidate.name)
+    for err in errors:
+        print(f"SCHEMA  {err}")
+    if errors:
+        return 1
+
+    comparable = all(
+        base.get("host", {}).get(f) == cand.get("host", {}).get(f)
+        for f in HOST_FIELDS
+    )
+    base_rates, cand_rates = _rates(base), _rates(cand)
+    regressions = []
+    for key, ref in sorted(base_rates.items()):
+        new = cand_rates.get(key)
+        if new is None or ref <= 0:
+            continue
+        delta = (new - ref) / ref
+        marker = ""
+        if delta < -REGRESSION_FRAC:
+            marker = " <-- REGRESSION" if comparable else " (different host)"
+            regressions.append((key, ref, new, delta))
+        print(f"  {key}: {ref:.1f} -> {new:.1f} ({delta:+.1%}){marker}")
+    if regressions and comparable:
+        print(
+            f"{len(regressions)} rate(s) regressed >{REGRESSION_FRAC:.0%} "
+            f"on a comparable host"
+        )
+        return 1
+    if regressions:
+        print(
+            f"warning: {len(regressions)} rate(s) dropped >"
+            f"{REGRESSION_FRAC:.0%}, but hosts differ — not failing"
+        )
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
+                    help="committed snapshot (default: BENCH_pr6.json)")
+    ap.add_argument("--candidate", default=None,
+                    help="freshly measured snapshot to diff against baseline")
+    args = ap.parse_args()
+    sys.exit(check(args.baseline, candidate=args.candidate))
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,79 @@ def roofline_row(rec: dict) -> dict:
     }
 
 
+def _expert_param_count(net, *_unused) -> float:
+    """Analytic parameter count of the residual-CNN expert (per antenna)."""
+    c = net.channels
+    kh, kw = net.kernel_hw
+    return float(
+        (c * 2 * kh * kw + c)                      # stem
+        + net.n_res_blocks * 2 * (c * c * kh * kw + c)  # body
+        + (2 * c) * c * kh * kw + 2 * c            # up-projection
+        + 2 * (2 * c) * kh * kw + 2                # head
+    )
+
+
+def gated_hot_path(
+    n_ues: int = 16,
+    shares: tuple[float, ...] = (1.0 / 16.0, 0.25, 1.0),
+) -> list[dict]:
+    """Analytic roofline for the gated expert hot path (per scan step).
+
+    Compares the HBM traffic of the *unfused* triple (gather-compact ->
+    folded-GEMM -> scatter: the capacity-K sub-batch is materialized twice
+    and every UE's tile crosses HBM again in the scatter) against the
+    *fused* kernel (DMA-steered gather feeds the GEMM directly, scatter is
+    the aliased output write — K input tiles in, K output blocks out, the
+    folded weights resident in VMEM across the capacity grid).  A bf16
+    column halves the GEMM operand bytes (outputs stay f32).  FLOPs are
+    identical across all three — fusion is purely a memory/launch win, so
+    the interesting number is arithmetic intensity vs the v5e ridge point.
+    """
+    from benchmarks.common import NET, SLOT_CFG
+
+    cfg, net = SLOT_CFG, NET
+    in_tile = 2 * cfg.n_dmrs_sym * cfg.n_ant * cfg.n_pilot_sc * 4  # f32 bytes
+    out_tile = 2 * cfg.n_dmrs_sym * cfg.n_ant * cfg.n_sc * 4
+    w_bytes = _expert_param_count(net) * 4
+    f_ai = net.flops(cfg)
+    ridge = PEAK_FLOPS / HBM_BW
+    print(f"\n== Gated hot path (analytic, per scan step, U={n_ues}) ==")
+    print(f"   tiles: in {in_tile} B, out {out_tile} B, weights "
+          f"{w_bytes / 1e3:.1f} kB; expert {f_ai / 1e6:.1f} MFLOP/UE; "
+          f"v5e ridge {ridge:.0f} FLOP/B")
+    hdr = ("| AI share | K | unfused MB | fused MB | fused bf16 MB | "
+           "traffic cut | intensity F/B | bound |")
+    print(hdr)
+    print("|" + "---|" * 8)
+    rows = []
+    for share in shares:
+        k = max(int(round(share * n_ues)), 1)
+        # unfused: gather (rd K in, wr K in) + GEMM (rd K in + W, wr K out)
+        # + scatter (rd K out + U base, wr U out)
+        unfused = (2 * k * in_tile) + (k * in_tile + w_bytes + k * out_tile) \
+            + (k * out_tile + 2 * n_ues * out_tile)
+        # fused: rd K in + W once (VMEM-resident), wr K aliased out blocks
+        fused = k * in_tile + w_bytes + k * out_tile
+        # bf16: GEMM operand bytes halve, f32 accumulate/output unchanged
+        fused_bf16 = k * in_tile // 2 + w_bytes / 2 + k * out_tile
+        flops = k * f_ai
+        intensity = flops / fused
+        bound = "compute" if intensity > ridge else "memory"
+        print(f"| {share:.4g} | {k} | {unfused / 1e6:.3f} | "
+              f"{fused / 1e6:.3f} | {fused_bf16 / 1e6:.3f} | "
+              f"{unfused / fused:.1f}x | {intensity:.0f} | {bound} |")
+        rows.append({
+            "share": share, "capacity": k,
+            "unfused_bytes": unfused, "fused_bytes": fused,
+            "fused_bf16_bytes": fused_bf16,
+            "traffic_cut": unfused / fused,
+            "arithmetic_intensity": intensity, "bound": bound,
+        })
+    print("   (plus 2 launch boundaries/step removed; bf16 also halves the "
+          "MXU ridge so the bound column is conservative)")
+    return rows
+
+
 LEVERS = {
     "compute": "cut non-useful FLOPs (remat policy, fused attention, avoid "
                "fp32 upcasts)",
@@ -127,6 +200,7 @@ def merge_calibrated(records: list[dict], calib_path: str) -> list[dict]:
 
 def run(path: str = "dryrun_results.json",
         calib_path: str = "dryrun_calibrated.json") -> list[dict]:
+    gated_hot_path()
     if not os.path.exists(path):
         print(f"[roofline] {path} missing — run python -m repro.launch.dryrun --all")
         return []

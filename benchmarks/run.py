@@ -23,15 +23,31 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 import traceback
+
+
+def _jax_backend() -> str:
+    """Default-backend name, without importing jax before env setup."""
+    import jax
+
+    return jax.default_backend()
 
 
 def _json_payload(outs: dict) -> dict:
     """Assemble the perf-trajectory snapshot from section outputs."""
     payload: dict = {"schema": "arches-bench-v1", "time": time.strftime(
         "%Y-%m-%dT%H:%M:%S")}
+    # host fingerprint: check_snapshot only compares absolute rates when
+    # these match (cross-host wall-clock deltas are meaningless)
+    payload["host"] = {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "jax_backend": _jax_backend(),
+    }
     batched = outs.get("batched")
     if batched:
         payload["slot_ues_per_s"] = {
@@ -51,6 +67,14 @@ def _json_payload(outs: dict) -> dict:
                 "gated_slot_ues_per_s": row["gated_slot_ues_per_s"],
                 "concurrent_slot_ues_per_s": row["concurrent_slot_ues_per_s"],
                 "speedup_vs_concurrent": row["speedup"],
+                "fused_slot_ues_per_s": row["fused_slot_ues_per_s"],
+                "fused_speedup_vs_unfused": row["fused_speedup_vs_unfused"],
+                # true off-TPU: the ref fallback is the same XLA program,
+                # so the fused timing is the unfused one (not re-measured)
+                "fused_shares_program_with_unfused":
+                    row["fused_shares_program_with_unfused"],
+                "bf16_slot_ues_per_s": row["bf16_slot_ues_per_s"],
+                "bf16_audit_tripped": row["bf16_audit_tripped"],
             }
             for share, row in gated["by_share"].items()
         }
@@ -116,10 +140,18 @@ def main() -> None:
             ("in_scan", "Closed-loop equivalence (smoke)",
              bench_control_loop.run_in_scan,
              {"n_slots": 8, "n_ues": 2, "window_slots": 2}),
-            # raises unless gated == concurrent bitwise and executed FLOPs
-            # at AI share 0 equal the MMSE-only cost model
+            # raises unless gated == concurrent bitwise, fused == unfused
+            # bitwise, the bf16 audit stays quiet, and executed FLOPs at AI
+            # share 0 equal the MMSE-only cost model.  n_ues=8 keeps the
+            # 1/16 share distinct from 1/4 (ceil -> 1 vs 2 AI UEs); the
+            # share set matches the acceptance sweep {1/16, 1/4, 1}.
+            # n_slots=32 / repeats=9: fused and unfused lower to
+            # near-identical XLA:CPU programs, so the speedup columns need
+            # long timed runs (scheduler jitter is fixed-size, its relative
+            # weight falls with scan length) and min-of-repeats headroom.
             ("gated", "Gated execution (smoke)", bench_gated.run,
-             {"n_slots": 16, "n_ues": 4, "shares": (0.0, 0.25, 1.0)}),
+             {"n_slots": 32, "n_ues": 8,
+              "shares": (0.0, 1.0 / 16.0, 0.25, 1.0), "repeats": 9}),
             # raises unless the declarative session reproduces the legacy
             # closed loop bitwise and a per-UE heterogeneous campaign
             # matches its per-UE host replay (spec JSON round-trip included)
@@ -200,6 +232,22 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"\nwrote perf snapshot -> {args.json}")
+
+    if args.smoke:
+        # schema/regression gate: the committed snapshot must stay readable
+        # by current tooling, and a fresh snapshot (when --json was given)
+        # must not regress slot-UEs/s >20% on a comparable host
+        from benchmarks import check_snapshot
+
+        print("\n" + "=" * 78)
+        print("## Snapshot schema/regression gate")
+        print("=" * 78)
+        rc = check_snapshot.check(
+            check_snapshot.DEFAULT_BASELINE,
+            candidate=args.json,
+        )
+        if rc:
+            failures.append("Snapshot schema/regression gate")
 
     if failures:
         sys.exit(1)

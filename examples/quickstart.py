@@ -154,6 +154,46 @@ def gated_demo(n_ues: int) -> None:
     if not same:
         raise SystemExit("gated != concurrent trajectory")
 
+    # fused hot path: one kernel replaces the gather -> expert -> scatter
+    # triple.  Same spec + fused=True must reproduce the gated campaign
+    # bitwise — fusion is a launch/memory win, never a numerics change.
+    fused = roundtrip(CampaignSpec(
+        path="gated",
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=n_ai,
+                            fused=True),
+        **base,
+    ))
+    hist_f = ArchesSession(fused).run()
+    fused_same = all(
+        np.array_equal(hist_g.kpms[k], hist_f.kpms[k]) for k in hist_g.kpms
+    ) and all(
+        np.array_equal(hist_g.outputs[k], hist_f.outputs[k])
+        for k in hist_g.outputs
+    )
+    print(f"fused hot path [spec {spec_hash(fused)}]: "
+          f"{'bitwise-equal to unfused' if fused_same else 'DIVERGED'}")
+    if not fused_same:
+        raise SystemExit("fused != unfused gated trajectory")
+
+    # bf16 expert variant: half the GEMM operand bytes, f32 accumulation.
+    # Not bitwise — the in-scan NMSE audit guards it: any served UE whose
+    # output diverges > threshold from the dense MMSE fail-safe reverts to
+    # it (and is flagged in the audit_tripped leaf).  The score is
+    # expert-vs-fail-safe, so tight thresholds trip wherever the expert
+    # genuinely disagrees with MMSE — tripped UEs are served the fail-safe.
+    bf16 = roundtrip(CampaignSpec(
+        path="gated",
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=n_ai,
+                            fused=True, dtype="bfloat16",
+                            audit_nmse_threshold=1.0),
+        **base,
+    ))
+    hist_b = ArchesSession(bf16).run()
+    total = hist_b.modes.size
+    print(f"bf16 expert [spec {spec_hash(bf16)}]: audit tripped "
+          f"{hist_b.audit_tripped_slot_ues}/{total} slot-UEs at NMSE 1.0 "
+          f"(tripped UEs reverted to the MMSE fail-safe that slot)")
+
 
 def heterogeneous_demo(n_ues: int) -> None:
     spec = roundtrip(CampaignSpec(

@@ -89,6 +89,30 @@ class Expert:
     bytes_hbm: float = 0.0
 
 
+def _batched_nmse(selected, baseline) -> jax.Array:
+    """Per-UE NMSE of ``selected`` vs ``baseline`` across all leaves.
+
+    Both are pytrees of ``(n_ues, ...)`` leaves; returns ``(n_ues,)`` f32
+    ``sum |sel - base|^2 / sum |base|^2`` (sums over every non-UE axis and
+    every leaf).  The in-scan accuracy audit for reduced-precision gated
+    experts: no ground truth exists inside the scan, so divergence is
+    measured against the always-computed fail-safe baseline.
+    """
+
+    def powers(s, b):
+        d = s - b
+        axes = tuple(range(1, d.ndim))
+        err = jnp.sum(jnp.abs(d).astype(jnp.float32) ** 2, axis=axes)
+        ref = jnp.sum(jnp.abs(b).astype(jnp.float32) ** 2, axis=axes)
+        return err, ref
+
+    pairs = jax.tree.leaves(jax.tree.map(powers, selected, baseline),
+                            is_leaf=lambda x: isinstance(x, tuple))
+    err = sum(p[0] for p in pairs)
+    ref = sum(p[1] for p in pairs)
+    return err / jnp.maximum(ref, jnp.float32(1e-30))
+
+
 @dataclasses.dataclass(frozen=True)
 class BankOutput:
     selected: Any  # pytree — contents of the designated buffer post-switch
@@ -105,6 +129,11 @@ class BankOutput:
     # capacity-overflow flags ((n_ues,) bool; GATED only): UE selected the
     # gated expert but fell back to ``default_mode`` this slot.
     overflow: jax.Array | None = None
+    # accuracy-audit flags ((n_ues,) bool; GATED + audit_threshold only):
+    # the gated expert served this UE but its output failed the in-scan
+    # NMSE audit vs the dense fail-safe baseline, so the baseline was kept.
+    # The expert still *executed* for the UE (cost accounting counts it).
+    audit_tripped: jax.Array | None = None
 
 
 class ExpertBank:
@@ -118,6 +147,8 @@ class ExpertBank:
         execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
         use_pallas_switch: bool = True,
         gated_capacity: int | None = None,
+        gated_fused_apply: Callable[..., Any] | None = None,
+        audit_threshold: float | None = None,
     ):
         if len(experts) < 2:
             raise ValueError("an expert bank needs at least 2 experts")
@@ -130,6 +161,20 @@ class ExpertBank:
             )
         if gated_capacity is not None and gated_capacity < 0:
             raise ValueError(f"gated_capacity {gated_capacity} must be >= 0")
+        if gated_fused_apply is not None and (
+            execution_mode is not ExecutionMode.GATED
+        ):
+            raise ValueError("gated_fused_apply requires GATED execution")
+        if audit_threshold is not None:
+            if execution_mode is not ExecutionMode.GATED:
+                raise ValueError(
+                    "audit_threshold requires GATED execution (the audit "
+                    "compares against the densely-run fail-safe baseline)"
+                )
+            if not audit_threshold > 0:
+                raise ValueError(
+                    f"audit_threshold {audit_threshold} must be > 0"
+                )
         self.experts = tuple(experts)
         self.default_mode = default_mode
         self.execution_mode = execution_mode
@@ -137,6 +182,16 @@ class ExpertBank:
         #: dense sub-batch size for GATED execution; ``None`` == full batch
         #: (no overflow possible), ``0`` == gated expert never runs.
         self.gated_capacity = gated_capacity
+        #: optional fused hot path for GATED: ``(idx, src, base, *inputs) ->
+        #: selected`` replaces the gather / expert-fn / scatter triple with
+        #: one kernel (``repro.kernels.gated_expert``).  Must be
+        #: bitwise-equal to the unfused composition.
+        self.gated_fused_apply = gated_fused_apply
+        #: optional in-scan accuracy audit for GATED: per-UE NMSE of the
+        #: gated expert's output vs the fail-safe baseline; UEs whose NMSE
+        #: exceeds the threshold (or is NaN/inf) revert to the baseline and
+        #: are flagged in ``BankOutput.audit_tripped``.
+        self.audit_threshold = audit_threshold
 
     @property
     def n_experts(self) -> int:
@@ -262,22 +317,47 @@ class ExpertBank:
             order = jnp.argsort(jnp.logical_not(is_gated).astype(jnp.int32),
                                 stable=True)
             idx = order[:capacity]
-            compact_inputs = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
-                                          inputs)
-            gated = self.experts[0]
-            compact_out = gated.fn(gated.params, *compact_inputs)
-            selected = switch_scatter(
-                src, compact_out, base,
-                backend="auto" if self.use_pallas_switch else "ref",
-            )
+            if self.gated_fused_apply is not None:
+                # fused hot path: one kernel does gather + expert + scatter
+                selected = self.gated_fused_apply(idx, src, base, *inputs)
+            else:
+                compact_inputs = jax.tree.map(
+                    lambda x: jnp.take(x, idx, axis=0), inputs
+                )
+                gated = self.experts[0]
+                compact_out = gated.fn(gated.params, *compact_inputs)
+                selected = switch_scatter(
+                    src, compact_out, base,
+                    backend="auto" if self.use_pallas_switch else "ref",
+                )
         else:
             selected = base
+
+        served_by = jnp.where(within, 0, eff_mode).astype(jnp.int32)
+        audit_tripped = None
+        if self.audit_threshold is not None and capacity > 0:
+            nmse = _batched_nmse(selected, base)
+            # NaN/inf-safe trip: anything NOT provably within the threshold
+            # trips (a diverged bf16 forward must not pass the audit)
+            tripped = jnp.logical_and(
+                within, jnp.logical_not(nmse <= self.audit_threshold)
+            )
+            selected = jax.tree.map(
+                lambda s, b: jnp.where(
+                    tripped.reshape((-1,) + (1,) * (s.ndim - 1)), b, s
+                ),
+                selected,
+                base,
+            )
+            served_by = jnp.where(
+                tripped, jnp.int32(self.default_mode), served_by
+            )
+            audit_tripped = tripped
 
         n_gated = jnp.sum(within.astype(jnp.int32))
         executed = jnp.concatenate(
             [n_gated[None], jnp.full((self.n_experts - 1,), n_ues, jnp.int32)]
         )
-        served_by = jnp.where(within, 0, eff_mode).astype(jnp.int32)
         return BankOutput(
             selected=selected,
             all_outputs=None,
@@ -285,6 +365,7 @@ class ExpertBank:
             executed_ue=executed,
             served_by=served_by,
             overflow=overflow,
+            audit_tripped=audit_tripped,
         )
 
     # ---- static cost model (drives the energy/utilization proxy) ----
@@ -369,6 +450,11 @@ class ExpertBank:
         flops = jnp.asarray([e.flops for e in self.experts], jnp.float32)
         if self.execution_mode is ExecutionMode.GATED:
             dense = jnp.sum(flops[1:])
-            return dense + flops[0] * (out.served_by == 0).astype(jnp.float32)
+            ai_ran = out.served_by == 0
+            if out.audit_tripped is not None:
+                # audit-tripped UEs were *served* by the fail-safe but the
+                # gated expert still executed for them — the cost is real
+                ai_ran = jnp.logical_or(ai_ran, out.audit_tripped)
+            return dense + flops[0] * ai_ran.astype(jnp.float32)
         # concurrent / degenerate selected-only: every expert ran every UE
         return jnp.full(out.served_by.shape, jnp.sum(flops), jnp.float32)

@@ -163,12 +163,14 @@ class BatchedRunHistory:
     @property
     def ai_share(self) -> float:
         """Fraction of slot-UEs actually *served* by the designated (AI)
-        expert — capacity-overflow slot-UEs fell back to the fail-safe
-        expert and do not count, keeping this consistent with the
-        executed-FLOPs accounting."""
+        expert — capacity-overflow and audit-tripped slot-UEs fell back to
+        the fail-safe expert and do not count, keeping this consistent with
+        the served-by accounting."""
         served = self.modes == 0
         if "gated_overflow" in self.outputs:
             served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
+        if "audit_tripped" in self.outputs:
+            served = served & (np.asarray(self.outputs["audit_tripped"]) == 0)
         return float(np.mean(served))
 
     def executed_flops_per_slot(self) -> np.ndarray:
@@ -183,6 +185,15 @@ class BatchedRunHistory:
         if "gated_overflow" not in self.outputs:
             return 0
         return int(np.asarray(self.outputs["gated_overflow"]).sum())
+
+    @property
+    def audit_tripped_slot_ues(self) -> int:
+        """Total accuracy-audit fail-safe events (audited gated runs; else
+        0): slot-UEs whose gated-expert output failed the in-scan NMSE
+        audit and were served by the fail-safe baseline instead."""
+        if "audit_tripped" not in self.outputs:
+            return 0
+        return int(np.asarray(self.outputs["audit_tripped"]).sum())
 
     def kpm_series(self, name: str, ue: int = 0) -> np.ndarray:
         return self.kpms[name][:, ue]
@@ -319,6 +330,14 @@ def suggest_gated_capacity(
         )))
         for s in range(n_shards)
     ) + int(headroom)
+    if n_shards > 1:
+        # ``per_shard_capacity`` validation: a sharded engine needs a
+        # capacity that splits into >= 1 slot per shard, so the suggestion
+        # must never round a low-demand (or zero-demand) campaign down to
+        # an unbuildable value.  ``cap_shard * n_shards`` and ``n_ues`` are
+        # both multiples of ``n_shards``, so the min stays divisible.
+        cap_shard = max(cap_shard, 1)
+        return int(min(cap_shard * n_shards, n_ues))
     return int(np.clip(cap_shard * n_shards, 0, n_ues))
 
 
@@ -346,8 +365,8 @@ class ArchesRuntime:
         | None = None,
         agent: E3Agent | None = None,
         *,
-        default_mode: int = 1,
-        fail_safe_mode: int = 1,
+        default_mode: int | None = None,
+        fail_safe_mode: int | None = None,
         ttl_slots: int = 16,
         keep_outputs: bool = False,
         closed_loop: bool = False,
@@ -362,6 +381,12 @@ class ArchesRuntime:
         ``device_policy`` (exported via ``DecisionTreePolicy.to_device`` /
         ``ThresholdPolicy.to_device``) and ``switch_config`` (a
         ``SwitchConfig``) replace ``slot_fn`` for the batched path.
+
+        ``default_mode`` / ``fail_safe_mode`` default to the switch
+        config's ``default_mode`` when a closed-loop config is present
+        (matching what ``from_spec`` constructs — the deprecation shim and
+        the spec entry point must be equivalent for the same kwargs) and to
+        mode 1 for the host loop.
 
         .. deprecated::
             The ``closed_loop=True`` kwarg bundle is the legacy entry
@@ -382,6 +407,16 @@ class ArchesRuntime:
                     "closed_loop=True needs engine, device_policy and "
                     "switch_config"
                 )
+        if default_mode is None:
+            # forward the config's default like from_spec does (getattr:
+            # tests pass bare sentinel objects through the legacy shim)
+            default_mode = (
+                int(getattr(switch_config, "default_mode", 1))
+                if closed_loop and switch_config is not None
+                else 1
+            )
+        if fail_safe_mode is None:
+            fail_safe_mode = default_mode
         self.slot_fn = slot_fn
         self.agent = agent
         self.default_mode = default_mode

@@ -105,6 +105,17 @@ class ExpertBankSpec:
     and freshly initialized parameters from ``params_seed`` (campaigns
     study switching, not estimator quality; pass trained params to
     ``ArchesSession(ai_params=...)`` to override).
+
+    ``fused=True`` (gated banks) runs the compact -> folded-GEMM -> scatter
+    hot path as one kernel (``repro.kernels.gated_expert``) — bitwise-equal
+    to the unfused triple, just fewer launches and no materialized
+    sub-batch.  ``dtype`` selects the AI expert's GEMM operand precision
+    (``"float32"`` — bitwise baseline — or ``"bfloat16"``), and
+    ``audit_nmse_threshold`` arms the in-scan accuracy audit: a served
+    UE whose gated output diverges from the fail-safe baseline by more
+    than this NMSE (or goes NaN) reverts to the baseline and is flagged in
+    the trajectory's ``audit_tripped`` leaf — the guard rail that makes
+    reduced precision deployable.
     """
 
     execution_mode: str = "concurrent"
@@ -113,6 +124,9 @@ class ExpertBankSpec:
     channels: int = 8
     n_res_blocks: int = 1
     params_seed: int = 0
+    fused: bool = False
+    dtype: str = "float32"
+    audit_nmse_threshold: float | None = None
 
     def __post_init__(self):
         # normalize enum members to their JSON-stable string value
@@ -121,6 +135,23 @@ class ExpertBankSpec:
             "execution_mode",
             ExecutionMode.coerce(self.execution_mode).value,
         )
+        if self.dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"dtype {self.dtype!r}; one of 'float32', 'bfloat16'"
+            )
+        mode = ExecutionMode.coerce(self.execution_mode)
+        if self.fused and mode is not ExecutionMode.GATED:
+            raise ValueError("fused=True requires execution_mode='gated'")
+        if self.audit_nmse_threshold is not None:
+            if mode is not ExecutionMode.GATED:
+                raise ValueError(
+                    "audit_nmse_threshold requires execution_mode='gated'"
+                )
+            if not self.audit_nmse_threshold > 0:
+                raise ValueError(
+                    f"audit_nmse_threshold {self.audit_nmse_threshold} "
+                    "must be > 0"
+                )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -529,6 +560,9 @@ class ArchesSession:
             execution_mode=ExecutionMode.coerce(bank.execution_mode),
             use_pallas_switch=bank.use_pallas_switch,
             gated_capacity=self._engine_capacity(campaign_capacity),
+            fused_gated=bank.fused,
+            expert_dtype=bank.dtype,
+            audit_nmse_threshold=bank.audit_nmse_threshold,
         )
 
     @property

@@ -68,7 +68,11 @@ ALL_CANDIDATE_KPMS: tuple[str, ...] = AERIAL_CANDIDATE_KPMS + OAI_CANDIDATE_KPMS
 #: every physical output but deliberately differ in realized compute).
 #: ``BatchedRunHistory.executed_flops_per_slot()`` / ``overflow_slot_ues``
 #: are the aggregate views.
-EXECUTION_COST_KPMS: tuple[str, ...] = ("executed_flops", "gated_overflow")
+EXECUTION_COST_KPMS: tuple[str, ...] = (
+    "executed_flops",
+    "gated_overflow",
+    "audit_tripped",
+)
 
 
 def physical_trajectory(traj: Mapping[str, jax.Array]) -> dict[str, jax.Array]:

@@ -1,0 +1,9 @@
+from repro.kernels.gated_expert.gated_expert import gated_expert_fused
+from repro.kernels.gated_expert.ops import gated_expert_apply
+from repro.kernels.gated_expert.ref import gated_expert_apply_ref
+
+__all__ = [
+    "gated_expert_apply",
+    "gated_expert_apply_ref",
+    "gated_expert_fused",
+]

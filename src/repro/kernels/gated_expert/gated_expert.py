@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: the fused gated expert hot path (ROADMAP "Raw speed").
+
+The unfused gated path pays three ops per scan step — cumsum compaction
+(gather to a capacity-``K`` sub-batch), the folded-GEMM AI expert on that
+sub-batch, and the ``switch_scatter`` un-compaction.  Between them the
+compact sub-batch is materialized in HBM twice (input gather out, expert
+output in) before the scatter reads it back.
+
+This kernel fuses all three: the gather indirection that
+``switch_gather_batched_2d`` already uses to steer its DMA *source* becomes
+the *input* stage of one ``pallas_call`` whose grid walks the ``K`` compact
+rows.  Step ``k``:
+
+* DMAs UE ``idx[k]``'s LS-input tile straight from the full batch (the
+  compaction index vector is scalar-prefetched to SMEM so it can steer the
+  BlockSpec index maps before the grid runs — no materialized sub-batch);
+* runs the folded-GEMM expert forward on that one UE's tile in VMEM
+  (``B = n_ant`` GEMM columns; per-column K-dim accumulation makes the
+  result bitwise-identical to any batched evaluation of the same UE — the
+  batch-composition property ``repro.phy.ai_estimator`` documents);
+* writes the result directly into UE ``idx[k]``'s designated buffer, which
+  the output *aliases* (``input_output_aliases``) — the scatter is just the
+  output DMA.
+
+Rows past the last selected UE (``valid[k] == 0`` — the capacity padding
+the unfused path pays GEMM FLOPs for) identity-rewrite their UE's baseline
+tile instead: ``idx`` is a slice of a permutation, so ``idx[k]`` is a
+distinct, valid UE index even for padding rows, and the rewrite is a
+single-tile round-trip, not a wasted forward pass.  UEs outside ``idx``
+are never visited; aliasing leaves their baseline bytes untouched in HBM.
+
+Layout contract (``ops.py`` builds these views): activations are the f32
+real view ``(n_ues, 2, S, n_ant, n_pilot_sc)`` in, designated buffers the
+real view ``(n_ues, 2, S, n_ant, n_sc)`` aliased in/out; folded parameter
+matrices ride along as whole-array operands with constant index maps (they
+are small and grid-invariant — resident in VMEM across steps).  On a real
+TPU the trailing dims would additionally be padded to the lane quantum as
+``switch_select/ops.py`` does; the CPU/CI path exercises the kernel in
+interpret mode, where the reference suite pins bitwise equality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.phy.ai_estimator import _forward_batched
+
+
+def _split_folded(folded):
+    """Split folded params into (static ints, array leaves, rebuild fn)."""
+    arrays = {k: v for k, v in folded.items() if k not in ("kh", "width")}
+    leaves, treedef = jax.tree.flatten(arrays)
+    kh, width = int(folded["kh"]), int(folded["width"])
+
+    def rebuild(vals):
+        d = dict(jax.tree.unflatten(treedef, list(vals)))
+        d["kh"] = kh
+        d["width"] = width
+        return d
+
+    return leaves, rebuild
+
+
+def gated_expert_fused(
+    idx: jax.Array,
+    valid: jax.Array,
+    x_all: jax.Array,
+    designated: jax.Array,
+    folded: dict,
+    *,
+    compute_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused compact -> folded-GEMM expert -> scatter over real views.
+
+    Args:
+      idx: ``(capacity,)`` int32 — UE index of each compact row (a slice of
+        a permutation: entries are distinct and in ``[0, n_ues)``).
+      valid: ``(capacity,)`` int32 — 1 where the row is a selected UE
+        (compute + scatter), 0 for capacity padding (identity rewrite).
+      x_all: ``(n_ues, 2, S, n_ant, n_pilot_sc)`` f32 LS-input real view of
+        the *full* batch; the kernel reads only rows named by ``idx``.
+      designated: ``(n_ues, 2, S, n_ant, n_sc)`` f32 baseline real view
+        (aliased to the output).
+      folded: pre-folded expert params (``fold_ai_params``).
+      compute_dtype: GEMM operand dtype (``None`` = f32 bitwise path,
+        ``jnp.bfloat16`` = half the MXU operand bytes, f32 accumulation).
+      interpret: run in Pallas interpret mode (CPU validation).
+
+    Returns:
+      ``(n_ues, 2, S, n_ant, n_sc)`` array aliased onto ``designated``.
+    """
+    capacity = idx.shape[0]
+    n_ues, two, n_sym, n_ant, n_p = x_all.shape
+    n_sc = designated.shape[-1]
+    if two != 2 or designated.shape[:-1] != (n_ues, 2, n_sym, n_ant):
+        raise ValueError(f"x_all {x_all.shape} vs designated {designated.shape}")
+    if valid.shape != (capacity,):
+        raise ValueError(f"valid {valid.shape} vs idx {idx.shape}")
+
+    idx = jnp.asarray(idx, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    leaves, rebuild = _split_folded(folded)
+
+    def kernel(idx_ref, valid_ref, x_ref, des_ref, *rest):
+        *leaf_refs, out_ref = rest
+        k = pl.program_id(0)
+
+        @pl.when(valid_ref[k] == 1)
+        def _compute_path():
+            # (2, S, ant, Np) channel-leading block == the batched forward's
+            # (C, W, B, H) layout with B = n_ant: same GEMM column per
+            # (antenna, subcarrier), so bitwise-equal to the dense batch.
+            fold_vals = rebuild([r[...] for r in leaf_refs])
+            out_ref[0] = _forward_batched(fold_vals, x_ref[0], compute_dtype)
+
+        @pl.when(valid_ref[k] == 0)
+        def _pad_path():
+            out_ref[...] = des_ref[...]
+
+    def x_index(k, idx_ref, valid_ref):
+        del valid_ref
+        return (idx_ref[k], 0, 0, 0, 0)
+
+    def des_index(k, idx_ref, valid_ref):
+        del valid_ref
+        return (idx_ref[k], 0, 0, 0, 0)
+
+    def const_index(shape):
+        zeros = (0,) * len(shape)
+
+        def index(k, idx_ref, valid_ref):
+            del k, idx_ref, valid_ref
+            return zeros
+
+        return index
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(capacity,),
+        in_specs=[
+            pl.BlockSpec((1, 2, n_sym, n_ant, n_p), x_index),
+            pl.BlockSpec((1, 2, n_sym, n_ant, n_sc), des_index),
+        ]
+        + [pl.BlockSpec(leaf.shape, const_index(leaf.shape)) for leaf in leaves],
+        out_specs=pl.BlockSpec((1, 2, n_sym, n_ant, n_sc), des_index),
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(designated.shape, designated.dtype),
+        input_output_aliases={3: 0},  # designated buffer -> output (zero-gap)
+        interpret=interpret,
+    )(idx, valid, x_all, designated, *leaves)

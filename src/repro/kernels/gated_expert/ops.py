@@ -1,0 +1,99 @@
+"""Public wrapper for the fused gated expert hot path.
+
+(Not jit'd at this level — ``folded`` carries static ints and the op always
+runs inside the engine's already-jitted scan body.)
+
+Handles what the raw kernel does not: complex-to-real viewing and the
+layout transposes between the engine's ``(U, ant, S, Np)`` LS input /
+``(U, ant, 1, n_sc, S)`` estimate contract and the kernel's channel-leading
+real views, plus backend dispatch — the Pallas kernel on TPU, the unfused
+jnp reference (``ref.py``) as the CPU fallback, mirroring
+``switch_scatter``'s discipline.  All the view plumbing is pure data
+movement (complex split/assemble, transposes): for kept UEs the baseline
+bytes round-trip untouched, and for computed UEs the kernel emits the same
+f32 pairs the reference assembles, so every backend is bitwise-equal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gated_expert import gated_expert as _k
+from repro.kernels.gated_expert.ref import gated_expert_apply_ref
+from repro.kernels.switch_select.ops import _use_interpret
+
+
+def gated_expert_apply(
+    idx,
+    src,
+    h_ls,
+    designated,
+    folded,
+    *,
+    compute_dtype=None,
+    backend: str = "auto",
+    interpret: bool | None = None,
+):
+    """Run the gated AI expert fused: compact -> folded GEMM -> scatter.
+
+    One kernel replaces the unfused gather / expert / ``switch_scatter``
+    triple: the compaction index vector steers the input DMA (no
+    materialized capacity-``K`` sub-batch in HBM) and the output aliases
+    the baseline buffers (the scatter is the output DMA).  Under the
+    sharded engine this runs inside ``shard_map`` on shard-local operands —
+    per-shard compaction means no collective (the distributed tests audit
+    the lowered HLO).
+
+    Args:
+      idx: ``(capacity,)`` int32 — UE index of each compact row (a slice of
+        a permutation; rows past the last selected UE name arbitrary
+        distinct non-selected UEs and are treated as padding).
+      src: ``(n_ues,)`` int32 — UE -> compact-row map; negative keeps the
+        baseline.  ``valid`` padding flags are derived as ``src[idx] >= 0``.
+      h_ls: ``(n_ues, n_ant, n_dmrs_sym, n_pilot_sc)`` complex LS input.
+      designated: ``(n_ues, n_ant, 1, n_sc, n_dmrs_sym)`` complex baseline
+        estimates (aliased through the kernel path).
+      folded: pre-folded expert params (``fold_ai_params``).
+      compute_dtype: ``None`` (f32, bitwise) or ``jnp.bfloat16`` (half the
+        GEMM operand bytes, f32 accumulation).
+      backend: ``"pallas"`` (fused kernel), ``"ref"`` (unfused jnp) or
+        ``"auto"`` — pallas on TPU, ref as the CPU fallback.
+      interpret: force Pallas interpret mode (tests); default = non-TPU.
+
+    Returns:
+      The baseline pytree with the gated expert's outputs scattered in.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return gated_expert_apply_ref(
+            idx, src, h_ls, designated, folded, compute_dtype=compute_dtype
+        )
+    if backend != "pallas":
+        raise ValueError(f"unknown gated_expert_apply backend {backend!r}")
+    if interpret is None:
+        interpret = _use_interpret()
+
+    n_ues, n_ant, n_sym, n_p = h_ls.shape
+    # LS input -> kernel real view (U, 2, S, ant, Np)
+    x_all = jnp.transpose(
+        jnp.stack([h_ls.real, h_ls.imag], axis=0).astype(jnp.float32),
+        (1, 0, 3, 2, 4),
+    )
+    # baseline (U, ant, 1, n_sc, S) -> kernel real view (U, 2, S, ant, n_sc)
+    b = designated[:, :, 0]
+    des_view = jnp.transpose(
+        jnp.stack([b.real, b.imag], axis=1).astype(jnp.float32),
+        (0, 1, 4, 2, 3),
+    )
+    valid = (jnp.take(src, idx) >= 0).astype(jnp.int32)
+    out = _k.gated_expert_fused(
+        idx, valid, x_all, des_view, folded,
+        compute_dtype=compute_dtype, interpret=interpret,
+    )
+    # undo the real view: same assembly as ai_estimate_folded's epilogue
+    h = (out[:, 0] + 1j * out[:, 1]).astype(jnp.complex64)  # (U, S, ant, sc)
+    return jnp.transpose(h, (0, 2, 3, 1))[:, :, None]  # (U, ant, 1, sc, S)

@@ -230,10 +230,20 @@ def fold_ai_params(params: dict[str, Any], width: int) -> dict[str, Any]:
     }
 
 
-def _conv_wfold(x: jax.Array, m2: jax.Array, b: jax.Array, kh: int) -> jax.Array:
+def _conv_wfold(
+    x: jax.Array,
+    m2: jax.Array,
+    b: jax.Array,
+    kh: int,
+    compute_dtype: Any = None,
+) -> jax.Array:
     """'SAME' conv on channel-leading activations via one GEMM.
 
     ``x`` (C, W, B, H); ``m2`` (O*W, kh*C*W) pre-folded tap matrices.
+    ``compute_dtype`` (e.g. ``jnp.bfloat16``) casts the GEMM *operands*
+    only; accumulation stays f32 (``preferred_element_type``), as does the
+    bias add — the MXU-style mixed-precision contract.  ``None`` keeps the
+    original f32 ``@`` bitwise.
     """
     c, width, bsz, h = x.shape
     o = m2.shape[0] // width
@@ -244,11 +254,21 @@ def _conv_wfold(x: jax.Array, m2: jax.Array, b: jax.Array, kh: int) -> jax.Array
     taps = jnp.stack(
         [xp[:, :, d : d + h] for d in range(kh)], axis=0
     )  # (kh, C*W, B, H)
-    y = m2 @ taps.reshape(kh * c * width, bsz * h)  # (O*W, B*H)
+    rhs = taps.reshape(kh * c * width, bsz * h)
+    if compute_dtype is None:
+        y = m2 @ rhs  # (O*W, B*H)
+    else:
+        y = jax.lax.dot(
+            m2.astype(compute_dtype),
+            rhs.astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        )
     return y.reshape(o, width, bsz, h) + b[:, None, None, None]
 
 
-def _forward_batched(folded: dict[str, Any], x: jax.Array) -> jax.Array:
+def _forward_batched(
+    folded: dict[str, Any], x: jax.Array, compute_dtype: Any = None
+) -> jax.Array:
     """(2, W, B, n_pilot_sc) -> (2, W, B, n_sc), channel-leading layout."""
     kh = folded["kh"]
     # baseline comb-2 interpolation along the (trailing) frequency axis
@@ -256,27 +276,38 @@ def _forward_batched(folded: dict[str, Any], x: jax.Array) -> jax.Array:
     base = jnp.stack([x, 0.5 * (x + nxt)], axis=-1).reshape(
         *x.shape[:-1], 2 * x.shape[-1]
     )
-    h = _conv_wfold(x, folded["stem_w"], folded["stem_b"], kh)
+    cd = compute_dtype
+    h = _conv_wfold(x, folded["stem_w"], folded["stem_b"], kh, cd)
     for blk in folded["res"]:
-        y = jax.nn.relu(_conv_wfold(h, blk["w1"], blk["b1"], kh))
-        y = _conv_wfold(y, blk["w2"], blk["b2"], kh)
+        y = jax.nn.relu(_conv_wfold(h, blk["w1"], blk["b1"], kh, cd))
+        y = _conv_wfold(y, blk["w2"], blk["b2"], kh, cd)
         h = h + y
-    u = _conv_wfold(h, folded["up_w"], folded["up_b"], kh)  # (2C, W, B, Np)
+    u = _conv_wfold(h, folded["up_w"], folded["up_b"], kh, cd)  # (2C,W,B,Np)
     c = u.shape[0] // 2
     u = u.reshape(2, c, *u.shape[1:])  # (2, C, W, B, Np)
     u = jnp.moveaxis(u, 0, -1).reshape(c, *u.shape[2:4], 2 * u.shape[4])
-    corr = _conv_wfold(u, folded["head_w"], folded["head_b"], kh)
+    corr = _conv_wfold(u, folded["head_w"], folded["head_b"], kh, cd)
     return base + corr
 
 
-def ai_estimate_folded(folded: dict[str, Any], h_ls: jax.Array) -> jax.Array:
+def ai_estimate_folded(
+    folded: dict[str, Any],
+    h_ls: jax.Array,
+    *,
+    compute_dtype: Any = None,
+) -> jax.Array:
     """(n_ues, n_ant, n_dmrs_sym, n_pilot_sc) LS -> (n_ues, n_ant, 1, n_sc,
-    n_dmrs_sym), with pre-folded params (see ``fold_ai_params``)."""
+    n_dmrs_sym), with pre-folded params (see ``fold_ai_params``).
+
+    ``compute_dtype=jnp.bfloat16`` runs every GEMM with bf16 operands and
+    f32 accumulation (half the weight/activation bytes through the MXU);
+    ``None`` is the bitwise f32 path.
+    """
     n_ues, n_ant, n_sym, n_p = h_ls.shape
     x = jnp.stack([h_ls.real, h_ls.imag], axis=0).astype(jnp.float32)
     # (2, U, ant, S, Np) -> channel-leading (2, W=S, B=U*ant, H=Np)
     x = jnp.transpose(x, (0, 3, 1, 2, 4)).reshape(2, n_sym, n_ues * n_ant, n_p)
-    out = _forward_batched(folded, x)  # (2, S, B, n_sc)
+    out = _forward_batched(folded, x, compute_dtype)  # (2, S, B, n_sc)
     h = (out[0] + 1j * out[1]).astype(jnp.complex64)  # (S, B, n_sc)
     h = jnp.transpose(h, (1, 2, 0)).reshape(n_ues, n_ant, -1, n_sym)
     return h[:, :, None]  # (U, ant, 1, n_sc, S)

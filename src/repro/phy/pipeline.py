@@ -488,6 +488,9 @@ class BatchedPuschPipeline:
         execution_mode: ExecutionMode = ExecutionMode.CONCURRENT,
         use_pallas_switch: bool = True,
         gated_capacity: int | None = None,
+        fused_gated: bool = False,
+        expert_dtype: str = "float32",
+        audit_nmse_threshold: float | None = None,
         rms_delay_spread_s: float = 100e-9,
     ):
         self.cfg = cfg
@@ -504,13 +507,36 @@ class BatchedPuschPipeline:
 
         from repro.phy.ai_estimator import ai_estimate_folded, fold_ai_params
 
+        if expert_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"expert_dtype {expert_dtype!r}; one of 'float32', 'bfloat16'"
+            )
+        # None keeps the f32 path bitwise-identical to pre-dtype engines
+        compute_dtype = (
+            jnp.bfloat16 if expert_dtype == "bfloat16" else None
+        )
         folded = fold_ai_params(ai_params, cfg.n_dmrs_sym)
 
         def ai_fn(_p, h_ls):
-            return ai_estimate_folded(folded, h_ls)
+            return ai_estimate_folded(
+                folded, h_ls, compute_dtype=compute_dtype
+            )
 
         def mmse_fn(_p, h_ls):
             return self._mmse_from_ls_batched(h_ls)
+
+        gated_fused_apply = None
+        if fused_gated:
+            if execution_mode is not ExecutionMode.GATED:
+                raise ValueError("fused_gated requires GATED execution")
+            from repro.kernels.gated_expert import gated_expert_apply
+
+            def gated_fused_apply(idx, src, base, h_ls):
+                return gated_expert_apply(
+                    idx, src, h_ls, base, folded,
+                    compute_dtype=compute_dtype,
+                    backend="auto" if use_pallas_switch else "ref",
+                )
 
         self.bank = ExpertBank(
             [
@@ -522,6 +548,8 @@ class BatchedPuschPipeline:
             execution_mode=execution_mode,
             use_pallas_switch=use_pallas_switch,
             gated_capacity=gated_capacity,
+            gated_fused_apply=gated_fused_apply,
+            audit_threshold=audit_nmse_threshold,
         )
 
     def _mmse_from_ls_batched(self, h_ls: jax.Array) -> jax.Array:
@@ -705,6 +733,11 @@ class BatchedPuschPipeline:
                 if out.overflow is not None
                 else jnp.zeros((n_ues,), jnp.int32)
             )
+            audit_tripped = (
+                out.audit_tripped.astype(jnp.int32)
+                if out.audit_tripped is not None
+                else jnp.zeros((n_ues,), jnp.int32)
+            )
         else:
             # methodology stage 1 (paper Fig. 3): MMSE only, AWGN injected
             # at node 2c — no switching, no AI in the loop.  ``rho`` is a
@@ -720,9 +753,11 @@ class BatchedPuschPipeline:
                 jnp.float32,
             )
             overflow = jnp.zeros((n_ues,), jnp.int32)
+            audit_tripped = jnp.zeros((n_ues,), jnp.int32)
         new_link, outputs = jax.vmap(self._ue_post)(link, pre, h_sel)
         outputs["executed_flops"] = exec_flops
         outputs["gated_overflow"] = overflow
+        outputs["audit_tripped"] = audit_tripped
         return new_link, outputs
 
     @partial(jax.jit, static_argnames=("self", "profile"))

@@ -538,6 +538,155 @@ def test_suggest_gated_capacity_quantiles():
         suggest_gated_capacity(hist, quantile=1.5)
 
 
+def test_suggest_gated_capacity_sharded_buildable():
+    """Sharded suggestions must survive ``per_shard_capacity`` validation:
+    compaction is shard-local, so the suggestion floors at one slot per
+    shard and always splits evenly (the satellite-1 regression)."""
+    from repro.core.topology import per_shard_capacity
+
+    # zero demand used to suggest 0, which a sharded engine cannot build
+    for n_shards in (2, 4):
+        cap = suggest_gated_capacity(
+            _history_with_modes(np.ones((5, 8), np.int32)), n_shards=n_shards
+        )
+        assert cap == n_shards
+        assert per_shard_capacity(cap, n_shards) == 1
+    # non-uniform demand: the worst shard sizes the whole campaign
+    modes = np.ones((4, 8), np.int32)
+    modes[:, 4:7] = 0  # shard 1 (UEs 4..7) peaks at 3; shard 0 at 0
+    cap = suggest_gated_capacity(_history_with_modes(modes), n_shards=2)
+    assert cap == 6 and per_shard_capacity(cap, 2) == 3
+    # the n_ues clamp keeps divisibility (n_ues is a shard multiple)
+    cap = suggest_gated_capacity(
+        _history_with_modes(modes), n_shards=2, headroom=10
+    )
+    assert cap == 8 and per_shard_capacity(cap, 2) == 4
+    # unsharded semantics unchanged: zero demand still suggests 0
+    assert suggest_gated_capacity(
+        _history_with_modes(np.ones((3, 4), np.int32))
+    ) == 0
+    with pytest.raises(ValueError, match="divide"):
+        suggest_gated_capacity(_history_with_modes(modes), n_shards=3)
+
+
+def test_suggest_gated_capacity_sharded_never_unbuildable():
+    """Property sweep: every (demand, quantile, headroom, shards) draw
+    yields a capacity ``per_shard_capacity`` accepts."""
+    from repro.core.topology import per_shard_capacity
+
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n_shards = int(rng.choice([1, 2, 4, 8]))
+        n_ues = n_shards * int(rng.integers(1, 4))
+        modes = rng.integers(0, 2, size=(6, n_ues)).astype(np.int32)
+        cap = suggest_gated_capacity(
+            _history_with_modes(modes),
+            quantile=float(rng.uniform(0.0, 1.0)),
+            headroom=int(rng.integers(0, 3)),
+            n_shards=n_shards,
+        )
+        assert 0 <= cap <= n_ues
+        if n_shards > 1:
+            per_shard_capacity(cap, n_shards)  # must not raise
+
+
+def test_legacy_shim_defaults_match_from_spec(legacy_engine):
+    """The deprecation shim must forward kwargs equivalently to
+    ``from_spec``: the same resolved default/fail-safe modes (from the
+    switch config, not a hard-coded 1) and bitwise-equal trajectories —
+    warning exactly once."""
+    spec = CampaignSpec(
+        path="closed_loop", scenario="good_poor_good",
+        scenario_args=POOR_ARGS, n_ues=N_UES, n_slots=6, seed=7,
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=18.0, hysteresis=2.0),),
+        # default_mode=0 makes the forwarding observable: a shim that
+        # hard-codes mode 1 diverges from from_spec here
+        switch=SwitchSpec(window_slots=2, backend="ref", default_mode=0),
+    )
+    session = ArchesSession(spec)
+    sw_cfg = spec.switch.to_config(spec.feature_names)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = ArchesRuntime(
+            closed_loop=True, engine=legacy_engine,
+            device_policy=session.device_policy, switch_config=sw_cfg,
+        )
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in dep]
+    via_spec = ArchesRuntime.from_spec(
+        spec, engine=legacy_engine, device_policy=session.device_policy
+    )
+    assert shim.default_mode == via_spec.default_mode == 0
+    assert shim.fail_safe_mode == via_spec.fail_safe_mode == 0
+    h1 = shim.run_batched(
+        SCHED, n_slots=6, n_ues=N_UES, key=jax.random.PRNGKey(7)
+    )
+    h2 = via_spec.run_batched(
+        SCHED, n_slots=6, n_ues=N_UES, key=jax.random.PRNGKey(7)
+    )
+    np.testing.assert_array_equal(h1.modes, h2.modes)
+    np.testing.assert_array_equal(h1.decisions, h2.decisions)
+    np.testing.assert_array_equal(h1.n_switches, h2.n_switches)
+    # host-loop construction keeps the historical mode-1 default
+    host = ArchesRuntime(lambda m, c, s: (c, None, {}))
+    assert host.default_mode == 1 and host.fail_safe_mode == 1
+
+
+# -- fused / bf16 bank specs ---------------------------------------------------
+
+
+def test_fused_session_matches_unfused_bitwise(legacy_params):
+    modes = np.ones((N_SLOTS, N_UES), np.int32)
+    modes[:, 0] = 0
+    mk = lambda fused: restored(CampaignSpec(
+        path="gated", scenario="good_poor_good", scenario_args=POOR_ARGS,
+        n_ues=N_UES, n_slots=N_SLOTS, seed=3,
+        modes=tuple(map(tuple, modes)),
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=1,
+                            fused=fused),
+    ))
+    plain = ArchesSession(mk(False), ai_params=legacy_params).run()
+    fused = ArchesSession(mk(True), ai_params=legacy_params).run()
+    for k in plain.kpms:
+        np.testing.assert_array_equal(plain.kpms[k], fused.kpms[k])
+    for k in plain.outputs:
+        np.testing.assert_array_equal(plain.outputs[k], fused.outputs[k])
+
+
+def test_bf16_audited_session_runs_and_records(legacy_params):
+    # The audit scores the expert output against the MMSE fail-safe, so the
+    # NMSE at a given slot is data-dependent (here ~1-10 on the poor window):
+    # a generous threshold must stay quiet, a vanishing one must trip every
+    # AI-served slot-UE.
+    modes = np.ones((6, N_UES), np.int32)
+    modes[:, 0] = 0
+    mk = lambda thr: restored(CampaignSpec(
+        path="gated", scenario="good_poor_good", scenario_args=POOR_ARGS,
+        n_ues=N_UES, n_slots=6, seed=3, modes=tuple(map(tuple, modes)),
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=1,
+                            fused=True, dtype="bfloat16",
+                            audit_nmse_threshold=thr),
+    ))
+    hist = ArchesSession(mk(100.0), ai_params=legacy_params).run()
+    assert "audit_tripped" in hist.outputs
+    assert hist.audit_tripped_slot_ues == 0  # generous threshold: quiet
+    assert hist.overflow_slot_ues == 0
+    strict = ArchesSession(mk(1e-12), ai_params=legacy_params).run()
+    assert strict.audit_tripped_slot_ues == 6  # every AI-served slot-UE
+
+
+def test_bank_spec_validates_fused_and_dtype():
+    with pytest.raises(ValueError, match="fused"):
+        ExpertBankSpec(fused=True)  # concurrent bank cannot fuse
+    with pytest.raises(ValueError, match="dtype"):
+        ExpertBankSpec(dtype="fp8")
+    with pytest.raises(ValueError, match="gated"):
+        ExpertBankSpec(audit_nmse_threshold=0.5)
+    with pytest.raises(ValueError, match="> 0"):
+        ExpertBankSpec(execution_mode="gated", audit_nmse_threshold=-1.0)
+
+
 def test_suggest_gated_capacity_closes_overflow(legacy_params):
     """An under-provisioned campaign's own telemetry suggests the capacity
     that eliminates its overflow on a rerun."""
