@@ -2,10 +2,11 @@
 
 Two checks, both against the repo's committed ``BENCH_<tag>.json``:
 
-1. **Schema compatibility** — the snapshot must parse, declare the
-   ``arches-bench-v1`` schema, and carry every key current tooling reads
-   (engine/gated/fused/bf16 rates, the campaign provenance hash, the host
-   fingerprint).  A PR that renames a payload field without migrating the
+1. **Schema compatibility** — the snapshot must parse, declare a
+   compatible schema (``arches-bench-v1``, or ``arches-bench-v2`` which
+   adds the streaming/churn section), and carry every key current tooling
+   reads (engine/gated/fused/bf16 rates, the campaign provenance hash, the
+   host fingerprint).  A PR that renames a payload field without migrating the
    committed snapshot fails here, not six PRs later when someone plots the
    trajectory.
 
@@ -34,15 +35,28 @@ DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr6.json"
 #: wall-clock regression tolerance on comparable hosts
 REGRESSION_FRAC = 0.20
 
-SCHEMA = "arches-bench-v1"
+#: the schema current tooling writes
+SCHEMA = "arches-bench-v2"
 
-#: top-level keys every v1 snapshot must carry
+#: schemas current tooling still reads: v1 snapshots predate the streaming
+#: section (BENCH_pr6.json stays valid); v2 additionally requires it
+SCHEMA_COMPAT = ("arches-bench-v1", "arches-bench-v2")
+
+#: top-level keys every snapshot must carry
 REQUIRED_KEYS = (
     "schema",
     "host",
     "slot_ues_per_s",
     "gated",
     "campaign_spec_hash",
+)
+
+#: keys the v2 ``streaming`` section must carry
+REQUIRED_STREAMING_KEYS = (
+    "zero_churn_equal",
+    "streaming_slot_ues_per_s",
+    "monolithic_slot_ues_per_s",
+    "churn_resident_slot_ues_per_s",
 )
 
 #: per-share keys inside the ``gated`` section
@@ -75,13 +89,22 @@ def _load(path: Path) -> dict | None:
 def validate_schema(payload: dict, label: str) -> list[str]:
     """Return a list of schema violations (empty == compatible)."""
     errors: list[str] = []
-    if payload.get("schema") != SCHEMA:
+    schema = payload.get("schema")
+    if schema not in SCHEMA_COMPAT:
         errors.append(
-            f"{label}: schema is {payload.get('schema')!r}, want {SCHEMA!r}"
+            f"{label}: schema is {schema!r}, want one of {SCHEMA_COMPAT}"
         )
     for key in REQUIRED_KEYS:
         if key not in payload:
             errors.append(f"{label}: missing top-level key {key!r}")
+    if schema == "arches-bench-v2":
+        streaming = payload.get("streaming")
+        if streaming is None:
+            errors.append(f"{label}: v2 snapshot missing 'streaming'")
+        else:
+            for key in REQUIRED_STREAMING_KEYS:
+                if key not in streaming:
+                    errors.append(f"{label}: streaming missing {key!r}")
     host = payload.get("host", {})
     for field in HOST_FIELDS:
         if field not in host:
@@ -120,7 +143,7 @@ def check(baseline: Path | str, candidate: Path | str | None = None) -> int:
         print(f"SCHEMA  {err}")
     if errors:
         return 1
-    print(f"schema ok: {baseline.name} ({SCHEMA})")
+    print(f"schema ok: {baseline.name} ({base.get('schema')})")
 
     if candidate is None:
         return 0

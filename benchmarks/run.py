@@ -3,11 +3,12 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
                                                 [--json BENCH_<tag>.json]
 
-``--smoke`` is the CI fast path: tiny expert training, six sections only
+``--smoke`` is the CI fast path: tiny expert training, seven sections only
 (switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
 equivalence + gated-execution contract + session-API dispatch/provenance +
-sharded-engine parity/scaling), exits non-zero on any failure.  Finishes in
-minutes where the full sweep takes an hour.
+sharded-engine parity/scaling + streaming-churn zero-churn equivalence),
+exits non-zero on any failure.  Finishes in minutes where the full sweep
+takes an hour.
 
 ``--json PATH`` additionally writes a machine-readable perf snapshot —
 slot-UEs/s, in-scan decision latency, executed-FLOPs-per-slot across AI
@@ -38,7 +39,7 @@ def _jax_backend() -> str:
 
 def _json_payload(outs: dict) -> dict:
     """Assemble the perf-trajectory snapshot from section outputs."""
-    payload: dict = {"schema": "arches-bench-v1", "time": time.strftime(
+    payload: dict = {"schema": "arches-bench-v2", "time": time.strftime(
         "%Y-%m-%dT%H:%M:%S")}
     # host fingerprint: check_snapshot only compares absolute rates when
     # these match (cross-host wall-clock deltas are meaningless)
@@ -93,6 +94,19 @@ def _json_payload(outs: dict) -> dict:
             "forced_shards": sharded["forced"]["n_shards"],
             "forced_slot_ues_per_s": sharded["forced"]["slot_ues_per_s"],
         }
+    streaming = outs.get("streaming")
+    if streaming:
+        # v2 schema: the epoch-chunked churn-campaign rates
+        payload["streaming"] = {
+            "zero_churn_equal": streaming["zero_churn_equal"],
+            "streaming_slot_ues_per_s":
+                streaming["streaming_slot_ues_per_s"],
+            "monolithic_slot_ues_per_s":
+                streaming["monolithic_slot_ues_per_s"],
+            "churn_resident_slot_ues_per_s":
+                streaming["churn_resident_slot_ues_per_s"],
+            "n_segments": streaming["n_segments"],
+        }
     return payload
 
 
@@ -121,6 +135,7 @@ def main() -> None:
         bench_resources,
         bench_session,
         bench_sharded,
+        bench_streaming,
         bench_switch,
         bench_timeseries,
         roofline,
@@ -162,6 +177,12 @@ def main() -> None:
             # a forced-8-shard CPU mesh (subprocess) for scaling numbers
             ("sharded", "Sharded multi-cell engine (smoke)",
              bench_sharded.run, {"n_slots": 10, "n_ues": 8}),
+            # raises unless a zero-churn streaming run is bitwise-equal to
+            # the monolithic session run on every leaf and a churn campaign
+            # keeps the detached-sentinel / zero-cost accounting
+            ("streaming", "Streaming churn campaigns (smoke)",
+             bench_streaming.run,
+             {"n_slots": 16, "n_ues": 4, "segment_slots": 8}),
         ]
     else:
         sections = [
@@ -187,6 +208,11 @@ def main() -> None:
              bench_sharded.run,
              {"n_slots": 16 if args.fast else 32,
               "n_ues": 8 if args.fast else 16}),
+            ("streaming", "Streaming churn campaigns",
+             bench_streaming.run,
+             {"n_slots": 24 if args.fast else 48,
+              "n_ues": 4 if args.fast else 8,
+              "segment_slots": 8}),
             (None, "Fig. 10 KPM CDFs", bench_kpm_cdfs.run, {}),
             (None, "Fig. 11 GPU resources proxy", bench_resources.run, {}),
             (None, "Roofline (from dry-run)", roofline.run,

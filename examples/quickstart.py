@@ -27,6 +27,11 @@ The demo walks the execution paths the session dispatches over:
   shard where available, degrading to one device here), with per-cell
   noise offsets and inter-cell interference coupling, and reports per-cell
   AI share and throughput.
+* ``--streaming`` — the epoch-chunked streaming driver: a ``ChurnSchedule``
+  attaches/detaches UEs at segment boundaries over a stable-id universe
+  wider than the bank; the printed history shows residency (``.`` =
+  detached) alongside the per-UE expert choices, plus the closed-loop
+  host replay through the churn boundaries.
 
 Specs serialize: every section prints its campaign's ``spec_hash`` and the
 JSON round-trip is exercised before each run (what you ran is exactly what
@@ -280,6 +285,73 @@ def multi_cell_demo(n_ues: int) -> None:
         raise SystemExit("sharded closed-loop equivalence violated")
 
 
+def streaming_demo(n_ues: int) -> None:
+    from repro.core.closed_loop import host_replay_closed_loop
+    from repro.core.streaming import ChurnSchedule
+
+    seg = N_PHASE // 2
+    n_slots = 6 * seg
+    n_ids = 2 * n_ues  # stable-id universe, twice the bank capacity
+    churn = ChurnSchedule(
+        n_ue_ids=n_ids,
+        segment_slots=seg,
+        initial=tuple(range(n_ues)),
+        events=(
+            (seg, 1, "detach"), (seg, n_ues, "attach"),
+            (2 * seg, 0, "detach"), (2 * seg, n_ues + 1, "attach"),
+            (3 * seg, n_ues, "detach"), (3 * seg, 1, "attach"),
+            (4 * seg, n_ues + 1, "detach"), (4 * seg, 0, "attach"),
+        ),
+    )
+    spec = roundtrip(CampaignSpec(
+        path="closed_loop",
+        scenario="churn_cell",
+        n_ues=n_ues,
+        n_slots=n_slots,
+        seed=7,
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=18.0, hysteresis=2.0),),
+        switch=SwitchSpec(window_slots=2),
+        churn=churn,
+    ))
+    session = ArchesSession(spec)
+    hist = session.run()
+
+    print(f"\n== streaming churn: {n_ids}-id universe on a {n_ues}-slot "
+          f"bank, {n_slots // seg} segments of {seg} slots "
+          f"[spec {spec_hash(spec)}] ==")
+    boundaries = {
+        t0: [(u, kind) for (t, u, kind) in churn.events
+             if (t + seg - 1) // seg * seg == t0]
+        for t0 in range(0, n_slots, seg)
+    }
+    for s in range(n_slots):
+        if s % seg == 0 and boundaries.get(s):
+            evs = ", ".join(f"{kind} UE{u}" for u, kind in boundaries[s])
+            print(f"--- segment boundary (slot {s}): {evs} ---")
+        row = "".join(
+            "." if m == -1 else ("A" if m == 0 else "M")
+            for m in hist.modes[s]
+        )
+        print(f"slot {s:3d} per-id experts: {row}  "
+              f"(resident {int(hist.attached[s].sum())}/{n_ids})")
+
+    feats = np.stack(
+        [hist.kpms[n] for n in spec.feature_names], axis=-1
+    ).astype(np.float32)
+    replay = host_replay_closed_loop(
+        session.host_policies[0], feats,
+        spec.switch.to_config(spec.feature_names),
+        attached=hist.attached,
+    )
+    match = np.array_equal(hist.modes, replay["active_mode"])
+    print(f"device == host replay through churn boundaries: "
+          f"{'yes (bitwise)' if match else 'NO'}; "
+          f"switches/id: {hist.n_switches.tolist()}")
+    if not match:
+        raise SystemExit("streaming closed-loop equivalence violated")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-ues", type=int, default=4)
@@ -291,6 +363,8 @@ def main():
                     help="demo per-UE scenario + policy heterogeneity")
     ap.add_argument("--multi-cell", action="store_true",
                     help="demo the sharded multi-cell topology (4 cells)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="demo the epoch-chunked streaming driver (churn)")
     args = ap.parse_args()
 
     print("registered scenarios:", ", ".join(scenario_names()), "\n")
@@ -303,6 +377,8 @@ def main():
         heterogeneous_demo(max(args.n_ues, 4))
     if args.multi_cell:
         multi_cell_demo(max(args.n_ues, 8))
+    if args.streaming:
+        streaming_demo(max(args.n_ues, 2))
 
 
 if __name__ == "__main__":

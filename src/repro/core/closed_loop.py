@@ -326,6 +326,7 @@ def host_replay_closed_loop(
     cfg: SwitchConfig,
     *,
     policy_idx=None,
+    attached: np.ndarray | None = None,
 ) -> dict[str, np.ndarray]:
     """Replay the closed loop on host, slot by slot, per UE.
 
@@ -341,6 +342,16 @@ def host_replay_closed_loop(
     passing a *sequence* of host policies plus ``policy_idx`` — the same
     ``(n_ues,)`` table assignment the device ran; UE ``u`` is replayed
     through ``host_policy[policy_idx[u]]``.
+
+    Streaming (churn) campaigns replay by passing ``attached (S, U)`` — the
+    history's residency leaf.  While detached a UE is skipped entirely (no
+    ring push, no decision, no boundary transition) and its history entries
+    carry the ``-1`` sentinel; at every (re)attach boundary the UE
+    cold-starts exactly like the device admission pass: fresh ``KPMRing``,
+    register and active mode back at ``default_mode``, hysteresis streak
+    cleared.  No stale pre-detach telemetry can leak into the first
+    post-attach decision — the churn-boundary tests pin this at ring,
+    ``DeviceSwitchState`` and host-replay layers.
 
     Returns ``{"active_mode", "raw_decision", "pending_mode", "n_switches"}``
     with ``(S, U)`` int arrays (``n_switches``: ``(U,)``).
@@ -374,6 +385,13 @@ def host_replay_closed_loop(
             )
         policy_for_ue = [host_policy] * n_ues
 
+    if attached is not None:
+        attached = np.asarray(attached, bool)
+        if attached.shape != (n_slots, n_ues):
+            raise ValueError(
+                f"attached {attached.shape} vs features {(n_slots, n_ues)}"
+            )
+
     rings = [ring_init(cfg.window_slots, n_feat) for _ in range(n_ues)]
     active = [cfg.default_mode] * n_ues
     pending = [cfg.default_mode] * n_ues
@@ -385,6 +403,22 @@ def host_replay_closed_loop(
 
     for s in range(n_slots):
         for u in range(n_ues):
+            if attached is not None:
+                if not attached[s, u]:
+                    # detached: no telemetry, no decision, no boundary —
+                    # the streaming history's sentinel marks the gap
+                    active_hist[s, u] = -1
+                    raw_hist[s, u] = -1
+                    pending_hist[s, u] = -1
+                    continue
+                if s == 0 or not attached[s - 1, u]:
+                    # (re)attach cold start, mirroring the device
+                    # admission pass: fresh ring, default register,
+                    # cleared hysteresis streak
+                    rings[u] = ring_init(cfg.window_slots, n_feat)
+                    active[u] = cfg.default_mode
+                    pending[u] = cfg.default_mode
+                    streak[u] = 0
             active_hist[s, u] = active[u]
             rings[u] = ring_push(rings[u], jnp.asarray(features[s, u]))
             window = ring_window_mean(rings[u], cfg.window_slots)

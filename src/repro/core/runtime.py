@@ -72,6 +72,10 @@ class BatchedRunHistory:
     # gated capacity the campaign actually provisioned (auto-capacity runs
     # record the chosen K here; None == not a capacity-provisioned run)
     provisioned_capacity: int | None = None
+    # streaming extras (epoch-chunked churn campaigns only) — the UE axis
+    # is then the *stable-id* axis, which may exceed the bank capacity:
+    attached: np.ndarray | None = None  # (S, U) bool — residency per slot
+    bank_slot: np.ndarray | None = None  # (S, U) int32 — serving slot, -1 off
 
     @classmethod
     def from_trajectory(
@@ -165,12 +169,19 @@ class BatchedRunHistory:
         """Fraction of slot-UEs actually *served* by the designated (AI)
         expert — capacity-overflow and audit-tripped slot-UEs fell back to
         the fail-safe expert and do not count, keeping this consistent with
-        the served-by accounting."""
+        the served-by accounting.
+
+        Streaming histories reduce over *resident* slot-UEs only: detached
+        entries (mode sentinel ``-1``) are neither served nor offered
+        service, so they belong in neither numerator nor denominator."""
         served = self.modes == 0
         if "gated_overflow" in self.outputs:
             served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
         if "audit_tripped" in self.outputs:
             served = served & (np.asarray(self.outputs["audit_tripped"]) == 0)
+        if self.attached is not None:
+            att = np.asarray(self.attached, bool)
+            return float(served[att].mean()) if att.any() else 0.0
         return float(np.mean(served))
 
     def executed_flops_per_slot(self) -> np.ndarray:
@@ -194,6 +205,12 @@ class BatchedRunHistory:
         if "audit_tripped" not in self.outputs:
             return 0
         return int(np.asarray(self.outputs["audit_tripped"]).sum())
+
+    def resident_ues_per_slot(self) -> np.ndarray:
+        """Per-slot resident UE count ((S,) int64; full bank if no churn)."""
+        if self.attached is None:
+            return np.full(self.n_slots, self.n_ues, np.int64)
+        return np.asarray(self.attached, bool).sum(axis=1)
 
     def kpm_series(self, name: str, ue: int = 0) -> np.ndarray:
         return self.kpms[name][:, ue]
@@ -228,6 +245,13 @@ class BatchedRunHistory:
         served = self.modes == 0
         if "gated_overflow" in self.outputs:
             served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
+        if self.attached is not None:
+            att = np.asarray(self.attached, bool)
+            return np.asarray([
+                served[:, cells == c][att[:, cells == c]].mean()
+                if att[:, cells == c].any() else 0.0
+                for c in range(self.n_cells)
+            ])
         return np.asarray([
             served[:, cells == c].mean() for c in range(self.n_cells)
         ])
@@ -302,6 +326,13 @@ def suggest_gated_capacity(
     suggests a larger capacity than the one it ran with, not the cap it was
     stuck at.
 
+    Streaming (churn) histories carry an ``attached`` residency leaf; demand
+    then counts only *resident* slot-UEs — a detached UE's declared mode
+    plan claims no gated capacity, so a churn campaign is sized from the
+    concurrent resident demand rather than the full stable-id axis (which
+    may be far wider than the bank and would over-provision the gated
+    sub-batch).
+
     ``quantile`` trades provisioned FLOPs against overflow risk: ``1.0``
     (default) covers the peak demand observed (a rerun of the same
     trajectory overflows zero slot-UEs); ``0.95`` sheds the top 5% of
@@ -323,10 +354,13 @@ def suggest_gated_capacity(
         raise ValueError(
             f"n_shards={n_shards} does not divide n_ues={n_ues}"
         )
+    demand = modes == 0
+    if history.attached is not None:
+        demand = demand & np.asarray(history.attached, bool)
     per = n_ues // n_shards
     cap_shard = max(
         int(np.ceil(np.quantile(
-            (modes[:, s * per:(s + 1) * per] == 0).sum(axis=1), quantile
+            demand[:, s * per:(s + 1) * per].sum(axis=1), quantile
         )))
         for s in range(n_shards)
     ) + int(headroom)

@@ -59,6 +59,7 @@ from repro.core.runtime import (
     BatchedRunHistory,
     suggest_gated_capacity,
 )
+from repro.core.streaming import ChurnSchedule
 from repro.core.telemetry import SELECTED_KPMS
 from repro.core.topology import CellTopology, TopologySpec, per_shard_capacity
 
@@ -235,6 +236,12 @@ class CampaignSpec:
     methodology path (it rides the UE axis, so ``n_ues == len(rho)``).
     ``topology`` (a ``TopologySpec`` or its dict form) shards the campaign
     as a multi-cell layout over the UE device mesh.
+
+    ``churn`` (a ``repro.core.streaming.ChurnSchedule`` or its dict form)
+    turns the campaign into an epoch-chunked *streaming* run: ``n_ues``
+    becomes the bank capacity, the UE axis of the history becomes the
+    schedule's stable-id universe, and ``run()`` dispatches to
+    ``ArchesSession.run_streaming``.
     """
 
     path: str = "batched"
@@ -253,6 +260,8 @@ class CampaignSpec:
     rho: tuple | None = None
     # multi-cell sharded layout (None == single cell on one device)
     topology: TopologySpec | None = None
+    # attach/detach schedule (None == monolithic fixed-grid campaign)
+    churn: ChurnSchedule | None = None
 
     def __post_init__(self):
         # normalize an enum member to its JSON-stable string value
@@ -262,6 +271,12 @@ class CampaignSpec:
         ):
             object.__setattr__(
                 self, "topology", TopologySpec(**dict(self.topology))
+            )
+        if self.churn is not None and not isinstance(
+            self.churn, ChurnSchedule
+        ):
+            object.__setattr__(
+                self, "churn", ChurnSchedule(**dict(self.churn))
             )
         for name in ("scenario_args", "policies", "feature_names"):
             object.__setattr__(self, name, _tuplify(getattr(self, name)))
@@ -327,6 +342,34 @@ class CampaignSpec:
                     f"topology n_cells={self.topology.n_cells} does not "
                     f"divide n_ues={self.n_ues}"
                 )
+        if self.churn is not None:
+            if path not in (
+                ExecutionPath.BATCHED,
+                ExecutionPath.GATED,
+                ExecutionPath.CLOSED_LOOP,
+            ):
+                raise ValueError(
+                    f"churn campaigns stream the batched scan; "
+                    f"path={self.path!r} has no segmented form (the host "
+                    "loop serves one pinned UE, the perturbed sweep has no "
+                    "notion of churn)"
+                )
+            if self.policy_assignment is not None:
+                raise ValueError(
+                    "policy_assignment is bank-slot-indexed; a churn "
+                    "campaign re-packs bank slots, so per-UE policy "
+                    "heterogeneity under churn is not supported — declare "
+                    "one shared policy"
+                )
+            # capacity/divisibility/consistency all fail at spec-compile
+            # time, never as a scan shape error mid-campaign
+            self.churn.validate(
+                self.n_slots,
+                self.n_ues,
+                n_cells=(
+                    1 if self.topology is None else self.topology.n_cells
+                ),
+            )
 
     # -- derived views --------------------------------------------------------
 
@@ -354,6 +397,10 @@ class CampaignSpec:
             d["topology"], TopologySpec
         ):
             d["topology"] = TopologySpec(**d["topology"])
+        if d.get("churn") is not None and not isinstance(
+            d["churn"], ChurnSchedule
+        ):
+            d["churn"] = ChurnSchedule(**d["churn"])
         if "policies" in d:
             d["policies"] = tuple(
                 p if isinstance(p, PolicySpec) else PolicySpec(**p)
@@ -416,8 +463,14 @@ class ArchesSession:
         self._validate()
         self.cfg = SlotConfig(n_prb=spec.n_prb)
         scenario = get_scenario(spec.scenario)
+        # streaming campaigns instantiate per-UE scenarios over the
+        # *stable-id* universe: channel conditions follow the UE identity,
+        # not the bank slot it happens to be packed into
+        n_scenario_ues = (
+            spec.churn.n_ue_ids if spec.churn is not None else spec.n_ues
+        )
         self.schedule = scenario.schedule(
-            n_ues=spec.n_ues if scenario.per_ue else None,
+            n_ues=n_scenario_ues if scenario.per_ue else None,
             **spec.scenario_kwargs,
         )
         self._ai_params = ai_params
@@ -721,6 +774,8 @@ class ArchesSession:
         """
         if auto_capacity:
             return self._run_auto_capacity()
+        if self.spec.churn is not None:
+            return self.run_streaming()
         runner = {
             ExecutionPath.HOST: self._run_host,
             ExecutionPath.BATCHED: self._run_open_loop,
@@ -740,17 +795,29 @@ class ArchesSession:
                 f"{self.bank_spec.execution_mode!r}"
             )
         if self.path in (ExecutionPath.GATED, ExecutionPath.BATCHED):
-            # open loop: demand is the declared plan — no pre-pass needed
+            # open loop: demand is the declared plan — no pre-pass needed.
+            # A churn campaign's plan lives on the stable-id axis and only
+            # *resident* slot-UEs claim capacity: the residency leaf rides
+            # the demand history so suggest_gated_capacity counts resident
+            # demand, not the (possibly much wider) id universe.
             from repro.phy.pipeline import normalize_modes
 
+            n_axis = (
+                spec.churn.n_ue_ids if spec.churn is not None else spec.n_ues
+            )
             demand_hist = BatchedRunHistory(
                 modes=np.asarray(
                     normalize_modes(
                         np.asarray(spec.modes, np.int32),
-                        spec.n_slots, spec.n_ues,
+                        spec.n_slots, n_axis,
                     )
                 ),
                 kpms={}, outputs={},
+                attached=(
+                    None
+                    if spec.churn is None
+                    else spec.churn.residency(spec.n_slots)
+                ),
             )
         elif self.path is ExecutionPath.CLOSED_LOOP:
             # pre-pass at full capacity (overflow impossible), then size
@@ -772,20 +839,72 @@ class ArchesSession:
         n_shards = (
             1 if self.cell_topology is None else self.cell_topology.n_shards
         )
-        # compaction is shard-local: provisioning covers the worst *shard's*
-        # peak demand (a shard-local spike overflows even when the
-        # campaign-wide count would fit), with >= 1 slot per shard
-        cap = max(
-            suggest_gated_capacity(demand_hist, n_shards=n_shards),
-            n_shards,
-        )
+        if spec.churn is not None:
+            # streaming: the demand axis is the stable-id universe, whose
+            # width need not split across bank shards — size from the
+            # campaign-wide *resident* demand, round up to a
+            # per-shard-equal split and clip to the bank.  A shard-local
+            # spike beyond its split overflows to the fail-safe expert,
+            # the gated path's standing safe degradation.
+            cap = suggest_gated_capacity(demand_hist)
+            cap = min(
+                max(-(-cap // n_shards), 1) * n_shards, spec.n_ues
+            )
+        else:
+            # compaction is shard-local: provisioning covers the worst
+            # *shard's* peak demand (a shard-local spike overflows even
+            # when the campaign-wide count would fit), with >= 1 slot per
+            # shard
+            cap = max(
+                suggest_gated_capacity(demand_hist, n_shards=n_shards),
+                n_shards,
+            )
         self._engine = self._build_engine(cap)
-        runner = (
-            self._run_closed_loop
-            if self.path is ExecutionPath.CLOSED_LOOP
-            else self._run_open_loop
-        )
+        if spec.churn is not None:
+            runner = self.run_streaming
+        elif self.path is ExecutionPath.CLOSED_LOOP:
+            runner = self._run_closed_loop
+        else:
+            runner = self._run_open_loop
         return dataclasses.replace(runner(), provisioned_capacity=cap)
+
+    def run_streaming(self, churn=None) -> BatchedRunHistory:
+        """Epoch-chunked streaming campaign: attach/detach under churn.
+
+        Executes the compiled scan in fixed-length segments over the
+        ``n_ues``-slot bank with a host-side admission pass at segment
+        boundaries (``repro.core.streaming``).  ``churn`` overrides the
+        spec's schedule for this run (a ``ChurnSchedule`` or its dict
+        form); with a different schedule the campaign is re-validated and
+        re-instantiated against it while reusing this session's compiled
+        components (AI params, engine, trained policies) — the compiled
+        segment program depends only on shapes, not on the schedule.
+
+        Returns a ``BatchedRunHistory`` on the *stable-id* axis: detached
+        slot-UEs carry the ``-1`` mode sentinel and zeroed KPMs/outputs,
+        and the ``attached`` / ``bank_slot`` leaves record residency and
+        the serving bank slot per (slot, id).
+        """
+        from repro.core import streaming
+
+        if churn is not None:
+            if not isinstance(churn, streaming.ChurnSchedule):
+                churn = streaming.ChurnSchedule(**dict(churn))
+            if churn != self.spec.churn:
+                spec = dataclasses.replace(self.spec, churn=churn)
+                fresh = ArchesSession(
+                    spec,
+                    ai_params=self._ai_params,
+                    host_policies=self._host_policies,
+                    engine=self._engine,
+                )
+                return streaming.run_streaming(fresh)
+        if self.spec.churn is None:
+            raise ValueError(
+                "run_streaming needs a ChurnSchedule: set spec.churn or "
+                "pass churn=..."
+            )
+        return streaming.run_streaming(self)
 
     def _run_host(self) -> BatchedRunHistory:
         from repro.core.dapp import DApp, connect_dapp

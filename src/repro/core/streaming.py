@@ -1,0 +1,493 @@
+"""Epoch-chunked streaming campaigns: UE attach/detach under churn.
+
+Every execution path in the repo compiles a fixed ``(n_slots, n_ues)`` grid;
+a live gNB serves a *churning* population.  This module closes that gap with
+the ROADMAP's streaming driver: the compiled scan executes in fixed-length
+**segments** over a max-capacity UE *bank* (``CampaignSpec.n_ues`` bank
+slots), an **active mask** rides the scan so detached bank slots are masked
+out of KPM windows, throughput, executed-FLOPs and gated compaction demand,
+and a host-side **admission pass** at each segment boundary re-packs the
+resident UE set into bank slots (stable partition — the same discipline as
+the gated compaction path — cell-block-aligned under a sharded topology).
+
+The correctness currency is the repo's standing one, extended to churn:
+
+* **identity is the stable UE id, not the bank slot** — per-UE PRNG streams
+  derive from ``fold_in(key, ue_id)`` and per-slot keys fold the *global*
+  slot index (the scan carry starts at the segment's ``slot0``), so a
+  resident UE's trajectory is bitwise-identical whether it was re-packed
+  zero or five times;
+* **a zero-churn segmented run is bitwise-equal to the monolithic run** —
+  with every bank slot attached the mask selects are identities and the
+  boundary re-pack is the identity gather;
+* **detach discards, attach cold-starts** — a reattached UE gets fresh
+  ``DeviceLinkState`` / ``DeviceSwitchState`` rows at the boundary, so no
+  stale telemetry leaks into its first post-attach decision.
+
+``ChurnSchedule`` is the declarative (JSON-round-trippable) form, hashed
+into ``CampaignSpec`` like ``TopologySpec``; ``run_streaming`` is the
+driver ``ArchesSession.run_streaming`` dispatches to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EVENT_KINDS = ("attach", "detach")
+
+#: closed-loop trajectory leaves that are not campaign outputs
+_CLOSED_EXTRAS = ("active_mode", "raw_decision", "pending_mode", "kpms")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """Declarative attach/detach schedule over a stable UE-id universe.
+
+    ``n_ue_ids`` sizes the id universe (ids ``0..n_ue_ids-1`` — history and
+    PRNG identity live on this axis; it may exceed the bank capacity as
+    long as concurrent residency never does).  ``segment_slots`` is the
+    epoch length: the compiled scan runs in segments of this many slots and
+    churn takes effect only at segment boundaries — an event at slot ``t``
+    becomes effective at the first segment start ``>= t`` (events whose
+    boundary lies past the campaign horizon never take effect).
+
+    ``initial`` lists the ids attached at slot 0; ``events`` is a tuple of
+    ``(slot, ue_id, "attach" | "detach")`` triples.  Attaching an attached
+    id or detaching an absent one is a validation error (the admission pass
+    is declarative, not idempotent), as is residency exceeding the bank
+    capacity — all surfaced at spec time, never as a scan-shape error.
+    """
+
+    n_ue_ids: int
+    segment_slots: int
+    initial: tuple = ()
+    events: tuple = ()
+
+    def __post_init__(self):
+        if self.n_ue_ids < 1:
+            raise ValueError(f"n_ue_ids {self.n_ue_ids} must be >= 1")
+        if self.segment_slots < 1:
+            raise ValueError(
+                f"segment_slots {self.segment_slots} must be >= 1"
+            )
+        initial = tuple(int(u) for u in self.initial)
+        if len(set(initial)) != len(initial):
+            raise ValueError(f"initial {initial} repeats UE ids")
+        object.__setattr__(self, "initial", initial)
+        events = []
+        for ev in self.events:
+            slot, ue, kind = ev
+            if str(kind) not in _EVENT_KINDS:
+                raise ValueError(
+                    f"event kind {kind!r}; one of {_EVENT_KINDS}"
+                )
+            if int(slot) < 0:
+                raise ValueError(f"event slot {slot} must be >= 0")
+            events.append((int(slot), int(ue), str(kind)))
+        object.__setattr__(self, "events", tuple(events))
+        for u in self.initial + tuple(u for _, u, _ in self.events):
+            if not 0 <= u < self.n_ue_ids:
+                raise ValueError(
+                    f"UE id {u} outside [0, {self.n_ue_ids})"
+                )
+
+    def residency(self, n_slots: int) -> np.ndarray:
+        """Per-slot attachment matrix ``(n_slots, n_ue_ids)`` (bool).
+
+        Piecewise constant per segment by construction.  Raises on an
+        inconsistent event stream (attach-while-attached /
+        detach-while-absent among the events that take effect within the
+        horizon).
+        """
+        seg = self.segment_slots
+        if n_slots < 1:
+            raise ValueError(f"n_slots {n_slots} must be >= 1")
+        if n_slots % seg:
+            raise ValueError(
+                f"segment_slots={seg} does not divide n_slots={n_slots}: "
+                "the streaming scan compiles one fixed segment length"
+            )
+        attached = np.zeros(self.n_ue_ids, bool)
+        attached[list(self.initial)] = True
+        by_boundary: dict[int, list] = {}
+        for slot, ue, kind in self.events:
+            eff = ((slot + seg - 1) // seg) * seg
+            if eff >= n_slots:
+                continue  # boundary past the horizon: never effective
+            by_boundary.setdefault(eff, []).append((slot, ue, kind))
+        out = np.zeros((n_slots, self.n_ue_ids), bool)
+        for t0 in range(0, n_slots, seg):
+            for slot, ue, kind in by_boundary.get(t0, ()):
+                if kind == "attach":
+                    if attached[ue]:
+                        raise ValueError(
+                            f"attach of UE {ue} at slot {slot}: already "
+                            "attached at its effective boundary "
+                            f"(segment start {t0})"
+                        )
+                    attached[ue] = True
+                else:
+                    if not attached[ue]:
+                        raise ValueError(
+                            f"detach of UE {ue} at slot {slot}: not "
+                            "attached at its effective boundary "
+                            f"(segment start {t0})"
+                        )
+                    attached[ue] = False
+            out[t0:t0 + seg] = attached
+        return out
+
+    def validate(
+        self, n_slots: int, capacity: int, *, n_cells: int = 1
+    ) -> np.ndarray:
+        """Check the schedule against a campaign shape; return residency.
+
+        ``capacity`` is the bank width (``CampaignSpec.n_ues``).  Under a
+        multi-cell topology the bank is partitioned into ``n_cells`` equal
+        contiguous blocks and each id's home cell is
+        ``ue_id // (n_ue_ids / n_cells)`` — per-cell residency must fit the
+        cell's block so the admission pass can stay cell-block-aligned
+        (which is what keeps re-packing free of cross-shard movement).
+        """
+        res = self.residency(n_slots)
+        if n_cells < 1:
+            raise ValueError(f"n_cells {n_cells} must be >= 1")
+        if n_cells == 1:
+            worst = int(res.sum(axis=1).max(initial=0))
+            if worst > capacity:
+                raise ValueError(
+                    f"churn residency peaks at {worst} UEs but the bank "
+                    f"holds {capacity}: raise n_ues or thin the schedule"
+                )
+            return res
+        if self.n_ue_ids % n_cells:
+            raise ValueError(
+                f"n_cells={n_cells} does not divide n_ue_ids="
+                f"{self.n_ue_ids}: ids map to home cells in equal blocks"
+            )
+        if capacity % n_cells:
+            raise ValueError(
+                f"n_cells={n_cells} does not divide the bank capacity "
+                f"{capacity}"
+            )
+        block = capacity // n_cells
+        cells = home_cells(self.n_ue_ids, n_cells)
+        for c in range(n_cells):
+            worst = int(res[:, cells == c].sum(axis=1).max(initial=0))
+            if worst > block:
+                raise ValueError(
+                    f"cell {c} residency peaks at {worst} UEs but its "
+                    f"bank block holds {block}"
+                )
+        return res
+
+
+def home_cells(n_ue_ids: int, n_cells: int) -> np.ndarray:
+    """Stable-id -> home-cell map ((n_ue_ids,) int32, contiguous blocks)."""
+    return (np.arange(n_ue_ids) // (n_ue_ids // n_cells)).astype(np.int32)
+
+
+def repack_bank(
+    prev_occupant: np.ndarray,
+    resident: np.ndarray,
+    *,
+    n_cells: int = 1,
+) -> np.ndarray:
+    """Admission pass: stable-partition the resident set into bank slots.
+
+    ``prev_occupant (B,)`` holds the previous segment's occupant id per
+    bank slot (-1 empty); ``resident (n_ue_ids,)`` is the new segment's
+    attachment vector.  Surviving occupants compact to the front of their
+    (cell-block) slot range *preserving pack order* — the same stable
+    partition the gated compaction path uses — and newly attached ids
+    append in ascending id order; remaining slots are empty (-1).
+
+    Deterministic, so the whole occupancy timeline is a pure function of
+    the ``ChurnSchedule``.
+    """
+    prev_occupant = np.asarray(prev_occupant)
+    resident = np.asarray(resident, bool)
+    capacity = prev_occupant.shape[0]
+    if capacity % n_cells:
+        raise ValueError(
+            f"n_cells={n_cells} does not divide capacity={capacity}"
+        )
+    cells = home_cells(resident.shape[0], n_cells)
+    block = capacity // n_cells
+    occ = np.full(capacity, -1, prev_occupant.dtype)
+    for c in range(n_cells):
+        lo = c * block
+        prev_block = [int(u) for u in prev_occupant[lo:lo + block] if u >= 0]
+        survivors = [u for u in prev_block if resident[u]]
+        newcomers = sorted(
+            int(u) for u in np.nonzero(resident & (cells == c))[0]
+            if u not in set(prev_block)
+        )
+        packed = survivors + newcomers
+        if len(packed) > block:
+            raise ValueError(
+                f"cell {c}: {len(packed)} resident UEs for a {block}-slot "
+                "bank block (validate the churn schedule first)"
+            )
+        occ[lo:lo + len(packed)] = packed
+    return occ
+
+
+def gather_permutation(
+    prev_occupant: np.ndarray, new_occupant: np.ndarray
+) -> np.ndarray:
+    """Per-bank-slot source index into the previous bank (-1 == cold start).
+
+    Slot ``b``'s new occupant either survived from previous slot
+    ``perm[b]`` (its device state rows are gathered from there) or is a
+    fresh attach / empty slot (``perm[b] == -1`` — cold-init rows).
+    """
+    prev_pos = {int(u): j for j, u in enumerate(prev_occupant) if u >= 0}
+    return np.asarray(
+        [
+            prev_pos.get(int(u), -1) if u >= 0 else -1
+            for u in new_occupant
+        ],
+        np.int64,
+    )
+
+
+def gather_state_rows(state, perm: np.ndarray, cold_state):
+    """Re-pack a per-UE device-state pytree along its leading bank axis.
+
+    Survivor rows gather from their previous slot; ``perm < 0`` rows take
+    the cold-start value from ``cold_state``.  An identity permutation with
+    no cold rows returns every leaf value bitwise-unchanged (the zero-churn
+    contract rides on this).
+    """
+    take = jnp.asarray(np.maximum(perm, 0))
+    cold = jnp.asarray(perm < 0)
+
+    def one(prev_leaf, cold_leaf):
+        g = jnp.take(prev_leaf, take, axis=0)
+        m = cold.reshape(cold.shape + (1,) * (g.ndim - 1))
+        return jnp.where(m, cold_leaf, g)
+
+    return jax.tree.map(one, state, cold_state)
+
+
+def _scatter_segment(full, seg_arr, t0, ids, slots):
+    """full[t0:t0+seg, ids] = seg_arr[:, slots] (host-side assembly)."""
+    full[t0:t0 + seg_arr.shape[0], ids] = np.asarray(seg_arr)[:, slots]
+
+
+def run_streaming(session) -> "object":
+    """Execute an epoch-chunked streaming campaign; one compiled segment.
+
+    The driver: validate churn -> resolve the scenario over the *stable-id*
+    axis -> loop segments (admission re-pack, state gather/cold-init,
+    per-occupant param/mode/key gather, one cached scan call with the
+    active mask and the global ``slot0``) -> assemble the full
+    ``BatchedRunHistory`` on the id axis (detached slot-UEs carry the
+    ``-1`` mode sentinel, zeroed KPMs/outputs, ``attached=False`` and
+    ``bank_slot=-1``).
+
+    Because segment shapes are fixed and ``slot0``/``active`` are traced,
+    every segment reuses one compiled program per execution path.
+    """
+    from repro.core.closed_loop import init_device_switch
+    from repro.core.runtime import BatchedRunHistory
+    from repro.core.session import ExecutionPath
+    from repro.core.telemetry import flatten_kpm_sources
+    from repro.phy.channel import broadcast_params_to_ues
+    from repro.phy.pipeline import (
+        init_device_link,
+        normalize_modes,
+        resolve_schedule,
+    )
+
+    spec = session.spec
+    churn = spec.churn
+    if churn is None:
+        raise ValueError("run_streaming needs spec.churn (a ChurnSchedule)")
+    path = spec.execution_path
+    if path not in (
+        ExecutionPath.BATCHED, ExecutionPath.GATED, ExecutionPath.CLOSED_LOOP
+    ):
+        raise ValueError(
+            f"streaming supports batched/gated/closed_loop, not "
+            f"{spec.path!r} (the host loop serves one pinned UE and the "
+            "perturbed sweep has no notion of churn)"
+        )
+    closed = path is ExecutionPath.CLOSED_LOOP
+
+    topo = session.cell_topology
+    n_cells = 1 if topo is None else topo.n_cells
+    capacity = spec.n_ues  # bank width == the compiled batch width
+    n_ids, n_slots = churn.n_ue_ids, spec.n_slots
+    seg = churn.segment_slots
+    res = churn.validate(n_slots, capacity, n_cells=n_cells)
+
+    engine = session.engine
+    profile, params = resolve_schedule(
+        engine.cfg, session.schedule, n_slots, n_ids
+    )
+    per_ue_params = jnp.ndim(params.noise_var) == 2
+    if topo is not None and not per_ue_params:
+        params = broadcast_params_to_ues(params, n_ids)
+        per_ue_params = True
+
+    key = jax.random.PRNGKey(spec.seed)
+    id_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(
+        jnp.arange(n_ids)
+    )
+
+    modes_grid = None
+    sw_cfg = policy = None
+    if closed:
+        sw_cfg = spec.switch.to_config(spec.feature_names)
+        policy = session.device_policy
+    else:
+        modes_grid = np.asarray(
+            normalize_modes(
+                np.asarray(spec.modes, np.int32), n_slots, n_ids
+            )
+        )
+
+    if topo is not None:
+        from repro.core.topology import (
+            _cached_jit,
+            streaming_closed_loop_fn,
+            streaming_open_loop_fn,
+        )
+
+        if closed:
+            scan_fn = _cached_jit(
+                topo,
+                (engine, "streaming_closed", profile, sw_cfg,
+                 jax.tree.structure(policy)),
+                lambda: streaming_closed_loop_fn(
+                    engine, topo, profile, sw_cfg, policy
+                ),
+            )
+        else:
+            scan_fn = _cached_jit(
+                topo, (engine, "streaming_open", profile),
+                lambda: streaming_open_loop_fn(engine, topo, profile),
+            )
+        cell_of_slot = jnp.asarray(topo.cell_of_ue)
+        cell_params = topo.cell_params
+
+    # bank state
+    occupant = np.full(capacity, -1, np.int64)
+    link = init_device_link(capacity)
+    sw = (
+        init_device_switch(capacity, len(sw_cfg.feature_names), sw_cfg)
+        if closed
+        else None
+    )
+
+    # full-campaign accumulators on the stable-id axis
+    modes_full = np.full((n_slots, n_ids), -1, np.int32)
+    bank_slot_full = np.full((n_slots, n_ids), -1, np.int32)
+    decisions_full = (
+        np.full((n_slots, n_ids), -1, np.int32) if closed else None
+    )
+    n_switches_id = np.zeros(n_ids, np.int32) if closed else None
+    kpms_full: dict[str, np.ndarray] = {}
+    outputs_full: dict[str, np.ndarray] = {}
+
+    for t0 in range(0, n_slots, seg):
+        new_occupant = repack_bank(occupant, res[t0], n_cells=n_cells)
+        perm = gather_permutation(occupant, new_occupant)
+        link = gather_state_rows(link, perm, init_device_link(capacity))
+        if closed:
+            sw = gather_state_rows(
+                sw, perm,
+                init_device_switch(
+                    capacity, len(sw_cfg.feature_names), sw_cfg
+                ),
+            )
+            nsw_base = np.asarray(sw.n_switches)
+        occupant = new_occupant
+        occ_c = np.maximum(occupant, 0)
+        occupied = occupant >= 0
+        slots_b = np.nonzero(occupied)[0]
+        ids_b = occupant[slots_b]
+
+        keys_seg = jnp.take(id_keys, jnp.asarray(occ_c), axis=0)
+        params_seg = jax.tree.map(
+            (lambda x: jnp.take(x[t0:t0 + seg], jnp.asarray(occ_c), axis=1))
+            if per_ue_params
+            else (lambda x: x[t0:t0 + seg]),
+            params,
+        )
+        active = jnp.asarray(occupied)
+        slot0 = jnp.int32(t0)
+
+        if closed:
+            if topo is None:
+                link, sw, traj = engine._run_closed_scan(
+                    profile, sw_cfg, link, sw, keys_seg, params_seg,
+                    policy, slot0=slot0, active=active,
+                )
+            else:
+                link, sw, traj = scan_fn(
+                    link, sw, keys_seg, params_seg, policy,
+                    cell_of_slot, cell_params, slot0, active,
+                )
+        else:
+            modes_seg = jnp.asarray(modes_grid[t0:t0 + seg][:, occ_c])
+            if topo is None:
+                link, traj = engine._run_scan(
+                    profile, link, keys_seg, modes_seg, params_seg,
+                    slot0=slot0, active=active,
+                )
+            else:
+                link, traj = scan_fn(
+                    link, keys_seg, modes_seg, params_seg,
+                    cell_of_slot, cell_params, slot0, active,
+                )
+
+        # -- host-side assembly on the stable-id axis ---------------------
+        flat_kpms = {
+            k: np.asarray(v)
+            for k, v in flatten_kpm_sources(traj["kpms"]).items()
+        }
+        if not kpms_full:
+            kpms_full.update({
+                k: np.zeros((n_slots, n_ids), v.dtype)
+                for k, v in flat_kpms.items()
+            })
+            outputs_full.update({
+                k: np.zeros((n_slots, n_ids), np.asarray(v).dtype)
+                for k, v in traj.items() if k not in _CLOSED_EXTRAS
+            })
+        for k, v in flat_kpms.items():
+            _scatter_segment(kpms_full[k], v, t0, ids_b, slots_b)
+        for k in outputs_full:
+            _scatter_segment(outputs_full[k], traj[k], t0, ids_b, slots_b)
+        if closed:
+            _scatter_segment(
+                modes_full, traj["active_mode"], t0, ids_b, slots_b
+            )
+            _scatter_segment(
+                decisions_full, traj["raw_decision"], t0, ids_b, slots_b
+            )
+            delta = np.asarray(sw.n_switches) - nsw_base
+            n_switches_id[ids_b] += delta[slots_b]
+        else:
+            _scatter_segment(modes_full, modes_seg, t0, ids_b, slots_b)
+        bank_slot_full[t0:t0 + seg, ids_b] = slots_b[None, :]
+
+    return BatchedRunHistory(
+        modes=modes_full,
+        kpms=kpms_full,
+        outputs=outputs_full,
+        decisions=decisions_full,
+        n_switches=n_switches_id,
+        cell_of_ue=(
+            None if topo is None else home_cells(n_ids, n_cells)
+        ),
+        attached=res.copy(),
+        bank_slot=bank_slot_full,
+    )

@@ -362,6 +362,76 @@ def closed_loop_fn(
     )
 
 
+def streaming_open_loop_fn(
+    engine, topo: CellTopology, profile, *, sharded: bool = True
+):
+    """Streaming-segment open-loop scan callable (jaxpr/HLO-inspectable).
+
+    The sharded entry the epoch-chunked driver calls once per segment: the
+    same program as ``open_loop_fn`` plus the two streaming operands —
+    the replicated global segment start ``slot0`` (so per-slot PRNG folds
+    stay keyed by the *campaign* slot index across segments) and the
+    per-bank-slot ``active`` mask, which shards with its UEs.  The
+    collective contract is unchanged through re-packs: the cell-mean
+    ``psum`` stays the scan's only cross-shard collective (detached lanes
+    are masked out of the summed load before it), and admission re-packing
+    happens host-side *between* segments, cell-block-aligned, so no gather
+    ever enters the compiled program.
+    """
+    axis = UE_AXIS if sharded else None
+
+    def call(link0, ue_keys, modes, params, cell_of_ue, cell_params,
+             slot0, active):
+        return engine._run_scan(
+            profile, link0, ue_keys, modes, params,
+            cell_of_ue, cell_params, cell_axis=axis,
+            slot0=slot0, active=active,
+        )
+
+    if not sharded:
+        return call
+    return shard_map(
+        call,
+        mesh=topo.mesh,
+        in_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS), P(None, UE_AXIS),
+                  P(UE_AXIS), P(), P(), P(UE_AXIS)),
+        out_specs=(P(UE_AXIS), P(None, UE_AXIS)),
+        check_rep=False,
+    )
+
+
+def streaming_closed_loop_fn(
+    engine, topo: CellTopology, profile, sw_cfg, policy,
+    *, sharded: bool = True,
+):
+    """Streaming-segment closed-loop scan callable.
+
+    ``closed_loop_fn`` plus the streaming operands (see
+    ``streaming_open_loop_fn``); the per-UE switch state shards with its
+    UEs and is gathered/cold-started host-side at segment boundaries.
+    """
+    axis = UE_AXIS if sharded else None
+
+    def call(link0, sw0, ue_keys, params, policy, cell_of_ue, cell_params,
+             slot0, active):
+        return engine._run_closed_scan(
+            profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+            cell_of_ue, cell_params, cell_axis=axis,
+            slot0=slot0, active=active,
+        )
+
+    if not sharded:
+        return call
+    return shard_map(
+        call,
+        mesh=topo.mesh,
+        in_specs=(P(UE_AXIS), P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS),
+                  _policy_spec(policy), P(UE_AXIS), P(), P(), P(UE_AXIS)),
+        out_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS)),
+        check_rep=False,
+    )
+
+
 def run_closed_loop_sharded(
     engine,
     topo: CellTopology,

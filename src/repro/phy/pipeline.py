@@ -700,7 +700,22 @@ class BatchedPuschPipeline:
         cell_of_ue: jax.Array | None = None,
         cell_params: CellParams | None = None,
         cell_axis: str | None = None,
+        active: jax.Array | None = None,
     ):
+        if active is not None:
+            # streaming bank-slot mask: detached lanes run the fail-safe
+            # expert (so they never claim gated compaction capacity), their
+            # link state freezes and their outputs/KPMs/executed-FLOPs zero
+            # below.  With an all-ones mask every select is the identity, so
+            # a fully-attached slot is bitwise-equal to the unmasked path.
+            act = jnp.asarray(active)
+            modes = jnp.where(
+                act, jnp.asarray(modes, jnp.int32),
+                jnp.int32(self.bank.default_mode),
+            )
+            if cell_of_ue is not None:
+                # empty lanes must not contribute to the per-cell mean load
+                p = p._replace(interf_on=jnp.where(act, p.interf_on, 0.0))
         if cell_of_ue is not None:
             # multi-cell topology: fold per-cell offsets + inter-cell
             # coupling into this slot's per-UE knobs.  Under shard_map,
@@ -758,6 +773,19 @@ class BatchedPuschPipeline:
         outputs["executed_flops"] = exec_flops
         outputs["gated_overflow"] = overflow
         outputs["audit_tripped"] = audit_tripped
+        if active is not None:
+            # detached lanes: state frozen, every output/KPM leaf zeroed —
+            # they carry no throughput, no cost, no overflow, no telemetry
+            new_link = jax.tree.map(
+                lambda n, o: jnp.where(act, n, o), new_link, link
+            )
+            outputs = jax.tree.map(
+                lambda x: jnp.where(
+                    act.reshape(act.shape + (1,) * (x.ndim - 1)),
+                    x, jnp.zeros_like(x),
+                ),
+                outputs,
+            )
         return new_link, outputs
 
     @partial(jax.jit, static_argnames=("self", "profile"))
@@ -776,7 +804,15 @@ class BatchedPuschPipeline:
     def _run_scan(
         self, profile, link0, ue_keys, modes, params,
         cell_of_ue=None, cell_params=None, *, cell_axis=None,
+        slot0=None, active=None,
     ):
+        # ``slot0`` (traced) starts the carry's slot counter at a global
+        # slot index, so an epoch-chunked streaming campaign folds the same
+        # per-(UE, slot) PRNG stream a monolithic run folds; ``active`` is
+        # the streaming bank-slot mask (see ``_slot_core``).  Both default
+        # to the monolithic behaviour.
+        start = jnp.int32(0) if slot0 is None else jnp.asarray(slot0, jnp.int32)
+
         def step(carry, xs):
             link, slot_idx = carry
             modes_s, p = xs
@@ -784,12 +820,12 @@ class BatchedPuschPipeline:
             link, out = self._slot_core(
                 profile, link, modes_s, keys, p,
                 cell_of_ue=cell_of_ue, cell_params=cell_params,
-                cell_axis=cell_axis,
+                cell_axis=cell_axis, active=active,
             )
             return (link, slot_idx + 1), out
 
         (link, _), traj = jax.lax.scan(
-            step, (link0, jnp.int32(0)), (modes, params)
+            step, (link0, start), (modes, params)
         )
         return link, traj
 
@@ -848,7 +884,7 @@ class BatchedPuschPipeline:
 
     def _closed_step(
         self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
-        cell_of_ue=None, cell_params=None, cell_axis=None,
+        cell_of_ue=None, cell_params=None, cell_axis=None, active=None,
     ):
         """One closed-loop slot: boundary-committed modes in, decision out.
 
@@ -857,13 +893,19 @@ class BatchedPuschPipeline:
         policy decides, and the register/boundary update prepares slot
         ``slot_idx + 1``.  Shared verbatim by the scan body and the
         python-loop debug path so the two are the same program per slot.
+
+        ``active`` (streaming bank-slot mask) freezes a detached lane's
+        whole control-loop state — KPM ring, register, hysteresis streak
+        and switch counter — so no telemetry accumulates while detached
+        (reattachment cold-starts the row at the segment boundary; the
+        streaming driver owns that re-pack).
         """
         keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
-        active = sw.active_mode
+        committed = sw.active_mode
         link, out = self._slot_core(
-            profile, link, active, keys, p,
+            profile, link, committed, keys, p,
             cell_of_ue=cell_of_ue, cell_params=cell_params,
-            cell_axis=cell_axis,
+            cell_axis=cell_axis, active=active,
         )
         vecs = trajectory_kpm_matrix(out["kpms"], sw_cfg.feature_names)
         decide = (
@@ -871,31 +913,48 @@ class BatchedPuschPipeline:
             if sw_cfg.period_slots == 1
             else (slot_idx % jnp.int32(sw_cfg.period_slots)) == 0
         )
-        sw, raw = switch_update(sw, vecs, policy, sw_cfg, decide=decide)
+        new_sw, raw = switch_update(sw, vecs, policy, sw_cfg, decide=decide)
         out = dict(
             out,
-            active_mode=active,
+            active_mode=committed,
             raw_decision=raw,
-            pending_mode=sw.pending_mode,
+            pending_mode=new_sw.pending_mode,
         )
-        sw = switch_boundary(sw)
-        return link, sw, out
+        new_sw = switch_boundary(new_sw)
+        if active is not None:
+            act = jnp.asarray(active)
+            new_sw = jax.tree.map(
+                lambda n, o: jnp.where(
+                    act.reshape(act.shape + (1,) * (n.ndim - 1)), n, o
+                ),
+                new_sw, sw,
+            )
+            out = dict(
+                out,
+                active_mode=jnp.where(act, committed, 0),
+                raw_decision=jnp.where(act, raw, 0),
+                pending_mode=jnp.where(act, out["pending_mode"], 0),
+            )
+        return link, new_sw, out
 
     @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg", "cell_axis"))
     def _run_closed_scan(
         self, profile, sw_cfg, link0, sw0, ue_keys, params, policy,
         cell_of_ue=None, cell_params=None, *, cell_axis=None,
+        slot0=None, active=None,
     ):
+        start = jnp.int32(0) if slot0 is None else jnp.asarray(slot0, jnp.int32)
+
         def step(carry, p):
             link, sw, slot_idx = carry
             link, sw, out = self._closed_step(
                 profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
-                cell_of_ue, cell_params, cell_axis,
+                cell_of_ue, cell_params, cell_axis, active,
             )
             return (link, sw, slot_idx + 1), out
 
         (link, sw, _), traj = jax.lax.scan(
-            step, (link0, sw0, jnp.int32(0)), params
+            step, (link0, sw0, start), params
         )
         return link, sw, traj
 

@@ -293,6 +293,33 @@ def _multi_cell(
     return [cell_schedules[u // ues_per_cell] for u in range(n_ues)]
 
 
+def _churn_cell(
+    n_ues: int,
+    *,
+    period: int = 12,
+    burst_slots: int = 4,
+    stagger: int = 3,
+) -> list:
+    """Churn-campaign cell: phase-staggered bursty interference per UE id.
+
+    Every UE id gets the same periodic interference stream shifted by
+    ``(id * stagger) % period`` slots, so each *stable identity* carries a
+    distinct, id-tied condition trajectory.  Built for streaming
+    campaigns: a UE re-packed into a different bank slot keeps its own
+    burst phase, which is exactly what the re-pack-invariance property
+    tests need to distinguish identity-keyed conditions from
+    slot-keyed ones.
+    """
+    return [
+        bursty_interference_schedule(
+            period=period,
+            burst_slots=burst_slots,
+            offset=(u * stagger) % period,
+        )
+        for u in range(n_ues)
+    ]
+
+
 register_scenario(
     "good", lambda: constant_schedule(GOOD),
     description="LOS, no interference (paper: UE1->gNB1 clean)",
@@ -320,4 +347,8 @@ register_scenario(
 register_scenario(
     "multi_cell", _multi_cell, per_ue=True,
     description="n_cells cells, each running a named registered scenario",
+)
+register_scenario(
+    "churn_cell", _churn_cell, per_ue=True,
+    description="per-id phase-staggered interference bursts (streaming)",
 )

@@ -1,0 +1,186 @@
+"""Satellite tests for ``benchmarks.check_snapshot`` — the schema/regression
+gate behind ``benchmarks.run --smoke``.
+
+Covers schema-mismatch rejection (unknown schema tag, missing top-level /
+``streaming`` / ``gated`` keys, host-fingerprint holes), >20% regression
+detection on a comparable host vs. the warning-only path across hosts,
+the ``--candidate`` CLI, and the committed default baseline staying
+readable by current tooling.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from benchmarks import check_snapshot as cs
+
+
+def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
+    """Minimal snapshot that satisfies ``validate_schema`` for ``schema``."""
+    gated_row = {
+        k: (False if k == "bf16_audit_tripped" else rate)
+        for k in cs.REQUIRED_GATED_KEYS
+    }
+    payload = {
+        "schema": schema,
+        "host": {f: f"host-{f}" for f in cs.HOST_FIELDS},
+        "slot_ues_per_s": {"host_loop": rate / 10, "scan_engine": rate},
+        "session_slot_ues_per_s": rate,
+        "gated": {s: copy.deepcopy(gated_row) for s in cs.REQUIRED_SHARES},
+        "campaign_spec_hash": "deadbeef",
+    }
+    if schema == "arches-bench-v2":
+        payload["streaming"] = {
+            "zero_churn_equal": "bitwise",
+            "streaming_slot_ues_per_s": rate,
+            "monolithic_slot_ues_per_s": rate,
+            "churn_resident_slot_ues_per_s": rate / 2,
+            "n_segments": 2,
+        }
+    return payload
+
+
+def _write(tmp_path, name: str, payload: dict):
+    path = tmp_path / name
+    path.write_text(json.dumps(payload))
+    return path
+
+
+# -- schema compatibility ------------------------------------------------------
+
+
+def test_validate_schema_accepts_both_supported_schemas():
+    assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
+    # v1 snapshots predate the streaming section and must stay readable
+    assert cs.validate_schema(_payload("arches-bench-v1"), "x") == []
+
+
+def test_validate_schema_rejects_unknown_schema():
+    errs = cs.validate_schema(_payload(schema="arches-bench-v99"), "cand")
+    assert any("schema is 'arches-bench-v99'" in e for e in errs)
+
+
+def test_validate_schema_missing_top_level_keys():
+    for key in cs.REQUIRED_KEYS:
+        if key == "schema":
+            continue  # removing the tag trips the schema check instead
+        payload = _payload()
+        del payload[key]
+        errs = cs.validate_schema(payload, "x")
+        assert any(f"missing top-level key {key!r}" in e for e in errs), key
+
+
+def test_validate_schema_v2_requires_streaming_section():
+    payload = _payload()
+    del payload["streaming"]
+    errs = cs.validate_schema(payload, "x")
+    assert any("missing 'streaming'" in e for e in errs)
+    for key in cs.REQUIRED_STREAMING_KEYS:
+        payload = _payload()
+        del payload["streaming"][key]
+        errs = cs.validate_schema(payload, "x")
+        assert any(f"streaming missing {key!r}" in e for e in errs), key
+
+
+def test_validate_schema_gated_sweep_holes():
+    payload = _payload()
+    del payload["gated"]["0.25"]
+    errs = cs.validate_schema(payload, "x")
+    assert any("missing AI share '0.25'" in e for e in errs)
+    payload = _payload()
+    del payload["gated"]["1"]["bf16_audit_tripped"]
+    errs = cs.validate_schema(payload, "x")
+    assert any("missing 'bf16_audit_tripped'" in e for e in errs)
+
+
+def test_validate_schema_host_fingerprint_holes():
+    for field in cs.HOST_FIELDS:
+        payload = _payload()
+        del payload["host"][field]
+        errs = cs.validate_schema(payload, "x")
+        assert any(
+            f"host fingerprint missing {field!r}" in e for e in errs
+        ), field
+
+
+# -- check(): regression gate --------------------------------------------------
+
+
+def test_check_baseline_only(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _payload())
+    assert cs.check(base) == 0
+    assert "schema ok" in capsys.readouterr().out
+
+
+def test_check_unreadable_and_invalid_baseline(tmp_path):
+    assert cs.check(tmp_path / "absent.json") == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert cs.check(bad) == 1
+    v99 = _write(tmp_path, "v99.json", _payload(schema="arches-bench-v99"))
+    assert cs.check(v99) == 1
+
+
+def test_check_candidate_is_baseline(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _payload())
+    assert cs.check(base, candidate=base) == 0
+    assert "nothing to compare" in capsys.readouterr().out
+
+
+def test_check_regression_on_comparable_host(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _payload(rate=100.0))
+    good = _write(tmp_path, "good.json", _payload(rate=85.0))  # -15%
+    bad = _write(tmp_path, "bad.json", _payload(rate=70.0))  # -30%
+    assert cs.check(base, candidate=good) == 0
+    assert "REGRESSION" not in capsys.readouterr().out
+    assert cs.check(base, candidate=bad) == 1
+    assert "<-- REGRESSION" in capsys.readouterr().out
+
+
+def test_check_different_host_only_warns(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _payload(rate=100.0))
+    slow = _payload(rate=70.0)  # -30%, but on a different machine
+    slow["host"]["machine"] = "other-arch"
+    cand = _write(tmp_path, "cand.json", slow)
+    assert cs.check(base, candidate=cand) == 0
+    out = capsys.readouterr().out
+    assert "(different host)" in out and "not failing" in out
+
+
+def test_check_rejects_invalid_candidate(tmp_path):
+    base = _write(tmp_path, "base.json", _payload())
+    broken = _payload()
+    del broken["campaign_spec_hash"]
+    cand = _write(tmp_path, "cand.json", broken)
+    assert cs.check(base, candidate=cand) == 1
+
+
+# -- CLI + committed baseline --------------------------------------------------
+
+
+def test_main_candidate_cli(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", _payload(rate=100.0))
+    cand = _write(tmp_path, "cand.json", _payload(rate=70.0))
+    monkeypatch.setattr(
+        "sys.argv", ["check_snapshot", str(base), "--candidate", str(cand)]
+    )
+    with pytest.raises(SystemExit) as exc:
+        cs.main()
+    assert exc.value.code == 1
+    monkeypatch.setattr("sys.argv", ["check_snapshot", str(base)])
+    with pytest.raises(SystemExit) as exc:
+        cs.main()
+    assert exc.value.code == 0
+
+
+def test_committed_default_baseline_is_valid():
+    """The snapshot committed with the repo must stay readable by the
+    tooling every later PR ships — the exact hazard the gate exists for."""
+    assert cs.DEFAULT_BASELINE.exists()
+    payload = cs._load(cs.DEFAULT_BASELINE)
+    assert payload is not None
+    assert cs.validate_schema(payload, cs.DEFAULT_BASELINE.name) == []
+    assert cs.check(cs.DEFAULT_BASELINE) == 0

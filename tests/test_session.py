@@ -590,6 +590,65 @@ def test_suggest_gated_capacity_sharded_never_unbuildable():
             per_shard_capacity(cap, n_shards)  # must not raise
 
 
+def _history_with_residency(modes, attached) -> BatchedRunHistory:
+    return BatchedRunHistory(
+        modes=np.asarray(modes, np.int32), kpms={}, outputs={},
+        attached=np.asarray(attached, bool),
+    )
+
+
+def test_suggest_gated_capacity_counts_resident_demand_only():
+    """Streaming histories size from *resident* AI demand: a detached
+    slot-UE's declared mode claims no gated capacity, so a churn campaign
+    over an id universe wider than the bank is sized from concurrent
+    residency, not the full stable-id axis."""
+    modes = np.zeros((4, 6), np.int32)  # every id declares AI ...
+    attached = np.zeros((4, 6), bool)
+    attached[:, :2] = True  # ... but only 2 are resident
+    attached[2, 2] = True  # one slot peaks at 3 residents
+    hist = _history_with_residency(modes, attached)
+    assert suggest_gated_capacity(hist) == 3
+    assert suggest_gated_capacity(hist, quantile=0.5) == 2
+    # an all-detached campaign claims no gated capacity at all
+    assert suggest_gated_capacity(
+        _history_with_residency(modes, np.zeros((4, 6), bool))
+    ) == 0
+    # plain histories (attached is None) keep the original semantics
+    assert suggest_gated_capacity(_history_with_modes(modes)) == 6
+
+
+def test_suggest_gated_capacity_resident_demand_property_sweep():
+    """Property sweep beside the shard-divisibility one: masking by
+    residency never raises the suggestion, stays buildable under shards,
+    and at (quantile=1, headroom=0, n_shards=1) equals the realized peak
+    resident AI demand exactly."""
+    from repro.core.topology import per_shard_capacity
+
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        n_shards = int(rng.choice([1, 2, 4, 8]))
+        n_ues = n_shards * int(rng.integers(1, 4))
+        modes = rng.integers(0, 2, size=(6, n_ues)).astype(np.int32)
+        attached = rng.random((6, n_ues)) < 0.6
+        kw = dict(
+            quantile=float(rng.uniform(0.0, 1.0)),
+            headroom=int(rng.integers(0, 3)),
+            n_shards=n_shards,
+        )
+        cap_resident = suggest_gated_capacity(
+            _history_with_residency(modes, attached), **kw
+        )
+        cap_plain = suggest_gated_capacity(_history_with_modes(modes), **kw)
+        assert cap_resident <= cap_plain
+        assert 0 <= cap_resident <= n_ues
+        if n_shards > 1:
+            per_shard_capacity(cap_resident, n_shards)  # must not raise
+        peak = suggest_gated_capacity(
+            _history_with_residency(modes, attached)
+        )
+        assert peak == int(((modes == 0) & attached).sum(axis=1).max())
+
+
 def test_legacy_shim_defaults_match_from_spec(legacy_engine):
     """The deprecation shim must forward kwargs equivalently to
     ``from_spec``: the same resolved default/fail-safe modes (from the

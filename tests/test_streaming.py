@@ -1,0 +1,808 @@
+"""Epoch-chunked streaming campaigns: churn proven bitwise-stable.
+
+The tentpole contracts, asserted here:
+
+* **(a) zero-churn equivalence** — a segmented streaming run with every
+  bank slot attached and no events is bitwise-equal to the monolithic
+  ``ArchesSession.run`` on *every* trajectory leaf, for the batched,
+  gated and closed-loop paths (the mask selects are identities and the
+  boundary re-pack is the identity gather);
+* **(b) identity rides the stable UE id** — a 50-draw seeded randomized
+  churn sweep: every UE matches a churn-free full-universe reference
+  bitwise on *every* leaf for as long as it has been attached since
+  slot 0 (link adaptation — OLLA, reported SNR — carries per-UE state,
+  and a reattach cold-starts it by design, so post-gap spans diverge
+  from the warm reference; the leaves with no carry — ``rsrp``,
+  ``executed_flops`` — match on every resident slot, reattach spans
+  included); and adding churn of *other* ids never perturbs a resident
+  UE's trajectory even though its bank slot moves (re-pack invariance,
+  which is what pins the reattach spans bitwise);
+* **(c) the sharded collective contract survives re-packing** — a
+  forced-8-shard subprocess runs streaming campaigns under a 2-cell
+  topology and audits the compiled HLO: the cell-mean ``all-reduce`` is
+  the only collective (no gather/permute enters through the admission
+  path), plus the in-process jaxpr variant on the 1-device CI mesh.
+
+Churn-boundary KPM semantics (satellite): a detached-then-reattached
+UE's window and hysteresis state reset — pinned at the ring layer
+(fresh ``ring_init``), the ``DeviceSwitchState`` layer (cold rows start
+at ``default_mode``) and the host-replay layer (no pre-detach telemetry
+can leak into the first post-attach decision).  Masked cost accounting:
+detached slot-UEs carry the ``-1`` mode/bank-slot sentinel, zeroed
+KPMs/outputs, zero executed FLOPs, and resident-only ``ai_share``.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import host_replay_closed_loop
+from repro.core.session import (
+    ArchesSession,
+    CampaignSpec,
+    ExpertBankSpec,
+    PolicySpec,
+    SwitchSpec,
+    spec_hash,
+)
+from repro.core.streaming import (
+    ChurnSchedule,
+    gather_permutation,
+    gather_state_rows,
+    home_cells,
+    repack_bank,
+)
+from repro.core.telemetry import ring_init, ring_push, ring_window_mean
+from repro.core.topology import TopologySpec
+
+N_PRB = 6
+SEG = 4
+N_SLOTS = 12
+N_IDS = 5  # stable-id universe of the sweep; anchors {0, 1} never churn
+CAPACITY = 4  # bank width: residency may peak at 4 of the 5 ids
+
+#: leaves whose per-slot value is a pure function of (id key, global slot,
+#: mode, id channel params) — no route through the ``DeviceLinkState``
+#: carry (OLLA offset, reported SNR, cumulative counters), so they must
+#: equal the churn-free reference on *every* resident slot, reattach spans
+#: included.  Everything else flows through link adaptation, which a
+#: reattach cold-starts by design — those leaves match the reference
+#: exactly on the attached-since-slot-0 prefix.
+MEMORYLESS_KPMS = ("rsrp",)
+MEMORYLESS_OUTPUTS = ("executed_flops", "gated_overflow")
+
+
+def _modes_grid(n_slots: int, n_ids: int) -> tuple:
+    """A deterministic AI/MMSE checkerboard over the stable-id axis."""
+    return tuple(
+        tuple((s + u) % 2 for u in range(n_ids)) for s in range(n_slots)
+    )
+
+
+def _full_residency(n_ids: int, seg: int) -> ChurnSchedule:
+    return ChurnSchedule(
+        n_ue_ids=n_ids, segment_slots=seg, initial=tuple(range(n_ids))
+    )
+
+
+def assert_history_equal(a, b, *, leaves_only: bool = False):
+    """Bitwise equality of two ``BatchedRunHistory``s on every leaf."""
+    np.testing.assert_array_equal(a.modes, b.modes, err_msg="modes")
+    assert set(a.kpms) == set(b.kpms)
+    for k in a.kpms:
+        np.testing.assert_array_equal(a.kpms[k], b.kpms[k], err_msg=k)
+    assert set(a.outputs) == set(b.outputs)
+    for k in a.outputs:
+        np.testing.assert_array_equal(a.outputs[k], b.outputs[k], err_msg=k)
+    if leaves_only:
+        return
+    if a.decisions is not None or b.decisions is not None:
+        np.testing.assert_array_equal(
+            a.decisions, b.decisions, err_msg="decisions"
+        )
+    if a.n_switches is not None or b.n_switches is not None:
+        np.testing.assert_array_equal(
+            a.n_switches, b.n_switches, err_msg="n_switches"
+        )
+
+
+# -- ChurnSchedule: declarative form, validation, provenance -------------------
+
+
+def test_churn_schedule_validation():
+    with pytest.raises(ValueError, match="n_ue_ids"):
+        ChurnSchedule(n_ue_ids=0, segment_slots=4)
+    with pytest.raises(ValueError, match="segment_slots"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=0)
+    with pytest.raises(ValueError, match="repeats"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4, initial=(1, 1))
+    with pytest.raises(ValueError, match="kind"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4,
+                      events=((0, 1, "reattach"),))
+    with pytest.raises(ValueError, match="slot"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4,
+                      events=((-1, 1, "attach"),))
+    with pytest.raises(ValueError, match="outside"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4, initial=(2,))
+    with pytest.raises(ValueError, match="outside"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4, events=((0, 5, "attach"),))
+
+
+def test_residency_semantics():
+    sched = ChurnSchedule(
+        n_ue_ids=3, segment_slots=4, initial=(0,),
+        # slot 1 rounds up to the boundary at 4; slot 8 is already one
+        events=((1, 1, "attach"), (8, 0, "detach")),
+    )
+    res = sched.residency(12)
+    assert res.shape == (12, 3) and res.dtype == bool
+    np.testing.assert_array_equal(res[:, 0], [True] * 8 + [False] * 4)
+    np.testing.assert_array_equal(res[:, 1], [False] * 4 + [True] * 8)
+    assert not res[:, 2].any()
+    # segment length must divide the horizon (one compiled segment shape)
+    with pytest.raises(ValueError, match="does not divide"):
+        sched.residency(10)
+    # events whose effective boundary lies past the horizon never fire —
+    # they are not even validated for attach/detach consistency
+    past = ChurnSchedule(
+        n_ue_ids=3, segment_slots=4, initial=(0,),
+        events=((12, 2, "detach"),),  # detach-of-absent, but past slot 12
+    )
+    np.testing.assert_array_equal(past.residency(12)[:, 2], [False] * 12)
+
+
+def test_residency_rejects_inconsistent_events():
+    with pytest.raises(ValueError, match="already"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4, initial=(0,),
+                      events=((4, 0, "attach"),)).residency(8)
+    with pytest.raises(ValueError, match="not"):
+        ChurnSchedule(n_ue_ids=2, segment_slots=4,
+                      events=((4, 1, "detach"),)).residency(8)
+
+
+def test_validate_capacity_and_cell_blocks():
+    sched = ChurnSchedule(n_ue_ids=4, segment_slots=4, initial=(0, 1, 2))
+    with pytest.raises(ValueError, match="peaks at 3"):
+        sched.validate(8, capacity=2)
+    assert sched.validate(8, capacity=4).shape == (8, 4)
+    # multi-cell: ids map to home cells in equal blocks and residency must
+    # fit each cell's bank block, not just the campaign-wide bank
+    with pytest.raises(ValueError, match="does not divide n_ue_ids"):
+        ChurnSchedule(n_ue_ids=3, segment_slots=4).validate(
+            8, capacity=4, n_cells=2
+        )
+    with pytest.raises(ValueError, match="bank capacity"):
+        ChurnSchedule(n_ue_ids=4, segment_slots=4).validate(
+            8, capacity=3, n_cells=2
+        )
+    with pytest.raises(ValueError, match="cell 0"):
+        # 3 cell-0 ids (0, 1) + ... ids {0,1} are cell 0 of 4 ids / 2 cells
+        ChurnSchedule(
+            n_ue_ids=4, segment_slots=4, initial=(0, 1), events=()
+        ).validate(8, capacity=2, n_cells=2)
+
+
+def test_spec_level_churn_validation_and_provenance():
+    churn = ChurnSchedule(
+        n_ue_ids=4, segment_slots=4, initial=(0, 1),
+        events=((4, 2, "attach"), (4, 0, "detach")),
+    )
+    spec = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=2, n_slots=8,
+        n_prb=N_PRB, churn=churn,
+    )
+    back = CampaignSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.churn, ChurnSchedule)
+    assert spec_hash(back) == spec_hash(spec)
+    # the schedule is part of the campaign fingerprint
+    assert spec_hash(spec) != spec_hash(
+        dataclasses.replace(spec, churn=dataclasses.replace(
+            churn, events=()
+        ))
+    )
+    # paths with no segmented form reject churn at spec time
+    with pytest.raises(ValueError, match="no segmented form"):
+        CampaignSpec(path="perturbed", n_ues=2, rho=(0.0, 1.0),
+                     churn=ChurnSchedule(n_ue_ids=2, segment_slots=1))
+    # bank-slot-indexed per-UE policy assignment cannot survive re-packing
+    with pytest.raises(ValueError, match="policy_assignment"):
+        CampaignSpec(
+            path="closed_loop", n_ues=2, n_slots=4,
+            policies=(PolicySpec(kind="threshold"),) * 2,
+            policy_assignment=(0, 1),
+            churn=ChurnSchedule(n_ue_ids=2, segment_slots=2,
+                                initial=(0, 1)),
+        )
+    # infeasible residency fails at spec-compile time, not mid-campaign
+    with pytest.raises(ValueError, match="peaks"):
+        CampaignSpec(
+            path="batched", n_ues=1, n_slots=4,
+            churn=ChurnSchedule(n_ue_ids=2, segment_slots=4,
+                                initial=(0, 1)),
+        )
+    with pytest.raises(ValueError, match="ChurnSchedule"):
+        ArchesSession(CampaignSpec(n_ues=2, n_slots=4)).run_streaming()
+
+
+# -- admission pass: re-pack, permutation, state gather ------------------------
+
+
+def test_repack_bank_stable_partition():
+    occ = np.asarray([3, 1, 4, -1])
+    resident = np.zeros(6, bool)
+    resident[[1, 4, 0, 5]] = True  # 3 drops out; 0 and 5 newly attach
+    new = repack_bank(occ, resident)
+    # survivors keep their pack order compacted to the front; newcomers
+    # append in ascending id order
+    np.testing.assert_array_equal(new, [1, 4, 0, 5])
+    # unchanged residency is the identity re-pack
+    np.testing.assert_array_equal(repack_bank(new, resident), new)
+    # cell blocks partition independently: ids 0..2 -> cell 0, 3..5 -> 1
+    occ_c = np.asarray([2, -1, 4, 3])
+    res_c = np.zeros(6, bool)
+    res_c[[0, 2, 3, 4]] = True
+    np.testing.assert_array_equal(
+        repack_bank(occ_c, res_c, n_cells=2), [2, 0, 4, 3]
+    )
+    with pytest.raises(ValueError, match="does not divide"):
+        repack_bank(occ, resident, n_cells=3)
+
+
+def test_gather_permutation_and_state_rows():
+    prev = np.asarray([3, 1, 4, -1])
+    new = np.asarray([1, 4, 0, -1])
+    perm = gather_permutation(prev, new)
+    np.testing.assert_array_equal(perm, [1, 2, -1, -1])
+    state = {"x": jnp.arange(8.0).reshape(4, 2), "n": jnp.arange(4)}
+    cold = {"x": jnp.full((4, 2), -9.0), "n": jnp.full((4,), -9)}
+    out = gather_state_rows(state, perm, cold)
+    np.testing.assert_array_equal(
+        np.asarray(out["x"]), [[2, 3], [4, 5], [-9, -9], [-9, -9]]
+    )
+    np.testing.assert_array_equal(np.asarray(out["n"]), [1, 2, -9, -9])
+    # the identity permutation returns every leaf bitwise-unchanged — the
+    # zero-churn contract rides on this
+    ident = gather_permutation(prev, prev)
+    np.testing.assert_array_equal(ident, [0, 1, 2, -1])
+    out2 = gather_state_rows(state, np.asarray([0, 1, 2, 3]), cold)
+    np.testing.assert_array_equal(np.asarray(out2["x"]), np.asarray(state["x"]))
+
+
+# -- (a) zero-churn segmented == monolithic, every leaf, every path ------------
+
+
+@pytest.fixture(scope="module")
+def ref_session():
+    """Churn-free full-universe reference: N_IDS UEs, monolithic run."""
+    spec = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=N_IDS,
+        n_slots=N_SLOTS, n_prb=N_PRB, seed=3,
+        modes=_modes_grid(N_SLOTS, N_IDS),
+    )
+    return ArchesSession(spec)
+
+
+@pytest.fixture(scope="module")
+def ref_hist(ref_session):
+    return ref_session.run()
+
+
+def test_zero_churn_batched_bitwise_equals_monolithic(ref_session, ref_hist):
+    spec = dataclasses.replace(
+        ref_session.spec, churn=_full_residency(N_IDS, SEG)
+    )
+    hist = ArchesSession(
+        spec, ai_params=ref_session.ai_params, engine=ref_session.engine
+    ).run()
+    assert_history_equal(hist, ref_hist)
+    assert hist.attached.all()
+    # the re-pack is the identity: every id keeps its own bank slot
+    np.testing.assert_array_equal(
+        hist.bank_slot, np.tile(np.arange(N_IDS), (N_SLOTS, 1))
+    )
+    assert hist.ai_share == ref_hist.ai_share
+
+
+def test_zero_churn_gated_bitwise_equals_monolithic(ref_session):
+    base = CampaignSpec(
+        path="gated", scenario="churn_cell", n_ues=CAPACITY,
+        n_slots=N_SLOTS, n_prb=N_PRB, seed=3,
+        modes=_modes_grid(N_SLOTS, CAPACITY),
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=2),
+    )
+    mono = ArchesSession(base, ai_params=ref_session.ai_params)
+    hist_m = mono.run()
+    hist_s = ArchesSession(
+        dataclasses.replace(base, churn=_full_residency(CAPACITY, SEG)),
+        ai_params=ref_session.ai_params, engine=mono.engine,
+    ).run()
+    assert_history_equal(hist_s, hist_m)
+    # gated cost accounting carries over unchanged
+    np.testing.assert_array_equal(
+        hist_s.executed_flops_per_slot(), hist_m.executed_flops_per_slot()
+    )
+    assert hist_s.overflow_slot_ues == hist_m.overflow_slot_ues
+
+
+def _closed_spec(n_ues: int, n_slots: int, **kw) -> CampaignSpec:
+    return CampaignSpec(
+        path="closed_loop", scenario="churn_cell", n_ues=n_ues,
+        n_slots=n_slots, n_prb=N_PRB, seed=5,
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=18.0, hysteresis=2.0),),
+        switch=SwitchSpec(window_slots=2, backend="ref"),
+        **kw,
+    )
+
+
+def test_zero_churn_closed_loop_bitwise_equals_monolithic(ref_session):
+    base = _closed_spec(CAPACITY, N_SLOTS)
+    mono = ArchesSession(base, ai_params=ref_session.ai_params)
+    hist_m = mono.run()
+    hist_s = ArchesSession(
+        dataclasses.replace(base, churn=_full_residency(CAPACITY, SEG)),
+        ai_params=ref_session.ai_params, engine=mono.engine,
+    ).run()
+    assert_history_equal(hist_s, hist_m)
+    assert int(hist_s.n_switches.sum()) > 0  # non-vacuous: modes moved
+
+
+# -- (b) the 50-draw randomized churn property sweep ---------------------------
+
+
+def _random_churn(rng: np.random.Generator):
+    """One legal random schedule over N_IDS ids: anchors {0, 1} always
+    attached and never churned; ids {2, 3, 4} toggle at random boundaries
+    (event slots land anywhere inside the preceding segment, pinning the
+    round-up-to-boundary semantics); occasionally an event past the
+    horizon rides along (it must be ignored, not validated)."""
+    churnable = [2, 3, 4]
+    initial = [0, 1] + [u for u in churnable if rng.random() < 0.5]
+    del initial[CAPACITY:]
+    resident = set(initial)
+    events = []
+    for b in (SEG, 2 * SEG):
+        for u in churnable:
+            if rng.random() < 0.5:
+                continue
+            slot = int(b - rng.integers(0, SEG))
+            if u in resident:
+                events.append((slot, u, "detach"))
+                resident.discard(u)
+            elif len(resident) < CAPACITY:
+                events.append((slot, u, "attach"))
+                resident.add(u)
+    if rng.random() < 0.25:
+        events.append((
+            int(N_SLOTS + rng.integers(0, SEG)),
+            int(rng.choice(churnable)), "detach",
+        ))
+    return ChurnSchedule(
+        n_ue_ids=N_IDS, segment_slots=SEG,
+        initial=tuple(initial), events=tuple(events),
+    )
+
+
+def test_streaming_churn_property_sweep(ref_session, ref_hist):
+    """50 seeded draws: every slot-UE attached continuously since slot 0
+    (anchors included) is bitwise == the churn-free reference on every
+    leaf; the carry-free leaves match on every resident slot; detached
+    slot-UEs carry sentinels and zero cost; and extra churn of *another*
+    id never perturbs a resident trajectory even when it moves bank slots
+    (re-pack invariance)."""
+    rng = np.random.default_rng(0)
+    shared = dict(ai_params=ref_session.ai_params, engine=ref_session.engine)
+    repack_moved = False
+    for _ in range(50):
+        churn = _random_churn(rng)
+        spec = dataclasses.replace(
+            ref_session.spec, n_ues=CAPACITY, churn=churn
+        )
+        hist = ArchesSession(spec, **shared).run()
+        att = np.asarray(hist.attached, bool)
+        np.testing.assert_array_equal(att, churn.residency(N_SLOTS))
+
+        # attached-since-slot-0 prefix (whole columns for the anchors):
+        # the link carry gathers along with the UE, so *every* leaf is
+        # the churn-free reference, bitwise
+        cont = np.cumprod(att, axis=0).astype(bool)
+        assert cont[:, 0].all() and cont[:, 1].all()  # anchors covered
+        np.testing.assert_array_equal(hist.modes[cont], ref_hist.modes[cont])
+        for k in hist.kpms:
+            np.testing.assert_array_equal(
+                hist.kpms[k][cont], ref_hist.kpms[k][cont], err_msg=k
+            )
+        for k in hist.outputs:
+            np.testing.assert_array_equal(
+                hist.outputs[k][cont], ref_hist.outputs[k][cont], err_msg=k
+            )
+
+        # carry-free leaves: identity-tied on every resident slot, the
+        # reattach spans included
+        for k in MEMORYLESS_KPMS:
+            np.testing.assert_array_equal(
+                hist.kpms[k][att], ref_hist.kpms[k][att], err_msg=k
+            )
+        for k in MEMORYLESS_OUTPUTS:
+            np.testing.assert_array_equal(
+                hist.outputs[k][att], ref_hist.outputs[k][att], err_msg=k
+            )
+
+        # detached: sentinels, zeroed telemetry, zero executed FLOPs
+        assert (hist.modes[~att] == -1).all()
+        assert (hist.bank_slot[~att] == -1).all()
+        assert (hist.bank_slot[att] >= 0).all()
+        for k in hist.kpms:
+            assert (hist.kpms[k][~att] == 0).all(), k
+        assert (hist.outputs["executed_flops"][~att] == 0).all()
+        # ai_share divides by resident slot-UEs, not the id-grid size
+        served = (hist.modes == 0) & att
+        assert hist.ai_share == pytest.approx(
+            served.sum() / att.sum() if att.any() else 0.0
+        )
+        assert hist.resident_ues_per_slot().tolist() == (
+            att.sum(axis=1).tolist()
+        )
+
+        # re-pack invariance: give anchor 1 a mid-campaign gap -> every
+        # *other* id's history must stay bitwise-identical even though the
+        # admission pass now packs them into different bank slots
+        churn2 = dataclasses.replace(
+            churn,
+            events=churn.events + ((SEG, 1, "detach"), (2 * SEG, 1, "attach")),
+        )
+        hist2 = ArchesSession(
+            dataclasses.replace(spec, churn=churn2), **shared
+        ).run()
+        others = [u for u in range(N_IDS) if u != 1]
+        np.testing.assert_array_equal(
+            hist2.modes[:, others], hist.modes[:, others]
+        )
+        np.testing.assert_array_equal(
+            hist2.attached[:, others], att[:, others]
+        )
+        for k in hist.kpms:
+            np.testing.assert_array_equal(
+                hist2.kpms[k][:, others], hist.kpms[k][:, others], err_msg=k
+            )
+        for k in hist.outputs:
+            np.testing.assert_array_equal(
+                hist2.outputs[k][:, others], hist.outputs[k][:, others],
+                err_msg=k,
+            )
+        if not np.array_equal(
+            hist2.bank_slot[:, others], hist.bank_slot[:, others]
+        ):
+            repack_moved = True
+    # the invariance must have been exercised, not vacuous: some draw
+    # actually moved a surviving UE to a different bank slot
+    assert repack_moved
+
+
+# -- closed loop through churn boundaries (satellite: KPM semantics) -----------
+
+
+def test_closed_loop_churn_replays_bitwise_through_boundaries(ref_session):
+    """10 random closed-loop churn draws: device modes/decisions/switch
+    counts replay bitwise through ``host_replay_closed_loop(attached=)``."""
+    rng = np.random.default_rng(7)
+    base = _closed_spec(3, 8)
+    shared = {}
+    for _ in range(10):
+        initial = [0] + [u for u in (1, 2, 3) if rng.random() < 0.5][:2]
+        resident = set(initial)
+        events = []
+        for u in (1, 2, 3):
+            if rng.random() < 0.5:
+                continue
+            if u in resident:
+                events.append((int(4 - rng.integers(0, 4)), u, "detach"))
+                resident.discard(u)
+            elif len(resident) < 3:
+                events.append((int(4 - rng.integers(0, 4)), u, "attach"))
+                resident.add(u)
+        spec = dataclasses.replace(base, churn=ChurnSchedule(
+            n_ue_ids=4, segment_slots=4,
+            initial=tuple(initial), events=tuple(events),
+        ))
+        session = ArchesSession(spec, **shared)
+        if not shared:
+            shared = dict(ai_params=session.ai_params, engine=session.engine)
+        hist = session.run()
+        att = np.asarray(hist.attached, bool)
+        feats = np.stack(
+            [hist.kpms[n] for n in spec.feature_names], axis=-1
+        ).astype(np.float32)
+        replay = host_replay_closed_loop(
+            session.host_policies[0], feats,
+            spec.switch.to_config(spec.feature_names), attached=att,
+        )
+        np.testing.assert_array_equal(hist.modes, replay["active_mode"])
+        np.testing.assert_array_equal(hist.decisions, replay["raw_decision"])
+        np.testing.assert_array_equal(hist.n_switches, replay["n_switches"])
+        assert (hist.modes[~att] == -1).all()
+        assert (hist.decisions[~att] == -1).all()
+
+
+def test_reattach_cold_starts_device_switch_state(ref_session):
+    """DeviceSwitchState layer: a detached-then-reattached UE re-enters at
+    ``default_mode`` with a cleared register — its pre-detach mode cannot
+    survive the gap, and its switch count only reflects in-residency
+    boundary transitions (the cold row starts at zero)."""
+    spec = dataclasses.replace(_closed_spec(2, 12), churn=ChurnSchedule(
+        n_ue_ids=2, segment_slots=4, initial=(0, 1),
+        events=((4, 1, "detach"), (8, 1, "attach")),
+    ))
+    session = ArchesSession(spec, ai_params=ref_session.ai_params)
+    hist = session.run()
+    default = spec.switch.default_mode
+    # the reattach slot is a cold start, whatever mode it left with
+    assert hist.modes[8, 1] == default
+    np.testing.assert_array_equal(hist.modes[4:8, 1], [-1] * 4)
+    # the gap trajectory of UE 1 equals a truncated fresh campaign from
+    # slot 8's boundary: replay the whole thing to cross-check switches
+    feats = np.stack(
+        [hist.kpms[n] for n in spec.feature_names], axis=-1
+    ).astype(np.float32)
+    replay = host_replay_closed_loop(
+        session.host_policies[0], feats,
+        spec.switch.to_config(spec.feature_names),
+        attached=hist.attached,
+    )
+    np.testing.assert_array_equal(hist.n_switches, replay["n_switches"])
+
+
+def test_host_replay_reattach_window_independence():
+    """Host-replay layer: nothing observed before a detach (or faked
+    during the gap) can influence post-reattach decisions — the ring and
+    hysteresis streak restart from scratch at the boundary."""
+    from repro.core.policy import ThresholdPolicy
+    from repro.core.closed_loop import SwitchConfig
+
+    cfg = SwitchConfig(
+        feature_names=("snr",), window_slots=3, hysteresis_slots=2,
+        backend="ref",
+    )
+    policy = ThresholdPolicy(feature_idx=0, threshold=18.0, hysteresis=2.0)
+    rng = np.random.default_rng(1)
+    post = rng.uniform(10.0, 30.0, size=(4, 1, 1)).astype(np.float32)
+    attached = np.ones((10, 1), bool)
+    attached[3:6, 0] = False
+    a = np.concatenate(
+        [np.full((3, 1, 1), 30.0, np.float32),  # strong pre-detach SNR
+         np.zeros((3, 1, 1), np.float32), post]
+    )
+    b = np.concatenate(
+        [np.full((3, 1, 1), 5.0, np.float32),  # weak pre-detach SNR
+         np.full((3, 1, 1), 99.0, np.float32), post]  # garbage in the gap
+    )
+    ra = host_replay_closed_loop(policy, a, cfg, attached=attached)
+    rb = host_replay_closed_loop(policy, b, cfg, attached=attached)
+    for k in ("active_mode", "raw_decision", "pending_mode"):
+        np.testing.assert_array_equal(ra[k][6:], rb[k][6:], err_msg=k)
+    # ...while the pre-detach spans do differ (the test is not vacuous)
+    assert not np.array_equal(ra["raw_decision"][:3], rb["raw_decision"][:3])
+    np.testing.assert_array_equal(ra["active_mode"][3:6, 0], [-1] * 3)
+
+
+def test_ring_layer_reset_pins_window_contents():
+    """Ring layer: the admission pass swaps in ``ring_init``, so the first
+    post-attach window mean is exactly the mean of post-attach pushes —
+    bitwise — no matter what the previous occupant's ring held."""
+    stale = ring_init(3, 2)
+    for v in ([50.0, -3.0], [41.0, 7.0], [13.0, 13.0]):
+        stale = ring_push(stale, jnp.asarray(v, jnp.float32))
+    fresh = ring_init(3, 2)  # what the cold start installs
+    x = jnp.asarray([19.5, 2.5], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ring_window_mean(ring_push(fresh, x), 3)), np.asarray(x)
+    )
+    assert not np.array_equal(
+        np.asarray(ring_window_mean(ring_push(stale, x), 3)), np.asarray(x)
+    )
+
+
+# -- run_streaming dispatch ergonomics ----------------------------------------
+
+
+def test_run_streaming_churn_override(ref_session, ref_hist):
+    """``run_streaming(churn=...)`` overrides the spec's schedule (and
+    accepts the dict form); ``run()`` on a churn spec auto-dispatches."""
+    session = ArchesSession(
+        dataclasses.replace(ref_session.spec,
+                            churn=_full_residency(N_IDS, SEG)),
+        ai_params=ref_session.ai_params, engine=ref_session.engine,
+    )
+    hist = session.run_streaming()
+    assert_history_equal(hist, ref_hist)
+    override = ChurnSchedule(
+        n_ue_ids=N_IDS, segment_slots=SEG,
+        initial=tuple(range(N_IDS)), events=((SEG, 4, "detach"),),
+    )
+    hist2 = session.run_streaming(churn=dataclasses.asdict(override))
+    assert not np.asarray(hist2.attached)[SEG:, 4].any()
+    np.testing.assert_array_equal(hist2.modes[:, 0], ref_hist.modes[:, 0])
+
+
+# -- (c) sharded streaming: collectives audit + re-pack invariance -------------
+
+
+def test_streaming_sharded_1_device_zero_churn(ref_session):
+    """On the CI mesh (1 device) the topology streaming path must still be
+    bitwise-equal to the monolithic sharded run — and the streaming scan's
+    jaxpr must carry the cell-mean ``psum`` and no gather collective."""
+    from repro.core.topology import CellTopology, streaming_open_loop_fn
+    from repro.phy.pipeline import init_device_link, resolve_schedule
+
+    base = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=4, n_slots=8,
+        n_prb=N_PRB, seed=3, modes=_modes_grid(8, 4),
+        topology=TopologySpec(n_cells=2, coupling=0.5,
+                              cell_noise_offsets_db=(0.0, 3.0)),
+    )
+    mono = ArchesSession(base, ai_params=ref_session.ai_params)
+    hist_m = mono.run()
+    hist_s = ArchesSession(
+        dataclasses.replace(base, churn=_full_residency(4, 4)),
+        ai_params=ref_session.ai_params, engine=mono.engine,
+    ).run()
+    assert_history_equal(hist_s, hist_m)
+
+    # jaxpr audit of the streaming program (the multi-device HLO variant
+    # runs in the forced-8-shard subprocess below)
+    engine = mono.engine
+    topo = CellTopology.build(base.topology, 4)
+    profile, p = resolve_schedule(engine.cfg, mono.schedule, 4, 4)
+    fn = streaming_open_loop_fn(engine, topo, profile)
+    ue_keys = jax.vmap(
+        lambda u: jax.random.fold_in(jax.random.PRNGKey(0), u)
+    )(jnp.arange(4))
+    modes = jnp.ones((4, 4), jnp.int32).at[:, 0].set(0)
+    # churn_cell is a per-UE scenario: params already carry the (S, U) axes
+    assert jnp.ndim(p.noise_var) == 2
+    jaxpr = str(jax.make_jaxpr(fn)(
+        init_device_link(4), ue_keys, modes, p,
+        jnp.asarray(topo.cell_of_ue), topo.cell_params,
+        jnp.int32(4), jnp.ones(4, bool),
+    ))
+    assert "psum" in jaxpr
+    for collective in ("all_gather", "all_to_all", "ppermute",
+                       "pgather", "pswapaxes"):
+        assert collective not in jaxpr, collective
+
+
+_SHARDED_STREAMING_CHECK = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.core.session import ArchesSession, CampaignSpec
+from repro.core.streaming import ChurnSchedule
+from repro.core.topology import (
+    CellTopology, TopologySpec, streaming_open_loop_fn,
+)
+from repro.core.expert_bank import ExecutionMode
+from repro.phy.pipeline import (
+    BatchedPuschPipeline, init_device_link, resolve_schedule,
+)
+
+CAP, IDS, S, SEG = 8, 16, 8, 4
+MODES = tuple(tuple((s + u) % 2 for u in range(IDS)) for s in range(S))
+
+# 1) zero-churn streaming == monolithic sharded run, bitwise, 8 shards
+base = CampaignSpec(
+    path="batched", scenario="churn_cell", n_ues=CAP, n_slots=S, n_prb=6,
+    seed=3, modes=tuple(tuple(r[:CAP]) for r in MODES),
+    topology=TopologySpec(n_cells=2, coupling=0.3, n_shards=8),
+)
+mono = ArchesSession(base)
+hist_m = mono.run()
+zc = dataclasses.replace(base, churn=ChurnSchedule(
+    n_ue_ids=CAP, segment_slots=SEG, initial=tuple(range(CAP)),
+))
+hist_z = ArchesSession(zc, ai_params=mono.ai_params,
+                       engine=mono.engine).run()
+np.testing.assert_array_equal(hist_z.modes, hist_m.modes)
+for k in hist_m.kpms:
+    np.testing.assert_array_equal(hist_z.kpms[k], hist_m.kpms[k], err_msg=k)
+for k in hist_m.outputs:
+    np.testing.assert_array_equal(
+        hist_z.outputs[k], hist_m.outputs[k], err_msg=k
+    )
+
+# 2) re-pack invariance through an 8-shard churn campaign (coupling=0 so
+# the cell-mean multiplier is exactly 1.0 -> bitwise invariant residents)
+wide = CampaignSpec(
+    path="batched", scenario="churn_cell", n_ues=CAP, n_slots=S, n_prb=6,
+    seed=3, modes=MODES,
+    topology=TopologySpec(n_cells=2, coupling=0.0, n_shards=8),
+    churn=ChurnSchedule(
+        n_ue_ids=IDS, segment_slots=SEG,
+        initial=(0, 1, 2, 8, 9, 10),
+        events=((4, 1, "detach"), (4, 3, "attach"),
+                (4, 9, "detach"), (4, 11, "attach")),
+    ),
+)
+s1 = ArchesSession(wide, ai_params=mono.ai_params)
+h1 = s1.run()
+h2 = ArchesSession(
+    dataclasses.replace(wide, churn=dataclasses.replace(
+        wide.churn, events=wide.churn.events + ((4, 0, "detach"),)
+    )),
+    ai_params=mono.ai_params, engine=s1.engine,
+).run()
+others = [u for u in range(IDS) if u != 0]
+np.testing.assert_array_equal(h2.modes[:, others], h1.modes[:, others])
+for k in h1.kpms:
+    np.testing.assert_array_equal(
+        h2.kpms[k][:, others], h1.kpms[k][:, others], err_msg=k
+    )
+for k in h1.outputs:
+    np.testing.assert_array_equal(
+        h2.outputs[k][:, others], h1.outputs[k][:, others], err_msg=k
+    )
+# the extra detach actually moved someone (cell-0 survivors re-packed)
+assert not np.array_equal(h2.bank_slot[:, others], h1.bank_slot[:, others])
+att = np.asarray(h1.attached, bool)
+assert (h1.modes[~att] == -1).all()
+assert (np.asarray(h1.outputs["executed_flops"])[~att] == 0).all()
+
+# 3) HLO audit: the streaming scan's only collective is the cell-mean
+# all-reduce — the admission path introduces no gather/permute, and the
+# gated compaction stays shard-local under the active mask
+geng = BatchedPuschPipeline(
+    mono.engine.cfg, mono.ai_params, net=mono.net,
+    execution_mode=ExecutionMode.GATED, gated_capacity=1,  # per shard
+)
+topo = CellTopology.build(base.topology, CAP)
+profile, p = resolve_schedule(geng.cfg, mono.schedule, SEG, CAP)
+assert jnp.ndim(p.noise_var) == 2  # churn_cell is per-UE already
+fn = streaming_open_loop_fn(geng, topo, profile)
+ue_keys = jax.vmap(
+    lambda u: jax.random.fold_in(jax.random.PRNGKey(0), u)
+)(jnp.arange(CAP))
+modes = jnp.ones((SEG, CAP), jnp.int32).at[:, ::2].set(0)
+active = jnp.ones(CAP, bool).at[3].set(False)
+args = (init_device_link(CAP), ue_keys, modes, p,
+        jnp.asarray(topo.cell_of_ue), topo.cell_params,
+        jnp.int32(SEG), active)
+hlo = jax.jit(fn).lower(*args).compile().as_text()
+assert "all-reduce" in hlo, "expected the cell-mean psum to lower"
+for bad in ("all-gather", "all-to-all", "collective-permute"):
+    assert bad not in hlo, f"cross-device {bad} in the streaming scan"
+jax.jit(fn)(*args)  # and it runs
+
+print("STREAMING-SHARDED-8 OK")
+"""
+
+
+def test_streaming_sharded_on_forced_8_device_mesh():
+    """Contract (c) at the HLO layer: streaming campaigns on 8 forced host
+    devices keep the single-``psum`` collective contract through re-packs
+    (subprocess: XLA_FLAGS must precede jax initialization)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_STREAMING_CHECK],
+        env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert proc.returncode == 0, (
+        f"sharded streaming check failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}"
+    )
+    assert "STREAMING-SHARDED-8 OK" in proc.stdout
