@@ -3,10 +3,11 @@
 Two checks, both against the repo's committed ``BENCH_<tag>.json``:
 
 1. **Schema compatibility** — the snapshot must parse, declare a
-   compatible schema (``arches-bench-v1``, or ``arches-bench-v2`` which
-   adds the streaming/churn section), and carry every key current tooling
-   reads (engine/gated/fused/bf16 rates, the campaign provenance hash, the
-   host fingerprint).  A PR that renames a payload field without migrating the
+   compatible schema (``arches-bench-v1``; ``arches-bench-v2`` which adds
+   the streaming/churn section; or ``arches-bench-v3`` which additionally
+   adds the fault-injection/crash-resume section), and carry every key
+   current tooling reads (engine/gated/fused/bf16 rates, the campaign
+   provenance hash, the host fingerprint).  A PR that renames a payload field without migrating the
    committed snapshot fails here, not six PRs later when someone plots the
    trajectory.
 
@@ -36,11 +37,12 @@ DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr6.json"
 REGRESSION_FRAC = 0.20
 
 #: the schema current tooling writes
-SCHEMA = "arches-bench-v2"
+SCHEMA = "arches-bench-v3"
 
 #: schemas current tooling still reads: v1 snapshots predate the streaming
-#: section (BENCH_pr6.json stays valid); v2 additionally requires it
-SCHEMA_COMPAT = ("arches-bench-v1", "arches-bench-v2")
+#: section (BENCH_pr6.json stays valid); v2 additionally requires it; v3
+#: additionally requires the fault-injection/crash-resume section
+SCHEMA_COMPAT = ("arches-bench-v1", "arches-bench-v2", "arches-bench-v3")
 
 #: top-level keys every snapshot must carry
 REQUIRED_KEYS = (
@@ -51,12 +53,20 @@ REQUIRED_KEYS = (
     "campaign_spec_hash",
 )
 
-#: keys the v2 ``streaming`` section must carry
+#: keys the v2+ ``streaming`` section must carry
 REQUIRED_STREAMING_KEYS = (
     "zero_churn_equal",
     "streaming_slot_ues_per_s",
     "monolithic_slot_ues_per_s",
     "churn_resident_slot_ues_per_s",
+)
+
+#: keys the v3 ``faults`` section must carry
+REQUIRED_FAULTS_KEYS = (
+    "fault_replay_equal",
+    "resume_equal",
+    "fault_closed_slot_ues_per_s",
+    "checkpointed_slot_ues_per_s",
 )
 
 #: per-share keys inside the ``gated`` section
@@ -97,14 +107,23 @@ def validate_schema(payload: dict, label: str) -> list[str]:
     for key in REQUIRED_KEYS:
         if key not in payload:
             errors.append(f"{label}: missing top-level key {key!r}")
-    if schema == "arches-bench-v2":
+    if schema in ("arches-bench-v2", "arches-bench-v3"):
         streaming = payload.get("streaming")
         if streaming is None:
-            errors.append(f"{label}: v2 snapshot missing 'streaming'")
+            errors.append(f"{label}: {schema[-2:]} snapshot missing "
+                          "'streaming'")
         else:
             for key in REQUIRED_STREAMING_KEYS:
                 if key not in streaming:
                     errors.append(f"{label}: streaming missing {key!r}")
+    if schema == "arches-bench-v3":
+        faults = payload.get("faults")
+        if faults is None:
+            errors.append(f"{label}: v3 snapshot missing 'faults'")
+        else:
+            for key in REQUIRED_FAULTS_KEYS:
+                if key not in faults:
+                    errors.append(f"{label}: faults missing {key!r}")
     host = payload.get("host", {})
     for field in HOST_FIELDS:
         if field not in host:

@@ -39,7 +39,7 @@ def _jax_backend() -> str:
 
 def _json_payload(outs: dict) -> dict:
     """Assemble the perf-trajectory snapshot from section outputs."""
-    payload: dict = {"schema": "arches-bench-v2", "time": time.strftime(
+    payload: dict = {"schema": "arches-bench-v3", "time": time.strftime(
         "%Y-%m-%dT%H:%M:%S")}
     # host fingerprint: check_snapshot only compares absolute rates when
     # these match (cross-host wall-clock deltas are meaningless)
@@ -107,6 +107,19 @@ def _json_payload(outs: dict) -> dict:
                 streaming["churn_resident_slot_ues_per_s"],
             "n_segments": streaming["n_segments"],
         }
+    faults = outs.get("faults")
+    if faults:
+        # v3 schema: fault-injection replay + crash-resume rates
+        payload["faults"] = {
+            "fault_replay_equal": faults["fault_replay_equal"],
+            "resume_equal": faults["resume_equal"],
+            "fault_closed_slot_ues_per_s":
+                faults["fault_closed_slot_ues_per_s"],
+            "checkpointed_slot_ues_per_s":
+                faults["checkpointed_slot_ues_per_s"],
+            "health_tripped_slot_ues": faults["health_tripped_slot_ues"],
+            "quarantined_slot_ues": faults["quarantined_slot_ues"],
+        }
     return payload
 
 
@@ -128,6 +141,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_control_loop,
+        bench_faults,
         bench_gated,
         bench_kpm_cdfs,
         bench_methodology,
@@ -183,6 +197,13 @@ def main() -> None:
             ("streaming", "Streaming churn campaigns (smoke)",
              bench_streaming.run,
              {"n_slots": 16, "n_ues": 4, "segment_slots": 8}),
+            # raises unless a fault-injected closed loop (outage + NaN
+            # corruption + telemetry loss) replays bitwise through the host
+            # oracle and a killed-then-resumed streaming run is bitwise-
+            # equal to the uninterrupted one on every leaf
+            ("faults", "Fault injection + crash resume (smoke)",
+             bench_faults.run,
+             {"n_slots": 16, "n_ues": 4, "segment_slots": 8}),
         ]
     else:
         sections = [
@@ -210,6 +231,11 @@ def main() -> None:
               "n_ues": 8 if args.fast else 16}),
             ("streaming", "Streaming churn campaigns",
              bench_streaming.run,
+             {"n_slots": 24 if args.fast else 48,
+              "n_ues": 4 if args.fast else 8,
+              "segment_slots": 8}),
+            ("faults", "Fault injection + crash resume",
+             bench_faults.run,
              {"n_slots": 24 if args.fast else 48,
               "n_ues": 4 if args.fast else 8,
               "segment_slots": 8}),

@@ -32,6 +32,15 @@ The demo walks the execution paths the session dispatches over:
   wider than the bank; the printed history shows residency (``.`` =
   detached) alongside the per-UE expert choices, plus the closed-loop
   host replay through the churn boundaries.
+* ``--faults`` — the fault-injection degradation ladder: a ``FaultSpec``
+  takes the dApp offline mid-campaign (decisions stop arriving; the
+  device decision-age counter decays stale UEs to the MMSE fail-safe
+  after ``ttl_slots``, recovering when the control plane returns) and
+  injects a NaN burst into the AI expert's output (the in-scan health
+  screen serves the fail-safe that slot; repeated trips quarantine the
+  expert through the circuit breaker until cooldown expires).  The
+  fault-injected device trajectory replays bitwise through the host
+  oracle.
 
 Specs serialize: every section prints its campaign's ``spec_hash`` and the
 JSON round-trip is exercised before each run (what you ran is exactly what
@@ -352,6 +361,78 @@ def streaming_demo(n_ues: int) -> None:
         raise SystemExit("streaming closed-loop equivalence violated")
 
 
+def faults_demo(n_ues: int) -> None:
+    from repro.core.faults import FaultSpec
+
+    n_slots = 3 * N_PHASE
+    ttl = 3
+    outage = (N_PHASE, 2 * N_PHASE)  # dApp down for the middle phase
+    burst = (4, 8)  # NaN corruption early, while the dApp is still up
+    faults = FaultSpec(
+        seed=11,
+        decision_outages=(outage,),
+        corruption_spans=(burst,),
+        corruption_kind="nan",
+        breaker_trips=2,
+        breaker_window=4,
+        breaker_cooldown=4,
+    )
+    spec = roundtrip(CampaignSpec(
+        path="closed_loop",
+        scenario="good",
+        n_ues=n_ues,
+        n_slots=n_slots,
+        seed=9,
+        # threshold above any SNR: the policy always decides AI, so every
+        # MMSE slot below is the ladder acting, not the policy
+        policies=(PolicySpec(kind="threshold", feature="snr",
+                             threshold=1e9),),
+        switch=SwitchSpec(window_slots=2, ttl_slots=ttl),
+        faults=faults,
+    ))
+    session = ArchesSession(spec)
+    hist = session.run()
+
+    print(f"\n== fault injection: dApp outage slots "
+          f"{outage[0]}-{outage[1] - 1} (ttl={ttl}), NaN burst slots "
+          f"{burst[0]}-{burst[1] - 1} [spec {spec_hash(spec)}] ==")
+    tripped = np.asarray(hist.outputs["health_tripped"]) > 0
+    quar = np.asarray(hist.outputs["quarantined"]) > 0
+    for s in range(n_slots):
+        row = "".join(
+            "q" if quar[s, u]
+            else ("!" if tripped[s, u]
+                  else ("A" if m == 0 else "M"))
+            for u, m in enumerate(hist.modes[s])
+        )
+        note = ""
+        if burst[0] <= s < burst[1]:
+            note = "NaN burst -> health screen serves fail-safe"
+        elif quar[s].any():
+            note = "breaker open: expert quarantined"
+        elif outage[0] <= s < outage[0] + ttl:
+            note = "dApp down, last decision still fresh"
+        elif s < outage[1] and s >= outage[0] + ttl:
+            note = f"dApp down > ttl={ttl} -> decayed to fail-safe"
+        elif outage[1] <= s < outage[1] + 1:
+            note = "dApp back: decisions flow again"
+        print(f"slot {s:3d} per-UE: {row}  {note}")
+    print("legend: A=AI  M=MMSE fail-safe  !=health trip  q=quarantined")
+    print(f"health trips: {int(tripped.sum())} slot-UEs, quarantined: "
+          f"{int(quar.sum())} slot-UEs")
+
+    replay = session.host_replay(hist)
+    match = (
+        np.array_equal(hist.modes, replay["active_mode"])
+        and np.array_equal(hist.decisions, replay["raw_decision"])
+        and np.array_equal(quar, np.asarray(replay["quarantined"]) > 0)
+    )
+    print(f"fault-injected device == host oracle: "
+          f"{'yes (bitwise)' if match else 'NO'}")
+    if not match:
+        raise SystemExit("fault-injection replay equivalence violated")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-ues", type=int, default=4)
@@ -365,6 +446,8 @@ def main():
                     help="demo the sharded multi-cell topology (4 cells)")
     ap.add_argument("--streaming", action="store_true",
                     help="demo the epoch-chunked streaming driver (churn)")
+    ap.add_argument("--faults", action="store_true",
+                    help="demo the fault-injection degradation ladder")
     args = ap.parse_args()
 
     print("registered scenarios:", ", ".join(scenario_names()), "\n")
@@ -379,6 +462,8 @@ def main():
         multi_cell_demo(max(args.n_ues, 8))
     if args.streaming:
         streaming_demo(max(args.n_ues, 2))
+    if args.faults:
+        faults_demo(max(args.n_ues, 2))
 
 
 if __name__ == "__main__":

@@ -1,8 +1,17 @@
 from repro.checkpoint.store import (
     CheckpointManager,
+    CheckpointMismatchError,
     latest_step,
+    load_pytree,
     restore_pytree,
     save_pytree,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore_pytree", "save_pytree"]
+__all__ = [
+    "CheckpointManager",
+    "CheckpointMismatchError",
+    "latest_step",
+    "load_pytree",
+    "restore_pytree",
+    "save_pytree",
+]

@@ -33,6 +33,15 @@ import numpy as np
 _MANIFEST = "manifest.json"
 
 
+class CheckpointMismatchError(ValueError):
+    """The stored checkpoint does not match the restore template.
+
+    Raised by ``restore_pytree`` when the on-disk treedef, a leaf's shape
+    or a leaf's dtype disagrees with the template — instead of silently
+    casting (the old behaviour) or unflattening a wrong-structure tree.
+    """
+
+
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
@@ -74,20 +83,78 @@ def save_pytree(tree: Any, directory: str) -> None:
 
 
 def restore_pytree(template: Any, directory: str) -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template``.
+
+    The stored checkpoint must *match* the template: same treedef, and per
+    leaf the same shape and dtype.  Any disagreement raises
+    ``CheckpointMismatchError`` — a checkpoint written by a different
+    program must never be silently cast/reshaped into this one.
+    """
     with open(os.path.join(directory, _MANIFEST)) as f:
-        manifest = json.load(f)["leaves"]
+        stored = json.load(f)
+    manifest = stored["leaves"]
+    treedef = jax.tree_util.tree_structure(template)
+    if stored.get("treedef") is not None and stored["treedef"] != str(treedef):
+        raise CheckpointMismatchError(
+            f"checkpoint treedef mismatch in {directory}:\n"
+            f"  stored:   {stored['treedef']}\n"
+            f"  template: {treedef}"
+        )
     leaves = []
-    for i, (key, leaf) in enumerate(_leaf_paths(template)):
+    for key, leaf in _leaf_paths(template):
+        if key not in manifest:
+            raise CheckpointMismatchError(
+                f"checkpoint {directory} has no leaf {key!r}"
+            )
         meta = manifest[key]
+        t_dtype = str(leaf.dtype) if hasattr(leaf, "dtype") else str(
+            np.asarray(leaf).dtype
+        )
+        if meta["dtype"] != t_dtype:
+            raise CheckpointMismatchError(
+                f"leaf {key!r} dtype mismatch in {directory}: stored "
+                f"{meta['dtype']}, template {t_dtype}"
+            )
+        t_shape = list(np.shape(leaf))
+        # bf16 payloads are stored as same-shape uint16, so the manifest
+        # shape is directly comparable for every dtype
+        if list(meta["shape"]) != t_shape:
+            raise CheckpointMismatchError(
+                f"leaf {key!r} shape mismatch in {directory}: stored "
+                f"{meta['shape']}, template {t_shape}"
+            )
         arr = np.load(os.path.join(directory, meta["file"]))
         if meta["dtype"] == "bfloat16":
             arr = jnp.asarray(arr).view(jnp.bfloat16)
         else:
-            arr = jnp.asarray(arr, dtype=meta["dtype"])
+            arr = jnp.asarray(arr)
         leaves.append(arr)
-    treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_pytree(directory: str) -> Any:
+    """Load a checkpoint without a template, as nested dicts.
+
+    The manifest's ``a/b/c`` leaf keys rebuild a nested-``dict`` tree —
+    exact for checkpoints whose pytree was all-dicts (the streaming resume
+    state), and a plain-data view of any other checkpoint.  Leaves come
+    back as ``jnp`` arrays (bf16 restored from its uint16 payload).
+    """
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)["leaves"]
+    out: dict = {}
+    for key, meta in manifest.items():
+        arr = np.load(os.path.join(directory, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            arr = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(arr)
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
 
 
 def latest_step(root: str) -> int | None:

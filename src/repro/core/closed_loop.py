@@ -213,6 +213,13 @@ class SwitchConfig:
     ``slot % period_slots == 0`` and the register holds its value in
     between (telemetry keeps accumulating every slot).  The register defers
     application to the next boundary regardless.
+
+    ``ttl_slots`` is the fail-safe decay horizon under fault injection: a
+    UE whose decision age (slots since the last *valid* decision slot)
+    reaches it is forced to ``default_mode`` at the boundary, mirroring the
+    host ``slot_boundary`` TTL exactly.  Only enforced when the campaign
+    carries a ``FaultSpec``; a healthy loop needs ``ttl_slots >=
+    period_slots`` to never age out (the zero-fault identity contract).
     """
 
     feature_names: tuple[str, ...]
@@ -221,6 +228,7 @@ class SwitchConfig:
     period_slots: int = 1
     default_mode: int = 1
     backend: str = "auto"  # "auto" | "pallas" | "ref"
+    ttl_slots: int = 16
 
     def __post_init__(self):
         object.__setattr__(self, "feature_names", tuple(self.feature_names))
@@ -230,6 +238,8 @@ class SwitchConfig:
             raise ValueError("hysteresis_slots must be >= 1")
         if self.period_slots < 1:
             raise ValueError("period_slots must be >= 1")
+        if self.ttl_slots < 1:
+            raise ValueError("ttl_slots must be >= 1")
 
 
 class DeviceSwitchState(NamedTuple):
@@ -241,6 +251,15 @@ class DeviceSwitchState(NamedTuple):
     register (the mode that takes effect at the next boundary);
     ``streak`` counts consecutive raw decisions disagreeing with the
     register (hysteresis); ``n_switches`` counts boundary transitions.
+
+    The three fault-path leaves ride along even without a ``FaultSpec``
+    (untouched then, so XLA dead-code-eliminates them): ``decision_age``
+    counts slots since the last valid decision slot (the device twin of the
+    host ``SlotSwitchState.slots_since_decision``), ``trip_ring`` is the
+    circuit breaker's per-UE rolling trip window (width
+    ``FaultSpec.breaker_window``; 1 when no faults), and ``quarantine`` is
+    the per-UE cooldown countdown (``> 0`` == the AI expert is quarantined
+    and the UE is served by the default expert).
     """
 
     rings: KPMRing  # buf (U, W, F) / idx (U,) / count (U,)
@@ -248,13 +267,17 @@ class DeviceSwitchState(NamedTuple):
     pending_mode: jax.Array  # (U,) int32
     streak: jax.Array  # (U,) int32
     n_switches: jax.Array  # (U,) int32
+    decision_age: jax.Array  # (U,) int32
+    trip_ring: jax.Array  # (U, breaker_window) int32
+    quarantine: jax.Array  # (U,) int32
 
 
 def init_device_switch(
-    n_ues: int, n_features: int, cfg: SwitchConfig
+    n_ues: int, n_features: int, cfg: SwitchConfig, faults=None
 ) -> DeviceSwitchState:
     d = jnp.full((n_ues,), cfg.default_mode, jnp.int32)
     z = jnp.zeros((n_ues,), jnp.int32)
+    breaker_window = 1 if faults is None else faults.breaker_window
     return DeviceSwitchState(
         rings=KPMRing(
             buf=jnp.zeros((n_ues, cfg.window_slots, n_features), jnp.float32),
@@ -265,6 +288,9 @@ def init_device_switch(
         pending_mode=d,
         streak=z,
         n_switches=z,
+        decision_age=z,
+        trip_ring=jnp.zeros((n_ues, breaker_window), jnp.int32),
+        quarantine=z,
     )
 
 
@@ -275,6 +301,8 @@ def switch_update(
     cfg: SwitchConfig,
     *,
     decide: jax.Array | bool = True,
+    decision_valid: jax.Array | None = None,
+    telemetry_valid: jax.Array | None = None,
 ) -> tuple[DeviceSwitchState, jax.Array]:
     """Decision phase of slot ``n``: window push -> policy -> register.
 
@@ -289,8 +317,29 @@ def switch_update(
     slot neither advances nor resets the streak, so ``hysteresis_slots``
     counts disagreeing *decision* slots) and the raw decision reported is
     the held register.
+
+    The fault masks (``(U,)`` bool, both-or-neither) inject the
+    ``FaultSpec`` failure classes: where ``telemetry_valid`` is False the
+    slot's KPM sample never enters the rolling window (the ring simply
+    does not advance for that UE), and where ``decision_valid`` is False
+    the control plane lost this slot's decision — register, streak and raw
+    decision freeze exactly like a hold slot, and the decision age is not
+    reset.  ``decision_age`` resets on every decision slot that actually
+    arrived (valid + decide), regardless of hysteresis: a heard "stay"
+    refreshes the TTL just like the host loop's ``commit_decision``.
     """
-    rings = jax.vmap(ring_push)(state.rings, kpm_vecs)
+    pushed = jax.vmap(ring_push)(state.rings, kpm_vecs)
+    if telemetry_valid is not None:
+        tv = telemetry_valid
+        rings = jax.tree.map(
+            lambda n, o: jnp.where(
+                tv.reshape(tv.shape + (1,) * (n.ndim - 1)), n, o
+            ),
+            pushed,
+            state.rings,
+        )
+    else:
+        rings = pushed
     window = jax.vmap(lambda r: ring_window_mean(r, cfg.window_slots))(rings)
     raw = policy_infer(policy, window, state.pending_mode, backend=cfg.backend)
     agree = raw == state.pending_mode
@@ -302,19 +351,87 @@ def switch_update(
         raw = jnp.where(decide, raw, state.pending_mode)
         pending = jnp.where(decide, pending, state.pending_mode)
         streak = jnp.where(decide, streak, state.streak)
+    age = state.decision_age
+    if decision_valid is not None:
+        dv = decision_valid
+        raw = jnp.where(dv, raw, state.pending_mode)
+        pending = jnp.where(dv, pending, state.pending_mode)
+        streak = jnp.where(dv, streak, state.streak)
+        received = dv if decide is True else jnp.logical_and(dv, decide)
+        age = jnp.where(received, 0, age)
     return (
-        state._replace(rings=rings, pending_mode=pending, streak=streak),
+        state._replace(
+            rings=rings, pending_mode=pending, streak=streak,
+            decision_age=age,
+        ),
         raw,
     )
 
 
-def switch_boundary(state: DeviceSwitchState) -> DeviceSwitchState:
-    """Boundary into slot ``n+1``: the register becomes the active mode."""
-    switched = (state.pending_mode != state.active_mode).astype(jnp.int32)
+def switch_boundary(
+    state: DeviceSwitchState,
+    *,
+    ttl_slots: int | None = None,
+    fail_safe_mode: int | None = None,
+) -> DeviceSwitchState:
+    """Boundary into slot ``n+1``: the register becomes the active mode.
+
+    With ``ttl_slots`` (fault campaigns only) the boundary also runs the
+    fail-safe TTL decay, mirroring the host ``slot_boundary`` exactly: a
+    UE whose decision age has *reached* ``ttl_slots`` (checked before the
+    age increments) has both its active mode and its register forced to
+    ``fail_safe_mode``; the age then advances one slot for everyone.
+    """
+    pending = state.pending_mode
+    age = state.decision_age
+    if ttl_slots is not None:
+        stale = age >= jnp.int32(ttl_slots)
+        pending = jnp.where(stale, jnp.int32(fail_safe_mode), pending)
+        age = age + 1
+    switched = (pending != state.active_mode).astype(jnp.int32)
     return state._replace(
-        active_mode=state.pending_mode,
+        active_mode=pending,
+        pending_mode=pending,
+        decision_age=age,
         n_switches=state.n_switches + switched,
     )
+
+
+def breaker_update(
+    state: DeviceSwitchState,
+    trip: jax.Array,
+    slot_idx: jax.Array,
+    faults,
+) -> DeviceSwitchState:
+    """Circuit breaker: M trips in a window quarantine the AI expert.
+
+    ``trip (U,)`` bool flags this slot's health-screen / audit trips.  The
+    per-UE trip window is a rolling ring written at ``slot_idx %
+    breaker_window``; when a UE not already quarantined accumulates
+    ``breaker_trips`` trips inside the window, it enters quarantine for
+    ``breaker_cooldown`` slots *with a cleared trip window* — so the
+    hysteresis re-probe after cooldown starts from a clean slate rather
+    than instantly re-tripping on stale history.  While quarantined the
+    countdown decrements; the AI expert is re-probed the first slot the
+    countdown hits zero.
+    """
+    window = state.trip_ring.shape[1]
+    onehot = jnp.arange(window) == (slot_idx % jnp.int32(window))
+    ring = jnp.where(
+        onehot[None, :], trip.astype(jnp.int32)[:, None], state.trip_ring
+    )
+    count = ring.sum(axis=1)
+    in_quar = state.quarantine > 0
+    newly = jnp.logical_and(
+        jnp.logical_not(in_quar), count >= jnp.int32(faults.breaker_trips)
+    )
+    ring = jnp.where(newly[:, None], 0, ring)
+    quar = jnp.where(
+        newly,
+        jnp.int32(faults.breaker_cooldown),
+        jnp.maximum(state.quarantine - 1, 0),
+    )
+    return state._replace(trip_ring=ring, quarantine=quar)
 
 
 # -- host equivalence oracle ---------------------------------------------------
@@ -327,6 +444,8 @@ def host_replay_closed_loop(
     *,
     policy_idx=None,
     attached: np.ndarray | None = None,
+    faults=None,
+    trips: np.ndarray | None = None,
 ) -> dict[str, np.ndarray]:
     """Replay the closed loop on host, slot by slot, per UE.
 
@@ -353,8 +472,21 @@ def host_replay_closed_loop(
     post-attach decision — the churn-boundary tests pin this at ring,
     ``DeviceSwitchState`` and host-replay layers.
 
-    Returns ``{"active_mode", "raw_decision", "pending_mode", "n_switches"}``
-    with ``(S, U)`` int arrays (``n_switches``: ``(U,)``).
+    Fault campaigns replay by passing the same ``FaultSpec`` the device
+    ran (``faults``): the spec is re-resolved here, producing the *same*
+    mask arrays the scan consumed (the resolution is a pure function of
+    the spec and the shape), and the oracle mirrors the device ordering —
+    drop the KPM push where telemetry is invalid, hold the register where
+    the decision was lost, reset the decision age on heard decision slots,
+    run the TTL decay and the circuit breaker at the boundary.  ``trips``
+    optionally supplies the device history's per-(slot, UE) health/audit
+    trip flags (``health_tripped + audit_tripped``) to drive the breaker;
+    without it the oracle derives trips from the corruption masks (exact
+    for the NaN/Inf kinds, which always trip the in-scan health screen).
+
+    Returns ``{"active_mode", "raw_decision", "pending_mode",
+    "quarantined", "n_switches"}`` with ``(S, U)`` int arrays
+    (``n_switches``: ``(U,)``).
     """
     from repro.core.policy import ThresholdPolicy
     from repro.core.telemetry import ring_init
@@ -392,14 +524,32 @@ def host_replay_closed_loop(
                 f"attached {attached.shape} vs features {(n_slots, n_ues)}"
             )
 
+    resolved = None
+    if faults is not None:
+        resolved = faults.resolve(n_slots, n_ues)
+    if trips is not None:
+        trips = np.asarray(trips).astype(bool)
+        if trips.shape != (n_slots, n_ues):
+            raise ValueError(
+                f"trips {trips.shape} vs features {(n_slots, n_ues)}"
+            )
+
     rings = [ring_init(cfg.window_slots, n_feat) for _ in range(n_ues)]
     active = [cfg.default_mode] * n_ues
     pending = [cfg.default_mode] * n_ues
     streak = [0] * n_ues
     n_switches = [0] * n_ues
+    age = [0] * n_ues
+    trip_ring = (
+        np.zeros((n_ues, faults.breaker_window), np.int32)
+        if faults is not None
+        else None
+    )
+    quarantine = [0] * n_ues
     active_hist = np.zeros((n_slots, n_ues), np.int32)
     raw_hist = np.zeros((n_slots, n_ues), np.int32)
     pending_hist = np.zeros((n_slots, n_ues), np.int32)
+    quar_hist = np.zeros((n_slots, n_ues), np.int32)
 
     for s in range(n_slots):
         for u in range(n_ues):
@@ -410,20 +560,34 @@ def host_replay_closed_loop(
                     active_hist[s, u] = -1
                     raw_hist[s, u] = -1
                     pending_hist[s, u] = -1
+                    quar_hist[s, u] = -1
                     continue
                 if s == 0 or not attached[s - 1, u]:
                     # (re)attach cold start, mirroring the device
                     # admission pass: fresh ring, default register,
-                    # cleared hysteresis streak
+                    # cleared hysteresis streak — and a clean fault
+                    # state (age, trip window, quarantine)
                     rings[u] = ring_init(cfg.window_slots, n_feat)
                     active[u] = cfg.default_mode
                     pending[u] = cfg.default_mode
                     streak[u] = 0
+                    age[u] = 0
+                    quarantine[u] = 0
+                    if trip_ring is not None:
+                        trip_ring[u] = 0
+            in_quar = quarantine[u] > 0
             active_hist[s, u] = active[u]
-            rings[u] = ring_push(rings[u], jnp.asarray(features[s, u]))
+            quar_hist[s, u] = 1 if in_quar else 0
+            if resolved is None or resolved.telemetry_valid[s, u]:
+                rings[u] = ring_push(rings[u], jnp.asarray(features[s, u]))
             window = ring_window_mean(rings[u], cfg.window_slots)
-            if s % cfg.period_slots != 0:
-                # hold slot: register and streak frozen, held raw reported
+            decide = s % cfg.period_slots == 0
+            heard = decide and (
+                resolved is None or resolved.decision_valid[s, u]
+            )
+            if not heard:
+                # hold / lost-decision slot: register and streak frozen,
+                # held raw reported, decision age keeps aging
                 raw = pending[u]
             else:
                 pol = policy_for_ue[u]
@@ -438,16 +602,49 @@ def host_replay_closed_loop(
                     if streak[u] >= cfg.hysteresis_slots:
                         pending[u] = raw
                         streak[u] = 0
+                if resolved is not None:
+                    age[u] = 0  # a heard decision refreshes the TTL
             raw_hist[s, u] = raw
             pending_hist[s, u] = pending[u]
-            # boundary into slot s+1
-            if pending[u] != active[u]:
+            # boundary into slot s+1 (with the TTL decay under faults)
+            nxt = pending[u]
+            if resolved is not None:
+                if age[u] >= cfg.ttl_slots:
+                    nxt = cfg.default_mode
+                    pending[u] = cfg.default_mode
+                age[u] += 1
+            if nxt != active[u]:
                 n_switches[u] += 1
-            active[u] = pending[u]
+            active[u] = nxt
+            if resolved is not None:
+                # circuit breaker: this slot's health/audit trip enters
+                # the rolling window; M trips quarantine the AI expert
+                if trips is not None:
+                    trip = bool(trips[s, u])
+                else:
+                    exec_mode = cfg.default_mode if in_quar else (
+                        active_hist[s, u]
+                    )
+                    trip = bool(
+                        resolved.corrupt[s, u]
+                        and exec_mode == 0
+                        and faults.corruption_kind in ("nan", "inf")
+                    )
+                trip_ring[u, s % faults.breaker_window] = int(trip)
+                newly = (
+                    not in_quar
+                    and int(trip_ring[u].sum()) >= faults.breaker_trips
+                )
+                if newly:
+                    trip_ring[u] = 0
+                    quarantine[u] = faults.breaker_cooldown
+                else:
+                    quarantine[u] = max(quarantine[u] - 1, 0)
 
     return {
         "active_mode": active_hist,
         "raw_decision": raw_hist,
         "pending_mode": pending_hist,
+        "quarantined": quar_hist,
         "n_switches": np.asarray(n_switches, np.int32),
     }

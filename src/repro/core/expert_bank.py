@@ -134,6 +134,10 @@ class BankOutput:
     # NMSE audit vs the dense fail-safe baseline, so the baseline was kept.
     # The expert still *executed* for the UE (cost accounting counts it).
     audit_tripped: jax.Array | None = None
+    # fail-safe baseline output (pytree of (n_ues, ...) leaves; batched calls
+    # only): the densely-run default expert's output, the revert target for
+    # the in-scan health screen (fault injection) and the NMSE audit.
+    baseline: Any = None
 
 
 class ExpertBank:
@@ -245,6 +249,7 @@ class ExpertBank:
             mode=mode,
             executed_ue=n_served,
             served_by=mode if mode.ndim == 1 else None,
+            baseline=outputs[self.default_mode] if mode.ndim == 1 else None,
         )
 
     def _run_selected(self, mode: jax.Array, *inputs) -> BankOutput:
@@ -266,6 +271,7 @@ class ExpertBank:
                 mode=mode,
                 executed_ue=jnp.full((self.n_experts,), mode.shape[0], jnp.int32),
                 served_by=mode,
+                baseline=outputs[self.default_mode],
             )
         branches = [
             (lambda e: (lambda *xs: e.fn(e.params, *xs)))(e) for e in self.experts
@@ -366,6 +372,7 @@ class ExpertBank:
             served_by=served_by,
             overflow=overflow,
             audit_tripped=audit_tripped,
+            baseline=base,
         )
 
     # ---- static cost model (drives the energy/utilization proxy) ----

@@ -175,10 +175,10 @@ class BatchedRunHistory:
         entries (mode sentinel ``-1``) are neither served nor offered
         service, so they belong in neither numerator nor denominator."""
         served = self.modes == 0
-        if "gated_overflow" in self.outputs:
-            served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
-        if "audit_tripped" in self.outputs:
-            served = served & (np.asarray(self.outputs["audit_tripped"]) == 0)
+        for fell_back in ("gated_overflow", "audit_tripped",
+                          "health_tripped", "quarantined"):
+            if fell_back in self.outputs:
+                served = served & (np.asarray(self.outputs[fell_back]) == 0)
         if self.attached is not None:
             att = np.asarray(self.attached, bool)
             return float(served[att].mean()) if att.any() else 0.0
@@ -205,6 +205,24 @@ class BatchedRunHistory:
         if "audit_tripped" not in self.outputs:
             return 0
         return int(np.asarray(self.outputs["audit_tripped"]).sum())
+
+    @property
+    def health_tripped_slot_ues(self) -> int:
+        """Total ``isfinite`` health-screen fail-safe events (fault-injected
+        runs; else 0): slot-UEs whose AI-expert output went non-finite and
+        was reverted to the fail-safe baseline that slot."""
+        if "health_tripped" not in self.outputs:
+            return 0
+        return int(np.asarray(self.outputs["health_tripped"]).sum())
+
+    @property
+    def quarantined_slot_ues(self) -> int:
+        """Total circuit-breaker quarantine slot-UEs (fault-injected runs;
+        else 0): slot-UEs that started the slot under quarantine and were
+        served by the default expert regardless of their committed mode."""
+        if "quarantined" not in self.outputs:
+            return 0
+        return int((np.asarray(self.outputs["quarantined"]) > 0).sum())
 
     def resident_ues_per_slot(self) -> np.ndarray:
         """Per-slot resident UE count ((S,) int64; full bank if no churn)."""
@@ -243,8 +261,10 @@ class BatchedRunHistory:
         """
         cells = self._cells()
         served = self.modes == 0
-        if "gated_overflow" in self.outputs:
-            served = served & (np.asarray(self.outputs["gated_overflow"]) == 0)
+        for fell_back in ("gated_overflow", "audit_tripped",
+                          "health_tripped", "quarantined"):
+            if fell_back in self.outputs:
+                served = served & (np.asarray(self.outputs[fell_back]) == 0)
         if self.attached is not None:
             att = np.asarray(self.attached, bool)
             return np.asarray([
@@ -515,6 +535,7 @@ class ArchesRuntime:
         key=None,
         ue_keys=None,
         replay_telemetry: bool = False,
+        faults=None,
     ) -> BatchedRunHistory:
         """Closed-loop batched campaign: device-decided modes, one scan.
 
@@ -522,7 +543,8 @@ class ArchesRuntime:
         mode grid (plus raw decisions and per-UE switch counts) into a
         ``BatchedRunHistory``; with ``replay_telemetry=True`` the campaign's
         KPMs are pushed through the E3 agent post-run so host-side dApp
-        subscriptions observe the campaign unchanged.
+        subscriptions observe the campaign unchanged.  ``faults`` (a
+        ``FaultSpec``) arms the in-scan degradation ladder.
         """
         if not self.closed_loop:
             raise RuntimeError("run_batched requires closed_loop=True")
@@ -534,6 +556,7 @@ class ArchesRuntime:
             n_ues=n_ues,
             key=key,
             ue_keys=ue_keys,
+            faults=faults,
         )
         if replay_telemetry and self.agent is not None:
             replay_batched_telemetry(self.agent, traj)

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.closed_loop import SwitchConfig, per_ue_policy
 from repro.core.expert_bank import ExecutionMode, coerce_enum
+from repro.core.faults import FaultSpec
 from repro.core.runtime import (
     ArchesRuntime,
     BatchedRunHistory,
@@ -208,7 +209,9 @@ class SwitchSpec:
     period_slots: int = 1
     default_mode: int = 1
     backend: str = "auto"
-    ttl_slots: int = 16  # host loop only: fail-safe decay
+    # fail-safe decay horizon: the host loop's SlotSwitchState TTL, and —
+    # under a FaultSpec — the device decision-age counter's decay threshold
+    ttl_slots: int = 16
 
     def to_config(self, feature_names: Sequence[str]) -> SwitchConfig:
         return SwitchConfig(
@@ -218,6 +221,7 @@ class SwitchSpec:
             period_slots=self.period_slots,
             default_mode=self.default_mode,
             backend=self.backend,
+            ttl_slots=self.ttl_slots,
         )
 
 
@@ -242,6 +246,13 @@ class CampaignSpec:
     becomes the bank capacity, the UE axis of the history becomes the
     schedule's stable-id universe, and ``run()`` dispatches to
     ``ArchesSession.run_streaming``.
+
+    ``faults`` (a ``repro.core.faults.FaultSpec`` or its dict form) injects
+    control-plane decision loss, expert-output corruption and telemetry
+    loss into the device paths (batched / gated / closed loop, monolithic
+    or streaming), arming the in-scan degradation ladder: TTL fail-safe
+    decay, ``isfinite`` health screen + circuit breaker, and rolling-window
+    masking.  A zero-fault spec is bitwise-identical to ``faults=None``.
     """
 
     path: str = "batched"
@@ -262,6 +273,8 @@ class CampaignSpec:
     topology: TopologySpec | None = None
     # attach/detach schedule (None == monolithic fixed-grid campaign)
     churn: ChurnSchedule | None = None
+    # fault-injection campaign (None == happy path, no fault machinery)
+    faults: FaultSpec | None = None
 
     def __post_init__(self):
         # normalize an enum member to its JSON-stable string value
@@ -277,6 +290,12 @@ class CampaignSpec:
         ):
             object.__setattr__(
                 self, "churn", ChurnSchedule(**dict(self.churn))
+            )
+        if self.faults is not None and not isinstance(
+            self.faults, FaultSpec
+        ):
+            object.__setattr__(
+                self, "faults", FaultSpec(**dict(self.faults))
             )
         for name in ("scenario_args", "policies", "feature_names"):
             object.__setattr__(self, name, _tuplify(getattr(self, name)))
@@ -370,6 +389,17 @@ class CampaignSpec:
                     1 if self.topology is None else self.topology.n_cells
                 ),
             )
+        if self.faults is not None and path not in (
+            ExecutionPath.BATCHED,
+            ExecutionPath.GATED,
+            ExecutionPath.CLOSED_LOOP,
+        ):
+            raise ValueError(
+                f"fault injection targets the device scan; "
+                f"path={self.path!r} has no in-scan fault machinery (the "
+                "host loop models dApp failure via DApp.fail(), the "
+                "perturbed sweep is MMSE-only)"
+            )
 
     # -- derived views --------------------------------------------------------
 
@@ -401,6 +431,10 @@ class CampaignSpec:
             d["churn"], ChurnSchedule
         ):
             d["churn"] = ChurnSchedule(**d["churn"])
+        if d.get("faults") is not None and not isinstance(
+            d["faults"], FaultSpec
+        ):
+            d["faults"] = FaultSpec.from_dict(d["faults"])
         if "policies" in d:
             d["policies"] = tuple(
                 p if isinstance(p, PolicySpec) else PolicySpec(**p)
@@ -746,15 +780,30 @@ class ArchesSession:
             [hist.kpms[n] for n in spec.feature_names], axis=-1
         ).astype(np.float32)
         sw_cfg = spec.switch.to_config(spec.feature_names)
+        trips = None
+        if spec.faults is not None:
+            # the device's recorded health/audit trips feed the oracle's
+            # circuit breaker — the trip *predicate* runs on device (it
+            # needs the expert outputs); the breaker state machine replays
+            # on the host from the recorded trip record
+            trips = np.zeros(hist.modes.shape, bool)
+            for k in ("health_tripped", "audit_tripped"):
+                if k in hist.outputs:
+                    trips |= np.asarray(hist.outputs[k]) > 0
+        attached = getattr(hist, "attached", None)
         if len(self.host_policies) == 1 and spec.policy_assignment is None:
-            return host_replay_closed_loop(self.host_policies[0], feats, sw_cfg)
+            return host_replay_closed_loop(
+                self.host_policies[0], feats, sw_cfg,
+                faults=spec.faults, trips=trips, attached=attached,
+            )
         assignment = (
             spec.policy_assignment
             if spec.policy_assignment is not None
             else (0,) * spec.n_ues
         )
         return host_replay_closed_loop(
-            list(self.host_policies), feats, sw_cfg, policy_idx=assignment
+            list(self.host_policies), feats, sw_cfg, policy_idx=assignment,
+            faults=spec.faults, trips=trips, attached=attached,
         )
 
     # -- execution -------------------------------------------------------------
@@ -868,7 +917,14 @@ class ArchesSession:
             runner = self._run_open_loop
         return dataclasses.replace(runner(), provisioned_capacity=cap)
 
-    def run_streaming(self, churn=None) -> BatchedRunHistory:
+    def run_streaming(
+        self,
+        churn=None,
+        *,
+        checkpoint_dir=None,
+        resume_from=None,
+        max_segments=None,
+    ) -> BatchedRunHistory:
         """Epoch-chunked streaming campaign: attach/detach under churn.
 
         Executes the compiled scan in fixed-length segments over the
@@ -880,6 +936,13 @@ class ArchesSession:
         components (AI params, engine, trained policies) — the compiled
         segment program depends only on shapes, not on the schedule.
 
+        Crash resumability: ``checkpoint_dir`` snapshots the scan carry +
+        UE bank + host accumulators atomically after every completed
+        segment; ``resume_from`` restarts from the latest complete
+        checkpoint in that directory, bitwise-equal to the uninterrupted
+        run.  ``max_segments`` stops early after that many segments (the
+        deterministic kill hook the resume tests use).
+
         Returns a ``BatchedRunHistory`` on the *stable-id* axis: detached
         slot-UEs carry the ``-1`` mode sentinel and zeroed KPMs/outputs,
         and the ``attached`` / ``bank_slot`` leaves record residency and
@@ -887,6 +950,11 @@ class ArchesSession:
         """
         from repro.core import streaming
 
+        kw = dict(
+            checkpoint_dir=checkpoint_dir,
+            resume_from=resume_from,
+            max_segments=max_segments,
+        )
         if churn is not None:
             if not isinstance(churn, streaming.ChurnSchedule):
                 churn = streaming.ChurnSchedule(**dict(churn))
@@ -898,13 +966,13 @@ class ArchesSession:
                     host_policies=self._host_policies,
                     engine=self._engine,
                 )
-                return streaming.run_streaming(fresh)
+                return streaming.run_streaming(fresh, **kw)
         if self.spec.churn is None:
             raise ValueError(
                 "run_streaming needs a ChurnSchedule: set spec.churn or "
                 "pass churn=..."
             )
-        return streaming.run_streaming(self)
+        return streaming.run_streaming(self, **kw)
 
     def _run_host(self) -> BatchedRunHistory:
         from repro.core.dapp import DApp, connect_dapp
@@ -956,6 +1024,7 @@ class ArchesSession:
                 modes,
                 n_slots=spec.n_slots,
                 key=jax.random.PRNGKey(spec.seed),
+                faults=spec.faults,
             )
         else:
             _, traj = self.engine.run(
@@ -964,6 +1033,7 @@ class ArchesSession:
                 n_slots=spec.n_slots,
                 n_ues=spec.n_ues,
                 key=jax.random.PRNGKey(spec.seed),
+                faults=spec.faults,
             )
         return BatchedRunHistory.from_trajectory(
             modes, traj, cell_of_ue=self._cells
@@ -982,6 +1052,7 @@ class ArchesSession:
                 spec.switch.to_config(spec.feature_names),
                 n_slots=spec.n_slots,
                 key=jax.random.PRNGKey(spec.seed),
+                faults=spec.faults,
             )
             return BatchedRunHistory.from_closed_loop(
                 traj, final_switch, cell_of_ue=self._cells
@@ -994,6 +1065,7 @@ class ArchesSession:
             n_slots=spec.n_slots,
             n_ues=spec.n_ues,
             key=jax.random.PRNGKey(spec.seed),
+            faults=spec.faults,
         )
 
     def _run_perturbed(self) -> BatchedRunHistory:

@@ -280,7 +280,58 @@ def _scatter_segment(full, seg_arr, t0, ids, slots):
     full[t0:t0 + seg_arr.shape[0], ids] = np.asarray(seg_arr)[:, slots]
 
 
-def run_streaming(session) -> "object":
+def _streaming_ckpt_state(
+    *, next_seg, spec_fp, occupant, link, sw, modes_full, bank_slot_full,
+    decisions_full, n_switches_id, kpms_full, outputs_full,
+):
+    """The crash-resume snapshot as an all-dict pytree (checkpoint-stable).
+
+    Everything the segment loop carries across a boundary: the device scan
+    carry (link + switch state as plain dicts of their NamedTuple fields),
+    the UE bank occupancy, and the host-side accumulators.  All-dict so the
+    templateless ``load_pytree`` rebuilds it exactly from the manifest.
+    """
+    state = {
+        "meta": {
+            # x64 is off, so 64-bit leaves would silently truncate on the
+            # jnp round-trip — the fingerprint ships as two uint32 halves
+            "next_seg": np.int32(next_seg),
+            "spec_fp_hi": np.uint32(spec_fp >> 32),
+            "spec_fp_lo": np.uint32(spec_fp & 0xFFFFFFFF),
+        },
+        "occupant": np.asarray(occupant),
+        "link": dict(link._asdict()),
+        "modes_full": modes_full,
+        "bank_slot_full": bank_slot_full,
+        "kpms_full": dict(kpms_full),
+        "outputs_full": dict(outputs_full),
+    }
+    if sw is not None:
+        sw_d = dict(sw._asdict())
+        # the telemetry ring is itself a NamedTuple — expand it so the
+        # snapshot stays an all-dict tree (templateless reload rebuilds
+        # nested dicts, not NamedTuples)
+        sw_d["rings"] = dict(sw.rings._asdict())
+        state["sw"] = sw_d
+        state["decisions_full"] = decisions_full
+        state["n_switches_id"] = n_switches_id
+    return state
+
+
+def _spec_fingerprint(spec) -> int:
+    """64-bit view of ``spec_hash`` (checkpointable as a uint64 leaf)."""
+    from repro.core.session import spec_hash
+
+    return int(spec_hash(spec), 16) & 0xFFFFFFFFFFFFFFFF
+
+
+def run_streaming(
+    session,
+    *,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
+    max_segments: int | None = None,
+) -> "object":
     """Execute an epoch-chunked streaming campaign; one compiled segment.
 
     The driver: validate churn -> resolve the scenario over the *stable-id*
@@ -293,6 +344,17 @@ def run_streaming(session) -> "object":
 
     Because segment shapes are fixed and ``slot0``/``active`` are traced,
     every segment reuses one compiled program per execution path.
+
+    Crash resumability: with ``checkpoint_dir`` the driver snapshots the
+    scan carry + UE bank + host accumulators through the atomic
+    ``repro.checkpoint.store`` after *every completed segment*;
+    ``resume_from`` restarts from the latest complete checkpoint in that
+    directory and — because each segment is a pure function of the
+    checkpointed state and the (deterministic) schedule — the resumed run
+    is bitwise-equal to the uninterrupted one on every history leaf.
+    ``max_segments`` stops after that many segments this call (the
+    deterministic kill hook: the returned history covers only the slots
+    run so far; later segments keep their detached fill values).
     """
     from repro.core.closed_loop import init_device_switch
     from repro.core.runtime import BatchedRunHistory
@@ -326,6 +388,11 @@ def run_streaming(session) -> "object":
     n_ids, n_slots = churn.n_ue_ids, spec.n_slots
     seg = churn.segment_slots
     res = churn.validate(n_slots, capacity, n_cells=n_cells)
+
+    # fault masks live on the stable-id axis (a UE's fault stream follows
+    # its identity through re-packs); segments column-gather by occupant
+    faults = spec.faults
+    rf = None if faults is None else faults.resolve(n_slots, n_ids)
 
     engine = session.engine
     profile, params = resolve_schedule(
@@ -364,27 +431,30 @@ def run_streaming(session) -> "object":
             scan_fn = _cached_jit(
                 topo,
                 (engine, "streaming_closed", profile, sw_cfg,
-                 jax.tree.structure(policy)),
+                 jax.tree.structure(policy), faults),
                 lambda: streaming_closed_loop_fn(
-                    engine, topo, profile, sw_cfg, policy
+                    engine, topo, profile, sw_cfg, policy, faults=faults
                 ),
             )
         else:
             scan_fn = _cached_jit(
-                topo, (engine, "streaming_open", profile),
-                lambda: streaming_open_loop_fn(engine, topo, profile),
+                topo, (engine, "streaming_open", profile, faults),
+                lambda: streaming_open_loop_fn(
+                    engine, topo, profile, faults=faults
+                ),
             )
         cell_of_slot = jnp.asarray(topo.cell_of_ue)
         cell_params = topo.cell_params
 
+    def cold_switch():
+        return init_device_switch(
+            capacity, len(sw_cfg.feature_names), sw_cfg, faults
+        )
+
     # bank state
     occupant = np.full(capacity, -1, np.int64)
     link = init_device_link(capacity)
-    sw = (
-        init_device_switch(capacity, len(sw_cfg.feature_names), sw_cfg)
-        if closed
-        else None
-    )
+    sw = cold_switch() if closed else None
 
     # full-campaign accumulators on the stable-id axis
     modes_full = np.full((n_slots, n_ids), -1, np.int32)
@@ -396,17 +466,67 @@ def run_streaming(session) -> "object":
     kpms_full: dict[str, np.ndarray] = {}
     outputs_full: dict[str, np.ndarray] = {}
 
-    for t0 in range(0, n_slots, seg):
+    # -- crash resume: restore the whole loop state from the latest
+    # complete checkpoint, then continue exactly where it left off -------
+    spec_fp = _spec_fingerprint(spec)
+    start_seg = 0
+    mgr = None
+    if checkpoint_dir is not None or resume_from is not None:
+        from repro.checkpoint.store import (
+            CheckpointManager,
+            CheckpointMismatchError,
+            latest_step,
+            load_pytree,
+        )
+    if resume_from is not None:
+        step = latest_step(resume_from)
+        if step is None:
+            raise FileNotFoundError(
+                f"resume_from={resume_from!r} holds no complete checkpoint"
+            )
+        saved = load_pytree(
+            CheckpointManager(resume_from, save_every=1).dir_for(step)
+        )
+        saved_fp = (int(saved["meta"]["spec_fp_hi"]) << 32) | int(
+            saved["meta"]["spec_fp_lo"]
+        )
+        if saved_fp != spec_fp:
+            raise CheckpointMismatchError(
+                f"checkpoint in {resume_from!r} was written by a different "
+                "campaign spec — refusing to resume"
+            )
+        start_seg = int(saved["meta"]["next_seg"])
+        occupant = np.asarray(saved["occupant"])
+        link = type(link)(
+            **{k: jnp.asarray(v) for k, v in saved["link"].items()}
+        )
+        if closed:
+            sw_saved = dict(saved["sw"])
+            rings = type(sw.rings)(
+                **{k: jnp.asarray(v) for k, v in sw_saved.pop("rings").items()}
+            )
+            sw = type(sw)(
+                rings=rings,
+                **{k: jnp.asarray(v) for k, v in sw_saved.items()},
+            )
+            decisions_full = np.array(saved["decisions_full"])
+            n_switches_id = np.array(saved["n_switches_id"])
+        modes_full = np.array(saved["modes_full"])
+        bank_slot_full = np.array(saved["bank_slot_full"])
+        kpms_full = {k: np.array(v) for k, v in saved["kpms_full"].items()}
+        outputs_full = {
+            k: np.array(v) for k, v in saved["outputs_full"].items()
+        }
+    if checkpoint_dir is not None:
+        mgr = CheckpointManager(checkpoint_dir, save_every=1)
+
+    segs_run = 0
+    for t0 in range(start_seg * seg, n_slots, seg):
         new_occupant = repack_bank(occupant, res[t0], n_cells=n_cells)
         perm = gather_permutation(occupant, new_occupant)
         link = gather_state_rows(link, perm, init_device_link(capacity))
         if closed:
-            sw = gather_state_rows(
-                sw, perm,
-                init_device_switch(
-                    capacity, len(sw_cfg.feature_names), sw_cfg
-                ),
-            )
+            sw = gather_state_rows(sw, perm, cold_switch())
             nsw_base = np.asarray(sw.n_switches)
         occupant = new_occupant
         occ_c = np.maximum(occupant, 0)
@@ -423,17 +543,31 @@ def run_streaming(session) -> "object":
         )
         active = jnp.asarray(occupied)
         slot0 = jnp.int32(t0)
+        if rf is not None:
+            # a segment's fault masks follow occupant identity into slots
+            fault_seg = tuple(
+                jnp.asarray(m[t0:t0 + seg][:, occ_c])
+                for m in (rf.decision_valid, rf.corrupt, rf.telemetry_valid)
+            )
+            corrupt_seg = fault_seg[1]
 
         if closed:
             if topo is None:
                 link, sw, traj = engine._run_closed_scan(
                     profile, sw_cfg, link, sw, keys_seg, params_seg,
                     policy, slot0=slot0, active=active,
+                    faults=faults,
+                    fault_masks=None if rf is None else fault_seg,
+                )
+            elif rf is None:
+                link, sw, traj = scan_fn(
+                    link, sw, keys_seg, params_seg, policy,
+                    cell_of_slot, cell_params, slot0, active,
                 )
             else:
                 link, sw, traj = scan_fn(
                     link, sw, keys_seg, params_seg, policy,
-                    cell_of_slot, cell_params, slot0, active,
+                    cell_of_slot, cell_params, slot0, active, fault_seg,
                 )
         else:
             modes_seg = jnp.asarray(modes_grid[t0:t0 + seg][:, occ_c])
@@ -441,11 +575,18 @@ def run_streaming(session) -> "object":
                 link, traj = engine._run_scan(
                     profile, link, keys_seg, modes_seg, params_seg,
                     slot0=slot0, active=active,
+                    faults=faults,
+                    corrupt=None if rf is None else corrupt_seg,
+                )
+            elif rf is None:
+                link, traj = scan_fn(
+                    link, keys_seg, modes_seg, params_seg,
+                    cell_of_slot, cell_params, slot0, active,
                 )
             else:
                 link, traj = scan_fn(
                     link, keys_seg, modes_seg, params_seg,
-                    cell_of_slot, cell_params, slot0, active,
+                    cell_of_slot, cell_params, slot0, active, corrupt_seg,
                 )
 
         # -- host-side assembly on the stable-id axis ---------------------
@@ -478,6 +619,29 @@ def run_streaming(session) -> "object":
         else:
             _scatter_segment(modes_full, modes_seg, t0, ids_b, slots_b)
         bank_slot_full[t0:t0 + seg, ids_b] = slots_b[None, :]
+
+        seg_idx = t0 // seg
+        if mgr is not None:
+            mgr.maybe_save(
+                seg_idx + 1,
+                _streaming_ckpt_state(
+                    next_seg=seg_idx + 1,
+                    spec_fp=spec_fp,
+                    occupant=occupant,
+                    link=link,
+                    sw=sw,
+                    modes_full=modes_full,
+                    bank_slot_full=bank_slot_full,
+                    decisions_full=decisions_full,
+                    n_switches_id=n_switches_id,
+                    kpms_full=kpms_full,
+                    outputs_full=outputs_full,
+                ),
+                force=True,
+            )
+        segs_run += 1
+        if max_segments is not None and segs_run >= max_segments:
+            break
 
     return BatchedRunHistory(
         modes=modes_full,

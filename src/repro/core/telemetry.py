@@ -72,6 +72,8 @@ EXECUTION_COST_KPMS: tuple[str, ...] = (
     "executed_flops",
     "gated_overflow",
     "audit_tripped",
+    "health_tripped",
+    "quarantined",
 )
 
 

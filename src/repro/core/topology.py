@@ -278,20 +278,37 @@ def _policy_spec(policy):
     return jax.tree.map(lambda _: P(), policy)
 
 
-def open_loop_fn(engine, topo: CellTopology, profile, *, sharded: bool = True):
+def open_loop_fn(
+    engine, topo: CellTopology, profile, *, sharded: bool = True, faults=None
+):
     """The (shard_map-wrapped) open-loop scan callable.
 
     Exposed separately from ``run_sharded`` so tests can inspect its jaxpr
     / lowered HLO for the collective contract (one psum for the cell mean,
-    no gathers in the compaction path).
+    no gathers in the compaction path).  With a ``FaultSpec`` the callable
+    grows a ``corrupt`` mask operand (``(S, U)``, sharded over its UEs —
+    fault masking is element-local, no new collective).
     """
     axis = UE_AXIS if sharded else None
 
-    def call(link0, ue_keys, modes, params, cell_of_ue, cell_params):
-        return engine._run_scan(
-            profile, link0, ue_keys, modes, params,
-            cell_of_ue, cell_params, cell_axis=axis,
-        )
+    if faults is None:
+        def call(link0, ue_keys, modes, params, cell_of_ue, cell_params):
+            return engine._run_scan(
+                profile, link0, ue_keys, modes, params,
+                cell_of_ue, cell_params, cell_axis=axis,
+            )
+
+        extra_specs = ()
+    else:
+        def call(link0, ue_keys, modes, params, cell_of_ue, cell_params,
+                 corrupt):
+            return engine._run_scan(
+                profile, link0, ue_keys, modes, params,
+                cell_of_ue, cell_params, cell_axis=axis,
+                faults=faults, corrupt=corrupt,
+            )
+
+        extra_specs = (P(None, UE_AXIS),)
 
     if not sharded:
         return call
@@ -299,7 +316,7 @@ def open_loop_fn(engine, topo: CellTopology, profile, *, sharded: bool = True):
         call,
         mesh=topo.mesh,
         in_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS), P(None, UE_AXIS),
-                  P(UE_AXIS), P()),
+                  P(UE_AXIS), P()) + extra_specs,
         out_specs=(P(UE_AXIS), P(None, UE_AXIS)),
         check_rep=False,
     )
@@ -315,11 +332,12 @@ def run_sharded(
     key=None,
     ue_keys=None,
     sharded: bool = True,
+    faults=None,
 ):
     """Open-loop campaign over the sharded topology.
 
     The sharded analogue of ``BatchedPuschPipeline.run`` (scan path): same
-    schedule/modes/key semantics; ``(final_link, trajectory)`` out.
+    schedule/modes/key/faults semantics; ``(final_link, trajectory)`` out.
     """
     from repro.phy.pipeline import normalize_modes
 
@@ -328,27 +346,54 @@ def run_sharded(
     )
     modes = normalize_modes(modes, n_slots, topo.n_ues)
     fn = _cached_jit(
-        topo, (engine, "open_loop", profile, sharded),
-        lambda: open_loop_fn(engine, topo, profile, sharded=sharded),
+        topo, (engine, "open_loop", profile, sharded, faults),
+        lambda: open_loop_fn(
+            engine, topo, profile, sharded=sharded, faults=faults
+        ),
     )
-    return fn(
+    args = (
         link0, ue_keys, modes, params,
         jnp.asarray(topo.cell_of_ue), topo.cell_params,
     )
+    if faults is not None:
+        corrupt = jnp.asarray(faults.resolve(n_slots, topo.n_ues).corrupt)
+        args = args + (corrupt,)
+    return fn(*args)
 
 
 def closed_loop_fn(
     engine, topo: CellTopology, profile, sw_cfg, policy,
-    *, sharded: bool = True,
+    *, sharded: bool = True, faults=None,
 ):
-    """The (shard_map-wrapped) closed-loop scan callable (jaxpr-inspectable)."""
+    """The (shard_map-wrapped) closed-loop scan callable (jaxpr-inspectable).
+
+    With a ``FaultSpec`` the callable grows a ``fault_masks`` operand (the
+    ``(decision_valid, corrupt, telemetry_valid)`` triple of ``(S, U)``
+    masks, each sharded over its UEs) — the degradation ladder is
+    UE-element-local, so the single cell-mean ``psum`` stays the scan's
+    only cross-shard collective.
+    """
     axis = UE_AXIS if sharded else None
 
-    def call(link0, sw0, ue_keys, params, policy, cell_of_ue, cell_params):
-        return engine._run_closed_scan(
-            profile, sw_cfg, link0, sw0, ue_keys, params, policy,
-            cell_of_ue, cell_params, cell_axis=axis,
-        )
+    if faults is None:
+        def call(link0, sw0, ue_keys, params, policy, cell_of_ue,
+                 cell_params):
+            return engine._run_closed_scan(
+                profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+                cell_of_ue, cell_params, cell_axis=axis,
+            )
+
+        extra_specs = ()
+    else:
+        def call(link0, sw0, ue_keys, params, policy, cell_of_ue,
+                 cell_params, fault_masks):
+            return engine._run_closed_scan(
+                profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+                cell_of_ue, cell_params, cell_axis=axis,
+                faults=faults, fault_masks=fault_masks,
+            )
+
+        extra_specs = (P(None, UE_AXIS),)
 
     if not sharded:
         return call
@@ -356,14 +401,14 @@ def closed_loop_fn(
         call,
         mesh=topo.mesh,
         in_specs=(P(UE_AXIS), P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS),
-                  _policy_spec(policy), P(UE_AXIS), P()),
+                  _policy_spec(policy), P(UE_AXIS), P()) + extra_specs,
         out_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS)),
         check_rep=False,
     )
 
 
 def streaming_open_loop_fn(
-    engine, topo: CellTopology, profile, *, sharded: bool = True
+    engine, topo: CellTopology, profile, *, sharded: bool = True, faults=None
 ):
     """Streaming-segment open-loop scan callable (jaxpr/HLO-inspectable).
 
@@ -380,13 +425,27 @@ def streaming_open_loop_fn(
     """
     axis = UE_AXIS if sharded else None
 
-    def call(link0, ue_keys, modes, params, cell_of_ue, cell_params,
-             slot0, active):
-        return engine._run_scan(
-            profile, link0, ue_keys, modes, params,
-            cell_of_ue, cell_params, cell_axis=axis,
-            slot0=slot0, active=active,
-        )
+    if faults is None:
+        def call(link0, ue_keys, modes, params, cell_of_ue, cell_params,
+                 slot0, active):
+            return engine._run_scan(
+                profile, link0, ue_keys, modes, params,
+                cell_of_ue, cell_params, cell_axis=axis,
+                slot0=slot0, active=active,
+            )
+
+        extra_specs = ()
+    else:
+        def call(link0, ue_keys, modes, params, cell_of_ue, cell_params,
+                 slot0, active, corrupt):
+            return engine._run_scan(
+                profile, link0, ue_keys, modes, params,
+                cell_of_ue, cell_params, cell_axis=axis,
+                slot0=slot0, active=active,
+                faults=faults, corrupt=corrupt,
+            )
+
+        extra_specs = (P(None, UE_AXIS),)
 
     if not sharded:
         return call
@@ -394,7 +453,7 @@ def streaming_open_loop_fn(
         call,
         mesh=topo.mesh,
         in_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS), P(None, UE_AXIS),
-                  P(UE_AXIS), P(), P(), P(UE_AXIS)),
+                  P(UE_AXIS), P(), P(), P(UE_AXIS)) + extra_specs,
         out_specs=(P(UE_AXIS), P(None, UE_AXIS)),
         check_rep=False,
     )
@@ -402,7 +461,7 @@ def streaming_open_loop_fn(
 
 def streaming_closed_loop_fn(
     engine, topo: CellTopology, profile, sw_cfg, policy,
-    *, sharded: bool = True,
+    *, sharded: bool = True, faults=None,
 ):
     """Streaming-segment closed-loop scan callable.
 
@@ -412,13 +471,27 @@ def streaming_closed_loop_fn(
     """
     axis = UE_AXIS if sharded else None
 
-    def call(link0, sw0, ue_keys, params, policy, cell_of_ue, cell_params,
-             slot0, active):
-        return engine._run_closed_scan(
-            profile, sw_cfg, link0, sw0, ue_keys, params, policy,
-            cell_of_ue, cell_params, cell_axis=axis,
-            slot0=slot0, active=active,
-        )
+    if faults is None:
+        def call(link0, sw0, ue_keys, params, policy, cell_of_ue,
+                 cell_params, slot0, active):
+            return engine._run_closed_scan(
+                profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+                cell_of_ue, cell_params, cell_axis=axis,
+                slot0=slot0, active=active,
+            )
+
+        extra_specs = ()
+    else:
+        def call(link0, sw0, ue_keys, params, policy, cell_of_ue,
+                 cell_params, slot0, active, fault_masks):
+            return engine._run_closed_scan(
+                profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+                cell_of_ue, cell_params, cell_axis=axis,
+                slot0=slot0, active=active,
+                faults=faults, fault_masks=fault_masks,
+            )
+
+        extra_specs = (P(None, UE_AXIS),)
 
     if not sharded:
         return call
@@ -426,7 +499,8 @@ def streaming_closed_loop_fn(
         call,
         mesh=topo.mesh,
         in_specs=(P(UE_AXIS), P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS),
-                  _policy_spec(policy), P(UE_AXIS), P(), P(), P(UE_AXIS)),
+                  _policy_spec(policy), P(UE_AXIS), P(), P(), P(UE_AXIS))
+                 + extra_specs,
         out_specs=(P(UE_AXIS), P(UE_AXIS), P(None, UE_AXIS)),
         check_rep=False,
     )
@@ -443,6 +517,7 @@ def run_closed_loop_sharded(
     key=None,
     ue_keys=None,
     sharded: bool = True,
+    faults=None,
 ):
     """Closed-loop campaign over the sharded topology.
 
@@ -456,19 +531,30 @@ def run_closed_loop_sharded(
     profile, params, ue_keys, link0 = _prepare(
         engine, topo, schedule, n_slots, key, ue_keys
     )
-    sw0 = init_device_switch(topo.n_ues, len(sw_cfg.feature_names), sw_cfg)
+    sw0 = init_device_switch(
+        topo.n_ues, len(sw_cfg.feature_names), sw_cfg, faults
+    )
     fn = _cached_jit(
         topo,
         (engine, "closed_loop", profile, sw_cfg,
-         jax.tree.structure(policy), sharded),
+         jax.tree.structure(policy), sharded, faults),
         lambda: closed_loop_fn(
-            engine, topo, profile, sw_cfg, policy, sharded=sharded
+            engine, topo, profile, sw_cfg, policy, sharded=sharded,
+            faults=faults,
         ),
     )
-    return fn(
+    args = (
         link0, sw0, ue_keys, params, policy,
         jnp.asarray(topo.cell_of_ue), topo.cell_params,
     )
+    if faults is not None:
+        rf = faults.resolve(n_slots, topo.n_ues)
+        args = args + ((
+            jnp.asarray(rf.decision_valid),
+            jnp.asarray(rf.corrupt),
+            jnp.asarray(rf.telemetry_valid),
+        ),)
+    return fn(*args)
 
 
 def run_perturbed_sharded(

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.closed_loop import (
     DevicePolicy,
     SwitchConfig,
+    breaker_update,
     init_device_switch,
     switch_boundary,
     switch_update,
@@ -687,6 +688,62 @@ class BatchedPuschPipeline:
         }
         return new_link, outputs
 
+    def _corrupt_and_screen(self, out, h_sel, modes, corrupt, faults):
+        """Fault injection + in-scan health screen on the selected estimate.
+
+        ``corrupt (U,)`` flags this slot's expert-output corruption burst;
+        it lands only on UEs actually *served* by the AI expert (mode 0 —
+        overflow/audit-reverted UEs already hold the fail-safe output).
+        The injected error is NaN, Inf, or a scaled copy per
+        ``FaultSpec.corruption_kind``.  The screen then checks every
+        AI-served UE's output for finiteness — independently of the
+        injection, so a naturally diverged expert trips it too — and
+        reverts tripped UEs to the densely-computed fail-safe baseline for
+        this slot, returning the per-UE trip flags.  A scaled-error
+        corruption stays finite by design: it flows downstream and is the
+        breaker's blind spot unless the NMSE audit catches it.
+
+        With an all-False ``corrupt`` mask and finite expert outputs every
+        select here is the identity — the zero-fault bitwise contract.
+        """
+        srv = (
+            out.served_by
+            if out.served_by is not None
+            else jnp.asarray(modes, jnp.int32)
+        )
+        hit = jnp.logical_and(jnp.asarray(corrupt), srv == 0)
+
+        def inject(x):
+            if faults.corruption_kind == "nan":
+                bad = jnp.full_like(x, jnp.nan)
+            elif faults.corruption_kind == "inf":
+                bad = jnp.full_like(x, jnp.inf)
+            else:
+                bad = x * jnp.asarray(faults.corruption_scale, x.dtype)
+            return jnp.where(
+                hit.reshape(hit.shape + (1,) * (x.ndim - 1)), bad, x
+            )
+
+        h_sel = jax.tree.map(inject, h_sel)
+        finite = None
+        for leaf in jax.tree.leaves(h_sel):
+            f = jnp.all(jnp.isfinite(leaf).reshape(leaf.shape[0], -1), axis=1)
+            finite = f if finite is None else jnp.logical_and(finite, f)
+        tripped = jnp.logical_and(srv == 0, jnp.logical_not(finite))
+        if out.baseline is None:
+            raise ValueError(
+                "fault injection needs a batched bank output carrying the "
+                "fail-safe baseline (BankOutput.baseline)"
+            )
+        h_sel = jax.tree.map(
+            lambda s, b: jnp.where(
+                tripped.reshape(tripped.shape + (1,) * (s.ndim - 1)), b, s
+            ),
+            h_sel,
+            out.baseline,
+        )
+        return h_sel, tripped.astype(jnp.int32)
+
     # -- one batched slot ------------------------------------------------------
 
     def _slot_core(
@@ -701,6 +758,8 @@ class BatchedPuschPipeline:
         cell_params: CellParams | None = None,
         cell_axis: str | None = None,
         active: jax.Array | None = None,
+        faults=None,
+        corrupt: jax.Array | None = None,
     ):
         if active is not None:
             # streaming bank-slot mask: detached lanes run the fail-safe
@@ -753,6 +812,11 @@ class BatchedPuschPipeline:
                 if out.audit_tripped is not None
                 else jnp.zeros((n_ues,), jnp.int32)
             )
+            health_tripped = jnp.zeros((n_ues,), jnp.int32)
+            if faults is not None:
+                h_sel, health_tripped = self._corrupt_and_screen(
+                    out, h_sel, modes, corrupt, faults
+                )
         else:
             # methodology stage 1 (paper Fig. 3): MMSE only, AWGN injected
             # at node 2c — no switching, no AI in the loop.  ``rho`` is a
@@ -769,10 +833,12 @@ class BatchedPuschPipeline:
             )
             overflow = jnp.zeros((n_ues,), jnp.int32)
             audit_tripped = jnp.zeros((n_ues,), jnp.int32)
+            health_tripped = jnp.zeros((n_ues,), jnp.int32)
         new_link, outputs = jax.vmap(self._ue_post)(link, pre, h_sel)
         outputs["executed_flops"] = exec_flops
         outputs["gated_overflow"] = overflow
         outputs["audit_tripped"] = audit_tripped
+        outputs["health_tripped"] = health_tripped
         if active is not None:
             # detached lanes: state frozen, every output/KPM leaf zeroed —
             # they carry no throughput, no cost, no overflow, no telemetry
@@ -800,33 +866,39 @@ class BatchedPuschPipeline:
         """One compiled multi-UE slot. ``modes``/``keys`` carry the UE axis."""
         return self._slot_core(profile, link, modes, keys, p)
 
-    @partial(jax.jit, static_argnames=("self", "profile", "cell_axis"))
+    @partial(jax.jit, static_argnames=("self", "profile", "cell_axis", "faults"))
     def _run_scan(
         self, profile, link0, ue_keys, modes, params,
         cell_of_ue=None, cell_params=None, *, cell_axis=None,
-        slot0=None, active=None,
+        slot0=None, active=None, faults=None, corrupt=None,
     ):
         # ``slot0`` (traced) starts the carry's slot counter at a global
         # slot index, so an epoch-chunked streaming campaign folds the same
         # per-(UE, slot) PRNG stream a monolithic run folds; ``active`` is
         # the streaming bank-slot mask (see ``_slot_core``).  Both default
-        # to the monolithic behaviour.
+        # to the monolithic behaviour.  ``faults`` (static) + ``corrupt``
+        # ((S, U), traced, an extra scan operand) enable the open-loop
+        # slice of fault injection: expert-output corruption + health
+        # screen (decision/telemetry faults only exist in the closed loop).
         start = jnp.int32(0) if slot0 is None else jnp.asarray(slot0, jnp.int32)
 
         def step(carry, xs):
             link, slot_idx = carry
-            modes_s, p = xs
+            if corrupt is None:
+                (modes_s, p), cor_s = xs, None
+            else:
+                modes_s, p, cor_s = xs
             keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
             link, out = self._slot_core(
                 profile, link, modes_s, keys, p,
                 cell_of_ue=cell_of_ue, cell_params=cell_params,
                 cell_axis=cell_axis, active=active,
+                faults=faults, corrupt=cor_s,
             )
             return (link, slot_idx + 1), out
 
-        (link, _), traj = jax.lax.scan(
-            step, (link0, start), (modes, params)
-        )
+        xs = (modes, params) if corrupt is None else (modes, params, corrupt)
+        (link, _), traj = jax.lax.scan(step, (link0, start), xs)
         return link, traj
 
     @partial(jax.jit, static_argnames=("self", "profile", "cell_axis"))
@@ -885,6 +957,7 @@ class BatchedPuschPipeline:
     def _closed_step(
         self, profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
         cell_of_ue=None, cell_params=None, cell_axis=None, active=None,
+        faults=None, fault_s=None,
     ):
         """One closed-loop slot: boundary-committed modes in, decision out.
 
@@ -899,13 +972,34 @@ class BatchedPuschPipeline:
         and switch counter — so no telemetry accumulates while detached
         (reattachment cold-starts the row at the segment boundary; the
         streaming driver owns that re-pack).
+
+        ``faults`` (static ``FaultSpec``) + ``fault_s`` (this slot's
+        ``(decision_valid, corrupt, telemetry_valid)`` ``(U,)`` masks)
+        inject the degradation ladder: quarantined UEs execute the
+        fail-safe expert (never claiming gated capacity) while the control
+        register keeps deciding, the expert output is corrupted/screened in
+        ``_slot_core``, the switch update drops lost decisions and masked
+        telemetry, the boundary runs the TTL decay, and the trip flags
+        feed the circuit breaker last.  The ``quarantined`` leaf records
+        the overlay as of the *start* of the slot.
         """
         keys = jax.vmap(lambda k: jax.random.fold_in(k, slot_idx))(ue_keys)
         committed = sw.active_mode
+        if faults is not None:
+            quarantined = (sw.quarantine > 0)
+            exec_modes = jnp.where(
+                quarantined, jnp.int32(sw_cfg.default_mode), committed
+            )
+            dv_s, cor_s, tv_s = fault_s
+        else:
+            quarantined = jnp.zeros_like(committed, bool)
+            exec_modes = committed
+            dv_s = cor_s = tv_s = None
         link, out = self._slot_core(
-            profile, link, committed, keys, p,
+            profile, link, exec_modes, keys, p,
             cell_of_ue=cell_of_ue, cell_params=cell_params,
             cell_axis=cell_axis, active=active,
+            faults=faults, corrupt=cor_s,
         )
         vecs = trajectory_kpm_matrix(out["kpms"], sw_cfg.feature_names)
         decide = (
@@ -913,14 +1007,28 @@ class BatchedPuschPipeline:
             if sw_cfg.period_slots == 1
             else (slot_idx % jnp.int32(sw_cfg.period_slots)) == 0
         )
-        new_sw, raw = switch_update(sw, vecs, policy, sw_cfg, decide=decide)
+        new_sw, raw = switch_update(
+            sw, vecs, policy, sw_cfg, decide=decide,
+            decision_valid=dv_s, telemetry_valid=tv_s,
+        )
         out = dict(
             out,
             active_mode=committed,
             raw_decision=raw,
             pending_mode=new_sw.pending_mode,
+            quarantined=quarantined.astype(jnp.int32),
         )
-        new_sw = switch_boundary(new_sw)
+        if faults is not None:
+            new_sw = switch_boundary(
+                new_sw, ttl_slots=sw_cfg.ttl_slots,
+                fail_safe_mode=sw_cfg.default_mode,
+            )
+            trip = jnp.logical_or(
+                out["health_tripped"] > 0, out["audit_tripped"] > 0
+            )
+            new_sw = breaker_update(new_sw, trip, slot_idx, faults)
+        else:
+            new_sw = switch_boundary(new_sw)
         if active is not None:
             act = jnp.asarray(active)
             new_sw = jax.tree.map(
@@ -934,37 +1042,49 @@ class BatchedPuschPipeline:
                 active_mode=jnp.where(act, committed, 0),
                 raw_decision=jnp.where(act, raw, 0),
                 pending_mode=jnp.where(act, out["pending_mode"], 0),
+                quarantined=jnp.where(act, out["quarantined"], 0),
             )
         return link, new_sw, out
 
-    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg", "cell_axis"))
+    @partial(jax.jit, static_argnames=(
+        "self", "profile", "sw_cfg", "cell_axis", "faults"
+    ))
     def _run_closed_scan(
         self, profile, sw_cfg, link0, sw0, ue_keys, params, policy,
         cell_of_ue=None, cell_params=None, *, cell_axis=None,
-        slot0=None, active=None,
+        slot0=None, active=None, faults=None, fault_masks=None,
     ):
+        # ``faults`` (static) + ``fault_masks`` (the resolved
+        # ``(decision_valid, corrupt, telemetry_valid)`` triple of (S, U)
+        # arrays, extra scan operands) enable the full degradation ladder.
         start = jnp.int32(0) if slot0 is None else jnp.asarray(slot0, jnp.int32)
 
-        def step(carry, p):
+        def step(carry, xs):
             link, sw, slot_idx = carry
+            if fault_masks is None:
+                p, fs = xs, None
+            else:
+                p, fs = xs
             link, sw, out = self._closed_step(
                 profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
                 cell_of_ue, cell_params, cell_axis, active,
+                faults, fs,
             )
             return (link, sw, slot_idx + 1), out
 
-        (link, sw, _), traj = jax.lax.scan(
-            step, (link0, sw0, start), params
-        )
+        xs = params if fault_masks is None else (params, fault_masks)
+        (link, sw, _), traj = jax.lax.scan(step, (link0, sw0, start), xs)
         return link, sw, traj
 
-    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg"))
+    @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg", "faults"))
     def _closed_slot_step(
-        self, profile, sw_cfg, link, sw, slot_idx, ue_keys, p, policy
+        self, profile, sw_cfg, link, sw, slot_idx, ue_keys, p, policy,
+        fault_s=None, *, faults=None,
     ):
         """One compiled closed-loop slot (python-loop debug/benchmark path)."""
         return self._closed_step(
-            profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p
+            profile, sw_cfg, policy, ue_keys, link, sw, slot_idx, p,
+            faults=faults, fault_s=fault_s,
         )
 
     def run_closed_loop(
@@ -978,6 +1098,7 @@ class BatchedPuschPipeline:
         key: jax.Array | None = None,
         ue_keys: jax.Array | None = None,
         use_scan: bool = True,
+        faults=None,
     ):
         """Run a campaign with the switching decision inside the scan.
 
@@ -995,8 +1116,14 @@ class BatchedPuschPipeline:
 
         Returns ``(final_link, final_switch_state, trajectory)``;
         the trajectory adds ``active_mode`` / ``raw_decision`` /
-        ``pending_mode`` leaves (all ``(n_slots, n_ues)`` int32) to the
-        leaves ``run`` emits.
+        ``pending_mode`` / ``quarantined`` leaves (all ``(n_slots, n_ues)``
+        int32) to the leaves ``run`` emits.
+
+        ``faults`` (a ``FaultSpec``) injects the full degradation ladder:
+        decision loss -> TTL decay, expert corruption -> health screen ->
+        circuit breaker, telemetry loss -> window masking.  The spec is
+        resolved to dense masks here so the host oracle's own resolution
+        consumes identical arrays.
         """
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -1007,18 +1134,35 @@ class BatchedPuschPipeline:
             )
         elif ue_keys.shape[0] != n_ues:
             raise ValueError(f"ue_keys {ue_keys.shape} vs n_ues {n_ues}")
+        fault_masks = None
+        if faults is not None:
+            rf = faults.resolve(n_slots, n_ues)
+            fault_masks = (
+                jnp.asarray(rf.decision_valid),
+                jnp.asarray(rf.corrupt),
+                jnp.asarray(rf.telemetry_valid),
+            )
         link = init_device_link(n_ues)
-        sw = init_device_switch(n_ues, len(sw_cfg.feature_names), sw_cfg)
+        sw = init_device_switch(
+            n_ues, len(sw_cfg.feature_names), sw_cfg, faults
+        )
         if use_scan:
             return self._run_closed_scan(
-                profile, sw_cfg, link, sw, ue_keys, params, policy
+                profile, sw_cfg, link, sw, ue_keys, params, policy,
+                faults=faults, fault_masks=fault_masks,
             )
 
         outs = []
         for s in range(n_slots):
             p = jax.tree.map(lambda x: x[s], params)
+            fs = (
+                None
+                if fault_masks is None
+                else tuple(m[s] for m in fault_masks)
+            )
             link, sw, out = self._closed_slot_step(
-                profile, sw_cfg, link, sw, jnp.int32(s), ue_keys, p, policy
+                profile, sw_cfg, link, sw, jnp.int32(s), ue_keys, p, policy,
+                fs, faults=faults,
             )
             outs.append(out)
         traj = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
@@ -1036,6 +1180,7 @@ class BatchedPuschPipeline:
         key: jax.Array | None = None,
         ue_keys: jax.Array | None = None,
         use_scan: bool = True,
+        faults=None,
     ) -> tuple[DeviceLinkState, dict[str, Any]]:
         """Run an ``n_slots x n_ues`` campaign.
 
@@ -1055,6 +1200,10 @@ class BatchedPuschPipeline:
             against independent single-UE runs with the same keys.
           use_scan: compiled ``lax.scan`` loop (default) or a per-slot
             Python loop over the same jitted step (debug/benchmark baseline).
+          faults: optional ``FaultSpec`` — the open-loop slice of fault
+            injection (expert-output corruption + in-scan health screen;
+            decision/telemetry faults only exist in the closed loop).
+            Requires ``use_scan=True``.
 
         Returns:
           ``(final_link, trajectory)`` where every trajectory leaf is
@@ -1070,9 +1219,17 @@ class BatchedPuschPipeline:
             )
         elif ue_keys.shape[0] != n_ues:
             raise ValueError(f"ue_keys {ue_keys.shape} vs n_ues {n_ues}")
+        corrupt = None
+        if faults is not None:
+            if not use_scan:
+                raise ValueError("fault injection needs use_scan=True")
+            corrupt = jnp.asarray(faults.resolve(n_slots, n_ues).corrupt)
         link = init_device_link(n_ues)
         if use_scan:
-            return self._run_scan(profile, link, ue_keys, modes, params)
+            return self._run_scan(
+                profile, link, ue_keys, modes, params,
+                faults=faults, corrupt=corrupt,
+            )
 
         outs = []
         for s in range(n_slots):

@@ -32,13 +32,22 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
         "gated": {s: copy.deepcopy(gated_row) for s in cs.REQUIRED_SHARES},
         "campaign_spec_hash": "deadbeef",
     }
-    if schema == "arches-bench-v2":
+    if schema in ("arches-bench-v2", "arches-bench-v3"):
         payload["streaming"] = {
             "zero_churn_equal": "bitwise",
             "streaming_slot_ues_per_s": rate,
             "monolithic_slot_ues_per_s": rate,
             "churn_resident_slot_ues_per_s": rate / 2,
             "n_segments": 2,
+        }
+    if schema == "arches-bench-v3":
+        payload["faults"] = {
+            "fault_replay_equal": "bitwise",
+            "resume_equal": "bitwise",
+            "fault_closed_slot_ues_per_s": rate,
+            "checkpointed_slot_ues_per_s": rate / 2,
+            "health_tripped_slot_ues": 8,
+            "quarantined_slot_ues": 12,
         }
     return payload
 
@@ -52,9 +61,11 @@ def _write(tmp_path, name: str, payload: dict):
 # -- schema compatibility ------------------------------------------------------
 
 
-def test_validate_schema_accepts_both_supported_schemas():
+def test_validate_schema_accepts_all_supported_schemas():
+    assert cs.validate_schema(_payload("arches-bench-v3"), "x") == []
+    # v1/v2 snapshots predate the streaming / faults sections and must
+    # stay readable (BENCH_pr6.json is v2)
     assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
-    # v1 snapshots predate the streaming section and must stay readable
     assert cs.validate_schema(_payload("arches-bench-v1"), "x") == []
 
 
@@ -73,16 +84,31 @@ def test_validate_schema_missing_top_level_keys():
         assert any(f"missing top-level key {key!r}" in e for e in errs), key
 
 
-def test_validate_schema_v2_requires_streaming_section():
-    payload = _payload()
+@pytest.mark.parametrize("schema", ["arches-bench-v2", "arches-bench-v3"])
+def test_validate_schema_v2_plus_requires_streaming_section(schema):
+    payload = _payload(schema)
     del payload["streaming"]
     errs = cs.validate_schema(payload, "x")
     assert any("missing 'streaming'" in e for e in errs)
     for key in cs.REQUIRED_STREAMING_KEYS:
-        payload = _payload()
+        payload = _payload(schema)
         del payload["streaming"][key]
         errs = cs.validate_schema(payload, "x")
         assert any(f"streaming missing {key!r}" in e for e in errs), key
+
+
+def test_validate_schema_v3_requires_faults_section():
+    payload = _payload("arches-bench-v3")
+    del payload["faults"]
+    errs = cs.validate_schema(payload, "x")
+    assert any("missing 'faults'" in e for e in errs)
+    for key in cs.REQUIRED_FAULTS_KEYS:
+        payload = _payload("arches-bench-v3")
+        del payload["faults"][key]
+        errs = cs.validate_schema(payload, "x")
+        assert any(f"faults missing {key!r}" in e for e in errs), key
+    # v2 snapshots predate the section: no faults, no complaint
+    assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
 
 
 def test_validate_schema_gated_sweep_holes():

@@ -87,3 +87,103 @@ def test_no_partial_checkpoints_on_disk(tmp_path):
     mgr.maybe_save(1, _tree())
     entries = os.listdir(tmp_path)
     assert all(e.startswith("step_") and ".tmp-" not in e for e in entries), entries
+
+
+# -- restore validation (CheckpointMismatchError) ------------------------------
+
+
+import pytest
+
+from repro.checkpoint.store import CheckpointMismatchError, load_pytree
+
+
+def test_restore_rejects_treedef_mismatch(tmp_path):
+    save_pytree(_tree(), str(tmp_path / "ck"))
+    other = {"w": jnp.zeros((8, 4)), "extra": jnp.zeros(())}
+    with pytest.raises(CheckpointMismatchError, match="treedef"):
+        restore_pytree(other, str(tmp_path / "ck"))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    bad = dict(t, w=jnp.zeros((4, 8), jnp.float32))
+    with pytest.raises(CheckpointMismatchError, match="shape"):
+        restore_pytree(bad, str(tmp_path / "ck"))
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """The old behaviour silently cast the stored leaf into the template
+    dtype; a float32 checkpoint restored into a bf16 program (or vice
+    versa) must refuse instead."""
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    bad = dict(t, w=jnp.zeros((8, 4), jnp.bfloat16))
+    with pytest.raises(CheckpointMismatchError, match="dtype"):
+        restore_pytree(bad, str(tmp_path / "ck"))
+
+
+def test_restore_bf16_shape_still_validated(tmp_path):
+    """bf16 leaves are stored as same-shape uint16 payloads: the manifest
+    shape must stay comparable (a wrong-shape bf16 template is refused,
+    a right-shape one restores)."""
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    bad = dict(t, b=jnp.zeros((7,), jnp.bfloat16))
+    with pytest.raises(CheckpointMismatchError, match="shape"):
+        restore_pytree(bad, str(tmp_path / "ck"))
+
+
+def test_load_pytree_templateless(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    r = load_pytree(str(tmp_path / "ck"))
+    assert set(r) == {"w", "b", "nested"}
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(r["b"], np.float32), np.asarray(t["b"], np.float32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r["nested"]["step"]), np.asarray(t["nested"]["step"])
+    )
+
+
+# -- crash atomicity -----------------------------------------------------------
+
+
+def test_crash_mid_write_never_corrupts(tmp_path, monkeypatch):
+    """A crash at the final rename (the last possible moment) leaves no
+    visible checkpoint and no tmp residue; an earlier good checkpoint
+    stays restorable."""
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=5)
+    good = _tree(1)
+    mgr.maybe_save(1, good)
+
+    real_rename = os.rename
+
+    def exploding_rename(src, dst):
+        raise OSError("simulated crash at publish time")
+
+    monkeypatch.setattr(os, "rename", exploding_rename)
+    with pytest.raises(OSError, match="simulated crash"):
+        mgr.maybe_save(2, _tree(2))
+    monkeypatch.setattr(os, "rename", real_rename)
+
+    assert latest_step(str(tmp_path)) == 1
+    step, restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, good))
+    assert step == 1
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]), np.asarray(good["w"])
+    )
+    # no tmp residue survived the failed attempt
+    assert all(".tmp-" not in e for e in os.listdir(tmp_path))
+
+
+def test_latest_step_ignores_tmp_and_incomplete(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    mgr.maybe_save(4, _tree())
+    # a stale tmp dir from a killed process, and a manifest-less step dir
+    os.makedirs(tmp_path / "step_00000009.tmp-zz")
+    os.makedirs(tmp_path / "step_00000007")
+    assert latest_step(str(tmp_path)) == 4

@@ -1,0 +1,472 @@
+"""Fault-injection campaigns: the in-scan degradation ladder (PR 8).
+
+Contracts pinned here:
+
+* **Zero-fault identity** — ``FaultSpec()`` (nothing armed) is bitwise
+  identical to ``faults=None`` on every trajectory leaf, for the batched
+  open loop, the gated path and the closed loop; the fault machinery is
+  free until a failure class is actually armed.
+* **Host-oracle replay** — a fault-injected closed-loop device run
+  (decision outages + corruption bursts + telemetry loss, circuit breaker
+  armed) replays **bitwise** through ``host_replay_closed_loop``: mode
+  trajectories, raw decisions and quarantine spans all match a transparent
+  numpy re-execution of the same fault schedule.
+* **TTL fail-safe decay** — a control-plane outage longer than
+  ``ttl_slots`` decays every UE to the default expert at the boundary and
+  recovers after the outage ends, exactly like the host
+  ``SlotSwitchState`` driven by ``DApp.fail()`` (same outage schedule,
+  bitwise-identical mode trajectories — the dApp-equivalence satellite).
+* **Circuit breaker** — NaN/Inf corruption trips the in-scan ``isfinite``
+  health screen, the per-UE breaker quarantines the AI expert for
+  ``breaker_cooldown`` slots, and the hysteresis re-probe un-quarantines
+  once the burst has passed.
+* **Sharded** — all of the above survive the UE-sharded engine, and the
+  fault operands do not perturb the single-``psum`` collective contract
+  (forced-8-device subprocess HLO audit).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import (
+    SwitchConfig,
+    breaker_update,
+    init_device_switch,
+    switch_update,
+)
+from repro.core.dapp import DApp
+from repro.core.faults import FaultSpec
+from repro.core.policy import ThresholdPolicy
+from repro.core.session import (
+    ArchesSession,
+    CampaignSpec,
+    PolicySpec,
+    SwitchSpec,
+)
+from repro.core.switch import commit_decision, init_switch_state, slot_boundary
+
+N_PRB = 6
+N_SLOTS = 16
+N_UES = 4
+
+#: always decides the AI expert (mode 0): snr never exceeds 1e9, so
+#: ``mode_below`` wins every slot — the mode trajectory is then a pure
+#: function of the fault schedule (outage decay / quarantine), which is
+#: exactly what these tests want to observe.
+AI_POLICY = PolicySpec(kind="threshold", feature="snr", threshold=1e9)
+
+#: every failure class armed, breaker included
+FULL_FAULTS = FaultSpec(
+    seed=3,
+    decision_outages=((10, 14),),
+    decision_drop_prob=0.1,
+    corruption_spans=((2, 8),),
+    corruption_kind="nan",
+    telemetry_spans=((4, 6),),
+    telemetry_drop_prob=0.1,
+    breaker_trips=2,
+    breaker_window=4,
+    breaker_cooldown=3,
+)
+
+
+def _spec(path="closed_loop", faults=None, **kw):
+    base = dict(
+        path=path, scenario="good_poor_good", n_ues=N_UES, n_slots=N_SLOTS,
+        n_prb=N_PRB, seed=5, faults=faults,
+    )
+    if path == "closed_loop":
+        base["policies"] = (AI_POLICY,)
+        base["switch"] = SwitchSpec(window_slots=2, backend="ref",
+                                    ttl_slots=3)
+    base.update(kw)
+    return CampaignSpec(**base)
+
+
+def _hist_equal(a, b):
+    np.testing.assert_array_equal(a.modes, b.modes, err_msg="modes")
+    assert set(a.kpms) == set(b.kpms)
+    for k in a.kpms:
+        np.testing.assert_array_equal(a.kpms[k], b.kpms[k], err_msg=k)
+    assert set(a.outputs) == set(b.outputs)
+    for k in a.outputs:
+        np.testing.assert_array_equal(a.outputs[k], b.outputs[k], err_msg=k)
+    if a.decisions is not None or b.decisions is not None:
+        np.testing.assert_array_equal(a.decisions, b.decisions)
+    if a.n_switches is not None or b.n_switches is not None:
+        np.testing.assert_array_equal(a.n_switches, b.n_switches)
+
+
+# -- FaultSpec: validation, provenance, resolution -----------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(decision_outages=((5, 5),))  # empty span
+    with pytest.raises(ValueError):
+        FaultSpec(decision_outages=((-1, 4),))
+    with pytest.raises(ValueError):
+        FaultSpec(decision_drop_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(corruption_kind="flip")
+    with pytest.raises(ValueError):
+        FaultSpec(breaker_trips=0)
+    with pytest.raises(ValueError):
+        FaultSpec(breaker_window=0)
+    with pytest.raises(ValueError):
+        FaultSpec(breaker_cooldown=0)
+
+
+def test_fault_spec_round_trip_and_hash():
+    fs = FULL_FAULTS
+    assert FaultSpec.from_dict(dataclasses.asdict(fs)) == fs
+    spec = _spec(faults=fs)
+    back = CampaignSpec.from_json(spec.to_json())
+    assert back.faults == fs
+    from repro.core.session import spec_hash
+
+    assert spec_hash(back) == spec_hash(spec)
+    assert spec_hash(_spec(faults=fs)) != spec_hash(_spec(faults=None))
+
+
+def test_fault_spec_resolution_deterministic():
+    fs = FULL_FAULTS
+    a, b = fs.resolve(N_SLOTS, N_UES), fs.resolve(N_SLOTS, N_UES)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    # scheduled spans land exactly; nothing outside them for span-only specs
+    span_only = FaultSpec(decision_outages=((3, 7),))
+    rf = span_only.resolve(N_SLOTS, N_UES)
+    assert not rf.decision_valid[3:7].any()
+    assert rf.decision_valid[:3].all() and rf.decision_valid[7:].all()
+    assert rf.corrupt.sum() == 0 and rf.telemetry_valid.all()
+    assert span_only.injects_nothing is False
+    assert FaultSpec().injects_nothing is True
+
+
+def test_faults_rejected_off_device_paths():
+    with pytest.raises(ValueError, match="fault injection"):
+        CampaignSpec(path="host", n_ues=1, faults=FaultSpec(),
+                     policies=(AI_POLICY,))
+
+
+# -- zero-fault identity -------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["batched", "gated", "closed_loop"])
+def test_zero_fault_spec_is_bitwise_identity(path):
+    """``FaultSpec()`` must not perturb a single leaf vs ``faults=None``."""
+    a = ArchesSession(_spec(path)).run()
+    b = ArchesSession(_spec(path, faults=FaultSpec())).run()
+    _hist_equal(a, b)
+
+
+# -- host-oracle replay of fault-injected runs ---------------------------------
+
+
+def _replay_check(spec):
+    sess = ArchesSession(spec)
+    hist = sess.run()
+    rep = sess.host_replay(hist)
+    np.testing.assert_array_equal(hist.modes, rep["active_mode"])
+    np.testing.assert_array_equal(hist.decisions, rep["raw_decision"])
+    np.testing.assert_array_equal(
+        np.asarray(hist.outputs["quarantined"]) > 0,
+        np.asarray(rep["quarantined"]) > 0,
+    )
+    return hist
+
+
+def test_fault_closed_loop_replays_bitwise():
+    hist = _replay_check(_spec(faults=FULL_FAULTS))
+    # non-vacuous: the ladder actually fired
+    assert hist.health_tripped_slot_ues > 0
+    assert hist.quarantined_slot_ues > 0
+
+
+def test_fault_closed_loop_sharded_replays_bitwise():
+    from repro.core.topology import TopologySpec
+
+    hist = _replay_check(
+        _spec(faults=FULL_FAULTS, topology=TopologySpec(n_cells=2))
+    )
+    assert hist.health_tripped_slot_ues > 0
+
+
+def test_fault_streaming_closed_loop_replays_bitwise():
+    """The degradation ladder follows UE identity through churn re-packs."""
+    from repro.core.streaming import ChurnSchedule
+
+    churn = ChurnSchedule(
+        n_ue_ids=N_UES + 1, segment_slots=4, initial=(0, 1, 2),
+        events=((4, 3, "attach"), (6, 2, "detach"), (9, 2, "attach")),
+    )
+    sess = ArchesSession(_spec(faults=FULL_FAULTS, churn=churn))
+    hist = sess.run()
+    att = np.asarray(hist.attached, bool)
+    rep = sess.host_replay(hist)
+    np.testing.assert_array_equal(hist.modes, rep["active_mode"])
+    np.testing.assert_array_equal(
+        (np.asarray(hist.outputs["quarantined"]) > 0)[att],
+        (np.asarray(rep["quarantined"]) > 0)[att],
+    )
+
+
+# -- failure class 1: decision loss and the TTL fail-safe ----------------------
+
+
+def test_ttl_decay_and_recovery():
+    """Outage > ttl_slots: decay to the default expert, recover after."""
+    fs = FaultSpec(decision_outages=((6, 12),))
+    hist = ArchesSession(_spec(faults=fs)).run()
+    m = np.asarray(hist.modes)
+    # policy holds AI (0) on every heard slot once the window warms up
+    assert (m[4:6] == 0).all()
+    # ttl_slots=3: ages 1..3 accumulate over outage slots 6,7,8 -> the
+    # boundary after slot 8 decays, so slots 9..12 run the default expert
+    assert (m[9:12] == 1).all()
+    # first decision after the outage re-commits AI one boundary later
+    assert (m[13:] == 0).all()
+
+
+def test_ttl_decay_matches_host_dapp_failure():
+    """Device decision-age path == host ``DApp.fail()`` + ``SlotSwitchState``
+    TTL, bitwise, for the same outage schedule (the dApp satellite)."""
+    outage = (5, 11)
+    fs = FaultSpec(decision_outages=(outage,))
+    spec = _spec(faults=fs)
+    m_dev = np.asarray(ArchesSession(spec).run().modes)
+
+    cfg = spec.switch
+    dapp = DApp(lambda x: 0, ("snr",), window_slots=cfg.window_slots,
+                period_slots=cfg.period_slots)
+    st = init_switch_state(cfg.default_mode)
+    m_host = []
+    for s in range(N_SLOTS):
+        m_host.append(int(st.active_mode))
+        if outage[0] <= s < outage[1]:
+            dapp.fail()
+        else:
+            dapp.recover()
+        from repro.core.e3 import E3IndicationMessage
+
+        d = dapp.on_indication(
+            E3IndicationMessage(slot=s, source="oai", kpms={"snr": 10.0})
+        )
+        if d is not None:
+            st = commit_decision(st, d.mode)
+        st = slot_boundary(
+            st, fail_safe_mode=cfg.default_mode, ttl_slots=cfg.ttl_slots
+        )
+    # every UE hears the same constant decision stream, so all device
+    # columns must equal the single host register trajectory
+    for u in range(N_UES):
+        np.testing.assert_array_equal(m_dev[:, u], np.asarray(m_host))
+    assert 1 in m_host and 0 in m_host  # non-vacuous: decay + recovery
+
+
+# -- failure class 2: corruption, health screen, circuit breaker ---------------
+
+
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+def test_health_screen_and_breaker_cycle(kind):
+    fs = FaultSpec(
+        corruption_spans=((3, 8),), corruption_kind=kind,
+        breaker_trips=2, breaker_window=4, breaker_cooldown=3, seed=1,
+    )
+    hist = ArchesSession(_spec(faults=fs)).run()
+    ht = np.asarray(hist.outputs["health_tripped"])
+    q = np.asarray(hist.outputs["quarantined"])
+    tb_ok = np.asarray(hist.outputs["tb_ok"])
+    # the screen catches the poisoned expert *in the corrupted slots*
+    assert ht[3:8].sum() > 0 and ht[:3].sum() == 0 and ht[8:].sum() == 0
+    # trips accumulate into quarantine...
+    assert (q > 0).any()
+    # ...which expires after the burst: the last slots are clean again
+    assert (q[-2:] == 0).all()
+    # the reverted baseline keeps the link alive through the burst: no
+    # NaN ever reaches the decoded transport blocks
+    assert np.isfinite(np.asarray(hist.kpms["snr"])).all()
+    assert tb_ok.min() >= 0
+
+
+def test_scale_corruption_finite_no_health_trip():
+    """Scaled-error corruption stays finite: the isfinite screen must NOT
+    fire (that failure class is the audit's to catch), and the output is
+    genuinely perturbed vs the clean run."""
+    fs = FaultSpec(corruption_spans=((3, 8),), corruption_kind="scale",
+                   corruption_scale=1000.0)
+    dirty = ArchesSession(_spec("batched", faults=fs, modes=0)).run()
+    clean = ArchesSession(_spec("batched", modes=0)).run()
+    assert np.asarray(dirty.outputs["health_tripped"]).sum() == 0
+    assert not np.array_equal(
+        np.asarray(dirty.kpms["snr"]), np.asarray(clean.kpms["snr"])
+    )
+    # before the span nothing changed (after it, the perturbation persists
+    # by design: corrupted estimates flow into the OLLA/link-adaptation
+    # carry, exactly like a real transient would)
+    np.testing.assert_array_equal(
+        np.asarray(dirty.kpms["snr"])[:3], np.asarray(clean.kpms["snr"])[:3]
+    )
+
+
+def test_breaker_unit_semantics():
+    """Direct breaker state machine: M trips in-window -> quarantine for
+    exactly ``cooldown`` boundaries -> clean re-probe (ring cleared)."""
+    fs = FaultSpec(breaker_trips=2, breaker_window=4, breaker_cooldown=3)
+    cfg = SwitchConfig(feature_names=("snr",), window_slots=2,
+                       backend="ref")
+    st = init_device_switch(1, 1, cfg, fs)
+    trip = jnp.ones((1,), bool)
+    calm = jnp.zeros((1,), bool)
+    st = breaker_update(st, trip, jnp.int32(0), fs)
+    assert int(st.quarantine[0]) == 0  # 1 trip < breaker_trips
+    st = breaker_update(st, trip, jnp.int32(1), fs)
+    assert int(st.quarantine[0]) == 3  # second trip arms the cooldown
+    assert int(st.trip_ring.sum()) == 0  # ring cleared on entry
+    for s in range(2, 5):
+        st = breaker_update(st, calm, jnp.int32(s), fs)
+    assert int(st.quarantine[0]) == 0  # cooldown expired: re-probe
+
+
+# -- failure class 3: telemetry loss -------------------------------------------
+
+
+def test_telemetry_loss_freezes_ring():
+    """An invalidated KPM sample never enters the rolling window: the ring
+    is bitwise-unchanged for masked UEs and advances for the rest."""
+    cfg = SwitchConfig(feature_names=("snr",), window_slots=4,
+                       backend="ref")
+    fs = FaultSpec(telemetry_drop_prob=0.5)
+    pol = ThresholdPolicy(feature_idx=0, threshold=18.0).to_device()
+    st = init_device_switch(2, 1, cfg, fs)
+    vec = jnp.asarray([[30.0], [5.0]], jnp.float32)
+    tv = jnp.asarray([False, True])
+    new, _ = switch_update(st, vec, pol, cfg, decision_valid=jnp.ones(2, bool),
+                           telemetry_valid=tv)
+    np.testing.assert_array_equal(new.rings.buf[0], st.rings.buf[0])
+    assert int(new.rings.count[0]) == 0
+    assert int(new.rings.count[1]) == 1
+    assert float(new.rings.buf[1, 0, 0]) == 5.0
+
+
+def test_telemetry_loss_campaign_still_replays():
+    fs = FaultSpec(telemetry_spans=((4, 9),), telemetry_drop_prob=0.3,
+                   seed=7)
+    _replay_check(_spec(faults=fs))
+
+
+# -- sharded: the collective contract survives fault operands ------------------
+
+_SHARDED_FAULTS_CHECK = r"""
+import numpy as np, jax, jax.numpy as jnp
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.core.closed_loop import SwitchConfig, host_replay_closed_loop
+from repro.core.faults import FaultSpec
+from repro.core.policy import ThresholdPolicy
+from repro.core.telemetry import SELECTED_KPMS, flatten_kpm_sources
+from repro.core.topology import (
+    CellTopology, TopologySpec, open_loop_fn, run_closed_loop_sharded,
+)
+from repro.phy.ai_estimator import AiEstimatorConfig, init_params
+from repro.phy.channel import broadcast_params_to_ues
+from repro.phy.nr import SlotConfig
+from repro.phy.pipeline import (
+    BatchedPuschPipeline, init_device_link, resolve_schedule,
+)
+from repro.phy.scenario import good_poor_good_schedule
+
+S, U = 8, 8
+CFG = SlotConfig(n_prb=24)
+NET = AiEstimatorConfig(channels=8, n_res_blocks=1)
+params = init_params(jax.random.PRNGKey(0), CFG, NET)
+sched = good_poor_good_schedule(poor_start=2, poor_end=4)
+topo = CellTopology.build(TopologySpec(n_cells=4, coupling=0.3, n_shards=8), U)
+engine = BatchedPuschPipeline(CFG, params, net=NET)
+
+fs = FaultSpec(
+    decision_outages=((3, 6),), corruption_spans=((1, 5),),
+    corruption_kind="nan", telemetry_drop_prob=0.2, seed=2,
+    breaker_trips=2, breaker_window=4, breaker_cooldown=3,
+)
+policy = ThresholdPolicy(
+    feature_idx=SELECTED_KPMS.index("snr"), threshold=1e9
+)
+sw_cfg = SwitchConfig(
+    feature_names=SELECTED_KPMS, window_slots=2, backend="ref", ttl_slots=2
+)
+
+# 1) fault-injected 8-shard closed loop replays bitwise on the host
+_, fsw, traj = run_closed_loop_sharded(
+    engine, topo, sched, policy.to_device(), sw_cfg,
+    n_slots=S, key=jax.random.PRNGKey(7), faults=fs,
+)
+kpms = flatten_kpm_sources(traj["kpms"])
+feats = np.stack([np.asarray(kpms[n]) for n in SELECTED_KPMS], axis=-1)
+trips = (np.asarray(traj["health_tripped"]) > 0) | (
+    np.asarray(traj["audit_tripped"]) > 0
+)
+replay = host_replay_closed_loop(policy, feats, sw_cfg, faults=fs, trips=trips)
+assert np.array_equal(
+    np.asarray(traj["active_mode"]), replay["active_mode"]
+), "fault replay diverged across 8 shards"
+assert np.array_equal(
+    np.asarray(traj["quarantined"]) > 0, np.asarray(replay["quarantined"]) > 0
+)
+assert trips.sum() > 0, "vacuous: no health trips"
+
+# 2) zero-fault identity across 8 shards
+run = lambda f: run_closed_loop_sharded(
+    engine, topo, sched, policy.to_device(), sw_cfg,
+    n_slots=S, key=jax.random.PRNGKey(7), faults=f,
+)[2]
+t0, tz = run(None), run(FaultSpec())
+for leaf in ("active_mode", "tb_ok", "health_tripped", "quarantined"):
+    assert np.array_equal(np.asarray(t0[leaf]), np.asarray(tz[leaf])), leaf
+
+# 3) the fault-armed open-loop HLO keeps the single-psum contract
+profile, p = resolve_schedule(CFG, sched, S, U)
+p = broadcast_params_to_ues(p, U)
+key = jax.random.PRNGKey(3)
+ue_keys = jax.vmap(lambda u: jax.random.fold_in(key, u))(jnp.arange(U))
+modes = jnp.ones((S, U), jnp.int32).at[:, ::2].set(0)
+fn = open_loop_fn(engine, topo, profile, faults=fs)
+corrupt = jnp.asarray(fs.resolve(S, U).corrupt)
+args = (init_device_link(U), ue_keys, modes, p,
+        jnp.asarray(topo.cell_of_ue), topo.cell_params, corrupt)
+hlo = jax.jit(fn).lower(*args).compile().as_text()
+assert "all-reduce" in hlo, "expected the cell-mean psum to lower"
+for bad in ("all-gather", "all-to-all", "collective-permute"):
+    assert bad not in hlo, f"fault operand introduced {bad}"
+
+print("SHARDED-FAULTS-8 OK")
+"""
+
+
+def test_faults_on_forced_8_device_mesh():
+    """Fault replay + zero-fault identity + HLO collective audit on 8
+    forced host devices (subprocess: XLA_FLAGS must precede jax init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_FAULTS_CHECK],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED-FAULTS-8 OK" in proc.stdout

@@ -767,3 +767,169 @@ def test_suggest_gated_capacity_closes_overflow(legacy_params):
     cap = suggest_gated_capacity(starved)
     assert cap == 3
     assert run_with(cap).overflow_slot_ues == 0
+
+
+# -- spec-hash completeness (PR 8 satellite) -----------------------------------
+#
+# Every dataclass field of ``CampaignSpec`` and its sub-specs must flow
+# into the canonical JSON and therefore perturb ``spec_hash`` — a field
+# that doesn't is silent provenance loss (two different campaigns sharing
+# one hash).  The perturbation table gives each field one *valid*
+# alternate value; a new field without a table entry fails loudly.
+
+
+def _hash_completeness_case():
+    import dataclasses as dc
+
+    from repro.core.faults import FaultSpec
+    from repro.core.session import ExpertBankSpec, SwitchSpec
+    from repro.core.streaming import ChurnSchedule
+    from repro.core.topology import TopologySpec
+
+    baseline = CampaignSpec(
+        path="closed_loop", scenario="good_poor_good",
+        scenario_args=(), n_ues=4, n_slots=8, n_prb=6,
+        seed=0, modes=1,
+        bank=ExpertBankSpec(execution_mode="gated", gated_capacity=2),
+        policies=(PolicySpec(kind="threshold", feature="snr"),),
+        policy_assignment=None,
+        switch=SwitchSpec(window_slots=2, backend="ref"),
+        topology=TopologySpec(n_cells=2),
+        churn=ChurnSchedule(n_ue_ids=6, segment_slots=4, initial=(0, 1, 3)),
+        faults=FaultSpec(decision_outages=((2, 4),), seed=3,
+                         corruption_spans=((1, 3),),
+                         telemetry_spans=((5, 6),)),
+    )
+    alternates = {
+        ("CampaignSpec", "path"): "batched",
+        ("CampaignSpec", "scenario"): "good",
+        ("CampaignSpec", "scenario_args"): (("poor_start", 3),),
+        ("CampaignSpec", "n_ues"): 6,
+        ("CampaignSpec", "n_slots"): 12,
+        ("CampaignSpec", "n_prb"): 12,
+        ("CampaignSpec", "seed"): 1,
+        ("CampaignSpec", "modes"): 0,
+        ("CampaignSpec", "bank"): ExpertBankSpec(),
+        ("CampaignSpec", "policies"): (
+            PolicySpec(kind="threshold", feature="snr", threshold=5.0),
+        ),
+        ("CampaignSpec", "policy_assignment"): (0, 0, 0, 0),
+        ("CampaignSpec", "switch"): SwitchSpec(window_slots=4,
+                                               backend="ref"),
+        ("CampaignSpec", "feature_names"): tuple(reversed(SELECTED_KPMS)),
+        ("CampaignSpec", "rho"): (0.0, 0.25, 0.5, 0.75),
+        ("CampaignSpec", "topology"): TopologySpec(n_cells=2, coupling=0.3),
+        ("CampaignSpec", "churn"): ChurnSchedule(
+            n_ue_ids=6, segment_slots=4, initial=(0, 1)),
+        ("CampaignSpec", "faults"): FaultSpec(seed=9),
+        ("ExpertBankSpec", "execution_mode"): "concurrent",
+        ("ExpertBankSpec", "gated_capacity"): 3,
+        ("ExpertBankSpec", "use_pallas_switch"): False,
+        ("ExpertBankSpec", "channels"): 4,
+        ("ExpertBankSpec", "n_res_blocks"): 2,
+        ("ExpertBankSpec", "params_seed"): 1,
+        ("ExpertBankSpec", "fused"): True,
+        ("ExpertBankSpec", "dtype"): "bfloat16",
+        ("ExpertBankSpec", "audit_nmse_threshold"): 0.5,
+        ("PolicySpec", "kind"): "tree",
+        ("PolicySpec", "depth"): 3,
+        ("PolicySpec", "train_slots"): 4,
+        ("PolicySpec", "train_ues"): 3,
+        ("PolicySpec", "train_scenario"): "good",
+        ("PolicySpec", "train_scenario_args"): (("poor_start", 2),),
+        ("PolicySpec", "feature"): "rsrp",
+        ("PolicySpec", "threshold"): 7.5,
+        ("PolicySpec", "hysteresis"): 1.0,
+        ("PolicySpec", "mode_above"): 0,
+        ("PolicySpec", "mode_below"): 1,
+        ("SwitchSpec", "window_slots"): 4,
+        ("SwitchSpec", "hysteresis_slots"): 2,
+        ("SwitchSpec", "period_slots"): 2,
+        ("SwitchSpec", "default_mode"): 0,
+        ("SwitchSpec", "backend"): "auto",
+        ("SwitchSpec", "ttl_slots"): 8,
+        ("TopologySpec", "n_cells"): 1,
+        ("TopologySpec", "n_shards"): 1,
+        ("TopologySpec", "coupling"): 0.25,
+        ("TopologySpec", "cell_noise_offsets_db"): (0.0, 1.0),
+        ("TopologySpec", "cell_inr_offsets_db"): (0.0, 1.0),
+        ("ChurnSchedule", "n_ue_ids"): 4,
+        ("ChurnSchedule", "segment_slots"): 2,
+        ("ChurnSchedule", "initial"): (0, 1),
+        ("ChurnSchedule", "events"): ((4, 4, "attach"),),
+        ("FaultSpec", "seed"): 4,
+        ("FaultSpec", "decision_outages"): ((2, 5),),
+        ("FaultSpec", "decision_drop_prob"): 0.2,
+        ("FaultSpec", "corruption_spans"): ((1, 4),),
+        ("FaultSpec", "corruption_kind"): "inf",
+        ("FaultSpec", "corruption_scale"): 10.0,
+        ("FaultSpec", "corruption_prob"): 0.5,
+        ("FaultSpec", "telemetry_spans"): ((5, 7),),
+        ("FaultSpec", "telemetry_drop_prob"): 0.3,
+        ("FaultSpec", "breaker_trips"): 4,
+        ("FaultSpec", "breaker_window"): 5,
+        ("FaultSpec", "breaker_cooldown"): 8,
+    }
+    return baseline, alternates
+
+
+def test_spec_hash_every_field_perturbs():
+    import dataclasses as dc
+
+    baseline, alternates = _hash_completeness_case()
+    h0 = spec_hash(baseline)
+    sub_attr = {"ExpertBankSpec": "bank", "PolicySpec": None,
+                "SwitchSpec": "switch", "TopologySpec": "topology",
+                "ChurnSchedule": "churn", "FaultSpec": "faults"}
+
+    def perturbed_spec(owner, field_name, alt):
+        if (owner, field_name) == ("CampaignSpec", "policy_assignment"):
+            # per-UE assignment is rejected under churn: perturb against
+            # a churn-free variant of the baseline instead
+            ref = dc.replace(baseline, churn=None)
+            spec2 = dc.replace(ref, policy_assignment=alt)
+            assert spec_hash(spec2) != spec_hash(ref), (owner, field_name)
+            return spec2
+        if owner == "CampaignSpec":
+            return dc.replace(baseline, **{field_name: alt})
+        if owner == "PolicySpec":
+            pol = dc.replace(baseline.policies[0], **{field_name: alt})
+            return dc.replace(baseline, policies=(pol,))
+        attr = sub_attr[owner]
+        sub = dc.replace(getattr(baseline, attr), **{field_name: alt})
+        return dc.replace(baseline, **{attr: sub})
+
+    from repro.core.faults import FaultSpec
+    from repro.core.session import ExpertBankSpec, SwitchSpec
+    from repro.core.streaming import ChurnSchedule
+    from repro.core.topology import TopologySpec
+
+    for cls in (CampaignSpec, ExpertBankSpec, PolicySpec, SwitchSpec,
+                TopologySpec, ChurnSchedule, FaultSpec):
+        for f in dc.fields(cls):
+            key = (cls.__name__, f.name)
+            assert key in alternates, f"no perturbation case for {key}"
+            spec2 = perturbed_spec(cls.__name__, f.name, alternates[key])
+            # a valid alternate must actually differ from the baseline
+            assert spec2 != baseline, key
+            assert spec_hash(spec2) != h0, (
+                f"{key} does not perturb spec_hash: provenance loss"
+            )
+
+
+def test_spec_hash_canonical_dict_is_field_complete():
+    """Structural half of the same guarantee: the canonical dict feeding
+    ``spec_hash`` carries every field of every (sub-)spec dataclass."""
+    import dataclasses as dc
+
+    baseline, _ = _hash_completeness_case()
+    d = baseline.to_dict()
+    assert set(d) == {f.name for f in dc.fields(CampaignSpec)}
+    for key, obj in (("bank", baseline.bank), ("switch", baseline.switch),
+                     ("topology", baseline.topology),
+                     ("churn", baseline.churn),
+                     ("faults", baseline.faults)):
+        assert set(d[key]) == {f.name for f in dc.fields(type(obj))}, key
+    assert set(d["policies"][0]) == {
+        f.name for f in dc.fields(PolicySpec)
+    }

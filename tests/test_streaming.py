@@ -806,3 +806,94 @@ def test_streaming_sharded_on_forced_8_device_mesh():
         f"--- stderr ---\n{proc.stderr[-4000:]}"
     )
     assert "STREAMING-SHARDED-8 OK" in proc.stdout
+
+
+# -- crash-resumable streaming (PR 8) ------------------------------------------
+#
+# ``run_streaming(checkpoint_dir=...)`` snapshots the scan carry + UE bank
+# + host admission state atomically after every completed segment;
+# ``max_segments`` is the deterministic kill hook.  Kill at ANY segment
+# boundary, resume from the latest checkpoint: the stitched history must
+# be bitwise-equal to the uninterrupted run on every leaf.
+
+
+from repro.checkpoint import CheckpointMismatchError
+from repro.core.faults import FaultSpec
+
+
+_RESUME_CHURN = ChurnSchedule(
+    n_ue_ids=N_IDS, segment_slots=SEG, initial=(0, 1, 2),
+    events=((SEG, 3, "attach"), (SEG + 2, 2, "detach"),
+            (2 * SEG + 1, 2, "attach")),
+)
+
+
+def _resume_roundtrip(sess, tmp_path, kill_after):
+    ref = sess.run_streaming()
+    d = str(tmp_path / f"ck{kill_after}")
+    partial = sess.run_streaming(checkpoint_dir=d, max_segments=kill_after)
+    # the killed run produced a prefix: completed segments match the
+    # reference, the tail was never executed
+    np.testing.assert_array_equal(
+        partial.modes[: kill_after * SEG], ref.modes[: kill_after * SEG]
+    )
+    resumed = sess.run_streaming(resume_from=d)
+    assert_history_equal(resumed, ref)
+    np.testing.assert_array_equal(resumed.attached, ref.attached)
+    np.testing.assert_array_equal(resumed.bank_slot, ref.bank_slot)
+    return ref
+
+
+@pytest.mark.parametrize("kill_after", [1, 2])
+def test_resume_closed_loop_bitwise(ref_session, tmp_path, kill_after):
+    spec = _closed_spec(CAPACITY, N_SLOTS, churn=_RESUME_CHURN)
+    sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    ref = _resume_roundtrip(sess, tmp_path, kill_after)
+    assert int(ref.n_switches.sum()) > 0  # non-vacuous
+
+
+def test_resume_open_and_gated_bitwise(ref_session, tmp_path):
+    modes = _modes_grid(N_SLOTS, N_IDS)
+    for path in ("batched", "gated"):
+        spec = dataclasses.replace(
+            ref_session.spec, path=path, n_ues=CAPACITY, modes=modes,
+            churn=_RESUME_CHURN,
+        )
+        sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+        _resume_roundtrip(sess, tmp_path / path, 1)
+
+
+def test_resume_under_faults_bitwise(ref_session, tmp_path):
+    """The fault schedule is resolved on the stable-id axis from the spec,
+    so a resumed run replays the identical fault stream."""
+    spec = _closed_spec(
+        CAPACITY, N_SLOTS, churn=_RESUME_CHURN,
+        faults=FaultSpec(
+            decision_outages=((5, 9),), corruption_spans=((2, 8),),
+            corruption_kind="nan", telemetry_drop_prob=0.15, seed=3,
+            breaker_trips=2, breaker_window=4, breaker_cooldown=4,
+        ),
+    )
+    sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    ref = _resume_roundtrip(sess, tmp_path, 2)
+    assert int(np.asarray(ref.outputs["health_tripped"]).sum()) > 0
+
+
+def test_resume_refuses_other_spec(ref_session, tmp_path):
+    spec = _closed_spec(CAPACITY, N_SLOTS, churn=_RESUME_CHURN)
+    sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    d = str(tmp_path / "ck")
+    sess.run_streaming(checkpoint_dir=d, max_segments=1)
+    other = ArchesSession(
+        dataclasses.replace(spec, seed=spec.seed + 1),
+        ai_params=ref_session.ai_params,
+    )
+    with pytest.raises(CheckpointMismatchError, match="different"):
+        other.run_streaming(resume_from=d)
+
+
+def test_resume_from_empty_dir_raises(ref_session, tmp_path):
+    spec = _closed_spec(CAPACITY, N_SLOTS, churn=_RESUME_CHURN)
+    sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    with pytest.raises(FileNotFoundError):
+        sess.run_streaming(resume_from=str(tmp_path / "nope"))
