@@ -1,0 +1,201 @@
+"""Resident campaign service: API-driven campaigns + drain/resume (PR 9).
+
+Two legs, both doubling as CI smoke checks:
+
+* **Zero-churn over the northbound API** — a churn-free campaign is
+  submitted as JSON over the live HTTP API, polled through its status
+  transitions (``queued -> running -> completed``), and the completed
+  history must be **bitwise-equal** to the monolithic
+  ``ArchesSession.run()`` on every leaf (the ``as_streaming_spec`` lift
+  + zero-churn contract carried through the service path); the segment
+  telemetry must arrive at the JSONL exporter lossless (drop counter
+  exactly zero); raises otherwise.  Reports the end-to-end service wall
+  clock (submit -> completed over HTTP, compile included) next to the
+  warm direct-call streaming rate, so the dispatch/persist/export
+  overhead is a measured number.
+* **Kill-and-resume through the service** — a churn campaign is drained
+  at its first segment boundary (the deterministic in-process stand-in
+  for SIGTERM; the subprocess SIGTERM path is `tests/test_service.py`),
+  left ``interrupted`` with a durable checkpoint, then a restarted
+  service on the same state dir resumes it to completion: the stitched
+  history must be bitwise-equal to the uninterrupted
+  ``run_streaming()``; raises otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+import urllib.request
+
+import numpy as np
+
+
+def _assert_equal(a, b, what: str) -> None:
+    assert np.array_equal(np.asarray(a.modes), np.asarray(b.modes)), (
+        f"{what}: modes diverged"
+    )
+    for k in b.kpms:
+        assert np.array_equal(
+            np.asarray(a.kpms[k]), np.asarray(b.kpms[k])
+        ), f"{what}: kpm {k!r} diverged"
+    for k in b.outputs:
+        assert np.array_equal(
+            np.asarray(a.outputs[k]), np.asarray(b.outputs[k])
+        ), f"{what}: output {k!r} diverged"
+
+
+def _time_warm(run, repeats: int = 3) -> float:
+    run()  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        run()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(n_slots: int = 24, n_ues: int = 4, segment_slots: int = 4) -> dict:
+    from repro.core.session import ArchesSession, CampaignSpec, spec_hash
+    from repro.core.streaming import ChurnSchedule
+    from repro.service import CampaignService, JsonlExporter
+    from repro.service.api import ServiceAPI
+
+    modes = tuple(
+        tuple((s + u) % 2 for u in range(n_ues)) for s in range(n_slots)
+    )
+    spec = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=n_ues,
+        n_slots=n_slots, n_prb=6, seed=3, modes=modes,
+    )
+    mono = ArchesSession(spec)
+    hist_m = mono.run()
+    n_segments = n_slots // segment_slots
+
+    # -- zero-churn campaign over the live HTTP API -------------------------
+    with tempfile.TemporaryDirectory() as state:
+        jsonl = os.path.join(state, "telemetry.jsonl")
+        svc = CampaignService(
+            state, max_segment_slots=segment_slots,
+            exporters=[JsonlExporter(jsonl)], ai_params=mono.ai_params,
+        ).start()
+        api = ServiceAPI(svc).start()
+        t0 = time.perf_counter()
+        req = urllib.request.Request(
+            api.url + "/campaigns", data=spec.to_json().encode(),
+            headers={"Content-Type": "application/json"}, method="POST",
+        )
+        with urllib.request.urlopen(req, timeout=10) as r:
+            cid = json.loads(r.read().decode())["campaign_id"]
+        transitions: list[str] = []
+        while True:
+            with urllib.request.urlopen(
+                api.url + f"/campaigns/{cid}", timeout=10
+            ) as r:
+                st = json.loads(r.read().decode())
+            if not transitions or transitions[-1] != st["state"]:
+                transitions.append(st["state"])
+            if st["state"] in ("completed", "failed", "cancelled"):
+                break
+            time.sleep(0.02)
+        service_wall = time.perf_counter() - t0
+        assert st["state"] == "completed", (
+            f"service campaign ended {st['state']!r}: {st['error']}"
+        )
+        assert st["segments_done"] == st["n_segments"] == n_segments
+        assert st["spec_hash"] == spec_hash(spec), "provenance hash diverged"
+        assert st["checkpoint_steps"], "no checkpoint lineage reported"
+        _assert_equal(svc.result(cid), hist_m, "service zero-churn")
+        api.stop()
+        assert svc.drain(timeout=60), "drain timed out"
+        with open(jsonl) as f:
+            rows = [json.loads(line) for line in f]
+        assert [r["seg_idx"] for r in rows] == list(range(n_segments)), (
+            "telemetry export lost segments"
+        )
+        exported = svc.pump.counters()
+        assert exported["dropped"] == 0, "telemetry drops in a tiny campaign"
+
+    print(f"service API:  zero-churn campaign bitwise == monolithic run "
+          f"({n_slots}x{n_ues}, {n_segments} segments, "
+          f"transitions {'->'.join(transitions)})")
+    print(f"telemetry:    {exported['exported']} segment samples exported "
+          f"lossless ({exported['dropped']} dropped)")
+
+    # -- kill-and-resume through the service path ---------------------------
+    churn_spec = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=n_ues,
+        n_slots=n_slots, n_prb=6, seed=3,
+        modes=tuple(tuple((s + u) % 2 for u in range(n_ues + 1))
+                    for s in range(n_slots)),
+        churn=ChurnSchedule(
+            n_ue_ids=n_ues + 1, segment_slots=segment_slots,
+            initial=tuple(range(n_ues - 1)),
+            events=((segment_slots, n_ues, "attach"),
+                    (segment_slots + 1, 0, "detach")),
+        ),
+    )
+    sess = ArchesSession(churn_spec, ai_params=mono.ai_params)
+    ref = sess.run_streaming()
+    with tempfile.TemporaryDirectory() as state:
+        def drain_at_first_boundary(service, rec, ev):
+            if ev.seg_idx == 0:
+                service.request_drain()
+
+        svc = CampaignService(
+            state, max_segment_slots=segment_slots,
+            ai_params=mono.ai_params,
+            segment_callback=drain_at_first_boundary,
+        ).start()
+        cid = svc.submit(churn_spec)
+        deadline = time.monotonic() + 120
+        while not svc.draining and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert svc.drain(timeout=120), "drain timed out"
+        st = svc.status(cid)
+        assert st["state"] == "interrupted", f"expected interrupt, {st}"
+        assert st["checkpoint_steps"], "interrupted without a checkpoint"
+
+        svc2 = CampaignService(
+            state, max_segment_slots=segment_slots, ai_params=mono.ai_params,
+        ).start()
+        assert svc2.wait(cid, timeout=180) == "completed"
+        _assert_equal(svc2.result(cid), ref, "drain+resume")
+        np.testing.assert_array_equal(svc2.result(cid).attached, ref.attached)
+        assert svc2.drain(timeout=60)
+
+    direct_warm = _time_warm(sess.run_streaming)
+    direct_rate = n_slots * n_ues / direct_warm
+    cold_rate = n_slots * n_ues / service_wall
+    print(f"kill+resume:  drained at segment 1/{n_segments}, restarted "
+          "service resumed bitwise == uninterrupted on every leaf")
+    print(f"direct call:  {direct_rate:8.1f} slot-UEs/s warm (no service)")
+    print(f"service path: {service_wall*1e3:8.1f} ms submit->completed over "
+          "HTTP (cold: compile + checkpoints + dispatch/persist/export)")
+    return {
+        "zero_churn_service_equal": "bitwise",
+        "drain_resume_equal": "bitwise",
+        "status_transitions": transitions,
+        "n_segments": n_segments,
+        "telemetry_exported": exported["exported"],
+        "telemetry_dropped": exported["dropped"],
+        "service_campaign_wall_s": service_wall,
+        # cold end-to-end rate: deliberately NOT a *slot_ues_per_s key, so
+        # the >20% regression gate skips it (compile-dominated and noisy)
+        "slot_ues_per_s_cold": cold_rate,
+        "direct_streaming_slot_ues_per_s": direct_rate,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-slots", type=int, default=24)
+    ap.add_argument("--n-ues", type=int, default=4)
+    ap.add_argument("--segment-slots", type=int, default=4)
+    args = ap.parse_args()
+    run(args.n_slots, args.n_ues, args.segment_slots)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,10 @@ Two checks, both against the repo's committed ``BENCH_<tag>.json``:
 
 1. **Schema compatibility** — the snapshot must parse, declare a
    compatible schema (``arches-bench-v1``; ``arches-bench-v2`` which adds
-   the streaming/churn section; or ``arches-bench-v3`` which additionally
-   adds the fault-injection/crash-resume section), and carry every key
-   current tooling reads (engine/gated/fused/bf16 rates, the campaign
+   the streaming/churn section; ``arches-bench-v3`` which additionally
+   adds the fault-injection/crash-resume section; or ``arches-bench-v4``
+   which additionally adds the campaign-service section), and carry every
+   key current tooling reads (engine/gated/fused/bf16 rates, the campaign
    provenance hash, the host fingerprint).  A PR that renames a payload field without migrating the
    committed snapshot fails here, not six PRs later when someone plots the
    trajectory.
@@ -31,18 +32,22 @@ import sys
 from pathlib import Path
 
 #: the committed snapshot this repo's trajectory is anchored to
-DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr6.json"
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr9.json"
 
 #: wall-clock regression tolerance on comparable hosts
 REGRESSION_FRAC = 0.20
 
 #: the schema current tooling writes
-SCHEMA = "arches-bench-v3"
+SCHEMA = "arches-bench-v4"
 
 #: schemas current tooling still reads: v1 snapshots predate the streaming
 #: section (BENCH_pr6.json stays valid); v2 additionally requires it; v3
-#: additionally requires the fault-injection/crash-resume section
-SCHEMA_COMPAT = ("arches-bench-v1", "arches-bench-v2", "arches-bench-v3")
+#: additionally requires the fault-injection/crash-resume section; v4
+#: additionally requires the campaign-service section
+SCHEMA_COMPAT = (
+    "arches-bench-v1", "arches-bench-v2", "arches-bench-v3",
+    "arches-bench-v4",
+)
 
 #: top-level keys every snapshot must carry
 REQUIRED_KEYS = (
@@ -61,12 +66,21 @@ REQUIRED_STREAMING_KEYS = (
     "churn_resident_slot_ues_per_s",
 )
 
-#: keys the v3 ``faults`` section must carry
+#: keys the v3+ ``faults`` section must carry
 REQUIRED_FAULTS_KEYS = (
     "fault_replay_equal",
     "resume_equal",
     "fault_closed_slot_ues_per_s",
     "checkpointed_slot_ues_per_s",
+)
+
+#: keys the v4 ``service`` section must carry
+REQUIRED_SERVICE_KEYS = (
+    "zero_churn_service_equal",
+    "drain_resume_equal",
+    "telemetry_exported",
+    "telemetry_dropped",
+    "service_campaign_wall_s",
 )
 
 #: per-share keys inside the ``gated`` section
@@ -107,7 +121,7 @@ def validate_schema(payload: dict, label: str) -> list[str]:
     for key in REQUIRED_KEYS:
         if key not in payload:
             errors.append(f"{label}: missing top-level key {key!r}")
-    if schema in ("arches-bench-v2", "arches-bench-v3"):
+    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4"):
         streaming = payload.get("streaming")
         if streaming is None:
             errors.append(f"{label}: {schema[-2:]} snapshot missing "
@@ -116,14 +130,23 @@ def validate_schema(payload: dict, label: str) -> list[str]:
             for key in REQUIRED_STREAMING_KEYS:
                 if key not in streaming:
                     errors.append(f"{label}: streaming missing {key!r}")
-    if schema == "arches-bench-v3":
+    if schema in ("arches-bench-v3", "arches-bench-v4"):
         faults = payload.get("faults")
         if faults is None:
-            errors.append(f"{label}: v3 snapshot missing 'faults'")
+            errors.append(f"{label}: {schema[-2:]} snapshot missing "
+                          "'faults'")
         else:
             for key in REQUIRED_FAULTS_KEYS:
                 if key not in faults:
                     errors.append(f"{label}: faults missing {key!r}")
+    if schema == "arches-bench-v4":
+        service = payload.get("service")
+        if service is None:
+            errors.append(f"{label}: v4 snapshot missing 'service'")
+        else:
+            for key in REQUIRED_SERVICE_KEYS:
+                if key not in service:
+                    errors.append(f"{label}: service missing {key!r}")
     host = payload.get("host", {})
     for field in HOST_FIELDS:
         if field not in host:
@@ -212,7 +235,7 @@ def check(baseline: Path | str, candidate: Path | str | None = None) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
-                    help="committed snapshot (default: BENCH_pr6.json)")
+                    help="committed snapshot (default: BENCH_pr9.json)")
     ap.add_argument("--candidate", default=None,
                     help="freshly measured snapshot to diff against baseline")
     args = ap.parse_args()

@@ -3,10 +3,11 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
                                                 [--json BENCH_<tag>.json]
 
-``--smoke`` is the CI fast path: tiny expert training, seven sections only
+``--smoke`` is the CI fast path: tiny expert training, nine sections only
 (switch-kernel runtimes + batched multi-UE engine + closed-loop device/host
 equivalence + gated-execution contract + session-API dispatch/provenance +
-sharded-engine parity/scaling + streaming-churn zero-churn equivalence),
+sharded-engine parity/scaling + streaming-churn zero-churn equivalence +
+fault-injection/crash-resume + campaign-service API/drain-resume),
 exits non-zero on any failure.  Finishes in minutes where the full sweep
 takes an hour.
 
@@ -39,7 +40,7 @@ def _jax_backend() -> str:
 
 def _json_payload(outs: dict) -> dict:
     """Assemble the perf-trajectory snapshot from section outputs."""
-    payload: dict = {"schema": "arches-bench-v3", "time": time.strftime(
+    payload: dict = {"schema": "arches-bench-v4", "time": time.strftime(
         "%Y-%m-%dT%H:%M:%S")}
     # host fingerprint: check_snapshot only compares absolute rates when
     # these match (cross-host wall-clock deltas are meaningless)
@@ -120,6 +121,22 @@ def _json_payload(outs: dict) -> dict:
             "health_tripped_slot_ues": faults["health_tripped_slot_ues"],
             "quarantined_slot_ues": faults["quarantined_slot_ues"],
         }
+    service = outs.get("service")
+    if service:
+        # v4 schema: the resident campaign service (API-driven campaigns,
+        # telemetry export, drain/resume through the service path)
+        payload["service"] = {
+            "zero_churn_service_equal": service["zero_churn_service_equal"],
+            "drain_resume_equal": service["drain_resume_equal"],
+            "status_transitions": service["status_transitions"],
+            "n_segments": service["n_segments"],
+            "telemetry_exported": service["telemetry_exported"],
+            "telemetry_dropped": service["telemetry_dropped"],
+            "service_campaign_wall_s": service["service_campaign_wall_s"],
+            "slot_ues_per_s_cold": service["slot_ues_per_s_cold"],
+            "direct_streaming_slot_ues_per_s":
+                service["direct_streaming_slot_ues_per_s"],
+        }
     return payload
 
 
@@ -148,6 +165,7 @@ def main() -> None:
         bench_policy,
         bench_resources,
         bench_session,
+        bench_service,
         bench_sharded,
         bench_streaming,
         bench_switch,
@@ -204,6 +222,12 @@ def main() -> None:
             ("faults", "Fault injection + crash resume (smoke)",
              bench_faults.run,
              {"n_slots": 16, "n_ues": 4, "segment_slots": 8}),
+            # raises unless a campaign submitted over the live HTTP API is
+            # bitwise-equal to the monolithic run, its telemetry export is
+            # lossless, and a drained-then-restarted service resumes a
+            # churn campaign bitwise from its checkpoint
+            ("service", "Campaign service (smoke)", bench_service.run,
+             {"n_slots": 16, "n_ues": 4, "segment_slots": 4}),
         ]
     else:
         sections = [
@@ -236,6 +260,11 @@ def main() -> None:
               "segment_slots": 8}),
             ("faults", "Fault injection + crash resume",
              bench_faults.run,
+             {"n_slots": 24 if args.fast else 48,
+              "n_ues": 4 if args.fast else 8,
+              "segment_slots": 8}),
+            ("service", "Campaign service (dispatch + API + drain/resume)",
+             bench_service.run,
              {"n_slots": 24 if args.fast else 48,
               "n_ues": 4 if args.fast else 8,
               "segment_slots": 8}),

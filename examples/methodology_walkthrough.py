@@ -42,7 +42,7 @@ def main():
                               n_trials=3)
     for k, name in enumerate(sweep.kpm_names):
         m = sweep.means[:, k]
-        print(f"  {name:ekpm20s}".replace("ekpm", "") +
+        print(f"  {name:20s}"
               f" rho=0: {m[0]:10.3g}   rho=2: {m[-1]:10.3g}")
 
     print("\nstage 2: monotonicity filter (|spearman| >= 0.8)")

@@ -32,6 +32,17 @@ The demo walks the execution paths the session dispatches over:
   wider than the bank; the printed history shows residency (``.`` =
   detached) alongside the per-UE expert choices, plus the closed-loop
   host replay through the churn boundaries.
+* ``--service`` — running the service: the resident campaign service
+  (``repro.service``) started in-process with its northbound HTTP API.
+  The walkthrough submits the quickstart campaign as ``CampaignSpec``
+  JSON over ``POST /campaigns`` (zero-churn specs are lifted to their
+  segmented streaming form automatically), polls ``GET /campaigns/<id>``
+  through its status transitions (segment progress, spec_hash
+  provenance, checkpoint lineage), reads per-segment telemetry from
+  ``GET /telemetry``, then drains gracefully with ``POST /drain`` — and
+  checks the service-run history is bitwise-equal to the monolithic
+  ``run()`` above.  The same service runs standalone:
+  ``python -m repro.service --state-dir <dir>``.
 * ``--faults`` — the fault-injection degradation ladder: a ``FaultSpec``
   takes the dApp offline mid-campaign (decisions stop arriving; the
   device decision-age counter decays stale UEs to the MMSE fail-safe
@@ -433,6 +444,93 @@ def faults_demo(n_ues: int) -> None:
         raise SystemExit("fault-injection replay equivalence violated")
 
 
+def service_demo(n_ues: int) -> None:
+    import json
+    import tempfile
+    import time
+    import urllib.request
+
+    from repro.service import CampaignService
+    from repro.service.api import ServiceAPI
+
+    spec = roundtrip(CampaignSpec(
+        path="closed_loop",
+        scenario="good_poor_good",
+        scenario_args=(("poor_start", N_PHASE), ("poor_end", 2 * N_PHASE)),
+        n_ues=n_ues,
+        n_slots=3 * N_PHASE,
+        seed=42,
+        policies=(PolicySpec(kind="tree", depth=2),),
+        switch=SwitchSpec(window_slots=2),
+    ))
+    hist_mono = ArchesSession(spec).run()
+
+    print(f"\n== running the service: submit -> poll -> drain "
+          f"[spec {spec_hash(spec)}] ==")
+    with tempfile.TemporaryDirectory() as state:
+        svc = CampaignService(state, max_segment_slots=N_PHASE).start()
+        api = ServiceAPI(svc).start()
+        print(f"service up on {api.url} (standalone: "
+              f"python -m repro.service --state-dir <dir>)")
+
+        # submit: the campaign spec IS the wire format; the service lifts
+        # the zero-churn spec to its segmented streaming form
+        req = urllib.request.Request(
+            api.url + "/campaigns", data=spec.to_json().encode(),
+            headers={"Content-Type": "application/json"}, method="POST",
+        )
+        with urllib.request.urlopen(req, timeout=10) as r:
+            cid = json.loads(r.read().decode())["campaign_id"]
+        print(f"POST /campaigns -> {cid}")
+
+        # poll: state + segment progress + provenance + checkpoint lineage
+        last = None
+        while True:
+            with urllib.request.urlopen(
+                api.url + f"/campaigns/{cid}", timeout=10
+            ) as r:
+                st = json.loads(r.read().decode())
+            key = (st["state"], st["segments_done"])
+            if key != last:
+                print(f"GET  /campaigns/<id> -> {st['state']:9s} "
+                      f"segment {st['segments_done']}/{st['n_segments']} "
+                      f"checkpoints {st['checkpoint_steps']}")
+                last = key
+            if st["state"] in ("completed", "failed", "cancelled"):
+                break
+            time.sleep(0.05)
+        if st["state"] != "completed":
+            raise SystemExit(f"service campaign ended {st['state']!r}: "
+                             f"{st['error']}")
+        assert st["spec_hash"] == spec_hash(spec)
+
+        with urllib.request.urlopen(
+            api.url + "/telemetry?n=2", timeout=10
+        ) as r:
+            for s in json.loads(r.read().decode()):
+                print(f"GET  /telemetry -> seg {s['seg_idx']} "
+                      f"slots [{s['t0']},{s['t1']}) "
+                      f"AI share {s['ai_share']:4.0%} "
+                      f"throughput {s['throughput_bps'] / 1e6:5.1f} Mbps")
+
+        hist_svc = svc.result(cid)
+        api.stop()
+        # drain: finish in-flight segments, checkpoint, exit; a killed
+        # service instead resumes every in-flight campaign on restart
+        if not svc.drain(timeout=60):
+            raise SystemExit("drain timed out")
+        print("POST /drain -> graceful exit")
+
+    same = np.array_equal(hist_mono.modes, hist_svc.modes) and all(
+        np.array_equal(hist_mono.kpms[k], hist_svc.kpms[k])
+        for k in hist_mono.kpms
+    )
+    print(f"service-run campaign == monolithic run(): "
+          f"{'yes (bitwise)' if same else 'NO'}")
+    if not same:
+        raise SystemExit("service zero-churn equivalence violated")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-ues", type=int, default=4)
@@ -448,6 +546,9 @@ def main():
                     help="demo the epoch-chunked streaming driver (churn)")
     ap.add_argument("--faults", action="store_true",
                     help="demo the fault-injection degradation ladder")
+    ap.add_argument("--service", action="store_true",
+                    help="demo the resident campaign service "
+                         "(submit -> poll -> drain over HTTP)")
     args = ap.parse_args()
 
     print("registered scenarios:", ", ".join(scenario_names()), "\n")
@@ -464,6 +565,8 @@ def main():
         streaming_demo(max(args.n_ues, 2))
     if args.faults:
         faults_demo(max(args.n_ues, 2))
+    if args.service:
+        service_demo(max(args.n_ues, 2))
 
 
 if __name__ == "__main__":

@@ -157,10 +157,16 @@ def load_pytree(directory: str) -> Any:
     return out
 
 
-def latest_step(root: str) -> int | None:
-    """Newest *complete* checkpoint step under ``root`` (None if none)."""
+def list_steps(root: str) -> list[int]:
+    """All *complete* checkpoint steps under ``root``, ascending.
+
+    Complete means the atomic rename landed and the manifest exists — a
+    crash mid-write leaves only ``.tmp-`` litter, which is excluded.  This
+    is the checkpoint *lineage* the service's status API reports per
+    campaign.
+    """
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for name in os.listdir(root):
         if name.startswith("step_") and not ".tmp-" in name:
@@ -169,7 +175,13 @@ def latest_step(root: str) -> int | None:
                     steps.append(int(name.split("_")[1]))
                 except ValueError:
                     continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str) -> int | None:
+    """Newest *complete* checkpoint step under ``root`` (None if none)."""
+    steps = list_steps(root)
+    return steps[-1] if steps else None
 
 
 class CheckpointManager:
@@ -196,6 +208,10 @@ class CheckpointManager:
         if step is None:
             return None
         return step, restore_pytree(template, self.dir_for(step))
+
+    def steps(self) -> list[int]:
+        """Complete checkpoint steps currently retained, ascending."""
+        return list_steps(self.root)
 
     def _gc(self) -> None:
         steps = sorted(

@@ -456,6 +456,47 @@ def spec_hash(spec: CampaignSpec) -> str:
     return hashlib.sha256(spec.to_json().encode()).hexdigest()[:16]
 
 
+def as_streaming_spec(
+    spec: CampaignSpec, *, max_segment_slots: int = 8
+) -> CampaignSpec:
+    """Lift a monolithic campaign spec into its streaming form.
+
+    A spec that already declares ``churn`` is returned unchanged.  A
+    churn-free batched/gated/closed-loop spec gains a synthesized
+    full-residency ``ChurnSchedule`` (every bank slot attached at slot 0,
+    no events) whose segment length is the largest divisor of ``n_slots``
+    that is ``<= max_segment_slots`` — so the epoch-chunked driver can
+    execute it in checkpointable segments while staying bitwise-equal to
+    the monolithic ``ArchesSession.run()`` on every leaf (the zero-churn
+    contract).  This is how ``repro.service.CampaignService`` makes every
+    submitted campaign crash-resumable, churn or not.
+    """
+    if spec.churn is not None:
+        return spec
+    if spec.execution_path not in (
+        ExecutionPath.BATCHED, ExecutionPath.GATED, ExecutionPath.CLOSED_LOOP
+    ):
+        raise ValueError(
+            f"path={spec.path!r} has no streaming form (the host loop "
+            "serves one pinned UE, the perturbed sweep has no segmented "
+            "driver)"
+        )
+    if max_segment_slots < 1:
+        raise ValueError(f"max_segment_slots {max_segment_slots} must be >= 1")
+    seg = max(
+        d for d in range(1, min(max_segment_slots, spec.n_slots) + 1)
+        if spec.n_slots % d == 0
+    )
+    return dataclasses.replace(
+        spec,
+        churn=ChurnSchedule(
+            n_ue_ids=spec.n_ues,
+            segment_slots=seg,
+            initial=tuple(range(spec.n_ues)),
+        ),
+    )
+
+
 # -- the session façade --------------------------------------------------------
 
 
@@ -924,6 +965,7 @@ class ArchesSession:
         checkpoint_dir=None,
         resume_from=None,
         max_segments=None,
+        on_segment=None,
     ) -> BatchedRunHistory:
         """Epoch-chunked streaming campaign: attach/detach under churn.
 
@@ -941,7 +983,11 @@ class ArchesSession:
         segment; ``resume_from`` restarts from the latest complete
         checkpoint in that directory, bitwise-equal to the uninterrupted
         run.  ``max_segments`` stops early after that many segments (the
-        deterministic kill hook the resume tests use).
+        deterministic kill hook the resume tests use).  ``on_segment``
+        receives a ``repro.core.streaming.SegmentEvent`` after every
+        completed (and, when armed, checkpointed) segment; returning
+        truthy stops the drive loop at that boundary — the graceful-drain
+        primitive ``repro.service.CampaignService`` builds on.
 
         Returns a ``BatchedRunHistory`` on the *stable-id* axis: detached
         slot-UEs carry the ``-1`` mode sentinel and zeroed KPMs/outputs,
@@ -954,6 +1000,7 @@ class ArchesSession:
             checkpoint_dir=checkpoint_dir,
             resume_from=resume_from,
             max_segments=max_segments,
+            on_segment=on_segment,
         )
         if churn is not None:
             if not isinstance(churn, streaming.ChurnSchedule):

@@ -325,12 +325,35 @@ def _spec_fingerprint(spec) -> int:
     return int(spec_hash(spec), 16) & 0xFFFFFFFFFFFFFFFF
 
 
+@dataclasses.dataclass(frozen=True)
+class SegmentEvent:
+    """What ``run_streaming`` hands to ``on_segment`` after each segment.
+
+    Fired once per *completed* segment, after the checkpoint (when armed)
+    has been durably written — so anything the callback observes is also
+    recoverable.  ``history`` is a ``BatchedRunHistory`` view over the
+    driver's live accumulators: slots ``[0, t1)`` are populated, later
+    slots still carry their detached fill values.  The arrays are reused
+    by subsequent segments — consumers that retain data past the callback
+    must copy (``repro.core.telemetry.segment_telemetry`` reduces the
+    ``[t0, t1)`` span to plain floats, which is the intended use).
+    """
+
+    seg_idx: int  # 0-based index of the segment that just completed
+    n_segments: int  # total segments in the campaign horizon
+    t0: int  # first slot of the segment
+    t1: int  # one past the segment's last slot
+    occupant: np.ndarray  # (capacity,) bank occupancy after this segment
+    history: "object"  # BatchedRunHistory view (see above)
+
+
 def run_streaming(
     session,
     *,
     checkpoint_dir: str | None = None,
     resume_from: str | None = None,
     max_segments: int | None = None,
+    on_segment=None,
 ) -> "object":
     """Execute an epoch-chunked streaming campaign; one compiled segment.
 
@@ -355,6 +378,13 @@ def run_streaming(
     ``max_segments`` stops after that many segments this call (the
     deterministic kill hook: the returned history covers only the slots
     run so far; later segments keep their detached fill values).
+
+    ``on_segment`` is the long-running-service hook: called with a
+    ``SegmentEvent`` after every completed segment (after its checkpoint,
+    when one is armed, has been durably written).  A truthy return stops
+    the drive loop there — the graceful-drain primitive: the segment in
+    flight finishes, its checkpoint lands, and a later ``resume_from``
+    continues bitwise from exactly that boundary.
     """
     from repro.core.closed_loop import init_device_switch
     from repro.core.runtime import BatchedRunHistory
@@ -640,6 +670,28 @@ def run_streaming(
                 force=True,
             )
         segs_run += 1
+        if on_segment is not None:
+            stop = on_segment(SegmentEvent(
+                seg_idx=seg_idx,
+                n_segments=n_slots // seg,
+                t0=t0,
+                t1=t0 + seg,
+                occupant=occupant.copy(),
+                history=BatchedRunHistory(
+                    modes=modes_full,
+                    kpms=kpms_full,
+                    outputs=outputs_full,
+                    decisions=decisions_full,
+                    n_switches=n_switches_id,
+                    cell_of_ue=(
+                        None if topo is None else home_cells(n_ids, n_cells)
+                    ),
+                    attached=res,
+                    bank_slot=bank_slot_full,
+                ),
+            ))
+            if stop:
+                break
         if max_segments is not None and segs_run >= max_segments:
             break
 

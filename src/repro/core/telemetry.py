@@ -23,6 +23,7 @@ from typing import Mapping, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # -- registry ---------------------------------------------------------------
 
@@ -126,6 +127,82 @@ def trajectory_kpm_matrix(
     return jnp.stack(
         [jnp.asarray(flat[n], jnp.float32) for n in names], axis=-1
     )
+
+
+# -- segment-boundary aggregation (service telemetry export) ------------------
+
+#: fall-back accounting leaves folded into the served-by-AI reduction and
+#: exported as per-segment counters when present
+_FALLBACK_LEAVES = (
+    "gated_overflow",
+    "audit_tripped",
+    "health_tripped",
+    "quarantined",
+)
+
+
+def segment_telemetry(history, t0: int, t1: int) -> dict:
+    """Reduce one slot span of a ``BatchedRunHistory`` to flat scalars.
+
+    The campaign service calls this at segment boundaries (slots
+    ``[t0, t1)``) to feed its export ring: per-segment mean throughput and
+    AI share over *resident* slot-UEs (served-not-selected semantics, like
+    ``BatchedRunHistory.ai_share``), executed FLOPs, the degradation-ladder
+    counters, and — under a multi-cell topology — the per-cell throughput
+    vector.  Everything is copied out as plain Python scalars/lists, so the
+    result stays valid after the driver reuses its accumulators for the
+    next segment (and serializes straight to JSON).
+    """
+    if not 0 <= t0 < t1 <= history.modes.shape[0]:
+        raise ValueError(
+            f"slot span [{t0}, {t1}) outside the campaign horizon "
+            f"[0, {history.modes.shape[0]})"
+        )
+    modes = np.asarray(history.modes)[t0:t1]
+    resident = (
+        np.ones(modes.shape, bool)
+        if history.attached is None
+        else np.asarray(history.attached, bool)[t0:t1]
+    )
+    served = (modes == 0) & resident
+    for k in _FALLBACK_LEAVES:
+        if k in history.outputs:
+            served &= np.asarray(history.outputs[k])[t0:t1] == 0
+    n_resident = int(resident.sum())
+    out: dict = {
+        "t0": int(t0),
+        "t1": int(t1),
+        "resident_slot_ues": n_resident,
+        "ai_share": (
+            float(served[resident].mean()) if n_resident else 0.0
+        ),
+    }
+    if "phy_throughput" in history.kpms:
+        tput = np.asarray(history.kpms["phy_throughput"])[t0:t1]
+        out["throughput_bps"] = (
+            float(tput[resident].mean()) if n_resident else 0.0
+        )
+        if history.cell_of_ue is not None:
+            cells = np.asarray(history.cell_of_ue)
+            per_cell = []
+            for c in range(int(cells.max()) + 1):
+                sel = resident[:, cells == c]
+                per_cell.append(
+                    float(tput[:, cells == c][sel].mean()) if sel.any()
+                    else 0.0
+                )
+            out["per_cell_throughput_bps"] = per_cell
+    if "executed_flops" in history.outputs:
+        out["executed_flops"] = float(
+            np.asarray(history.outputs["executed_flops"], np.float64)
+            [t0:t1].sum()
+        )
+    for k in _FALLBACK_LEAVES:
+        if k in history.outputs:
+            out[f"{k}_slot_ues"] = int(
+                (np.asarray(history.outputs[k])[t0:t1] > 0).sum()
+            )
+    return out
 
 
 # -- functional ring buffer ---------------------------------------------------

@@ -1,0 +1,45 @@
+"""repro.service — the resident campaign service over streaming campaigns.
+
+The long-running-service shape from the ROADMAP's streaming line of work:
+an async dispatch loop (`CampaignService`) that schedules submitted
+``CampaignSpec``s across a worker pool via the segment-boundary streaming
+machinery (checkpointing on by default, graceful drain, bitwise crash
+resume), a non-blocking telemetry export layer (``TelemetryRing`` +
+pluggable ``Exporter``s), and a northbound stdlib-HTTP status/control API
+(``ServiceAPI``).
+"""
+
+from repro.service.exporters import Exporter, ExportPump, JsonlExporter
+from repro.service.ring import TelemetryRing
+from repro.service.service import (
+    CampaignRecord,
+    CampaignService,
+    CampaignState,
+    ServiceDrainingError,
+    ServiceSaturatedError,
+    UnknownCampaignError,
+)
+
+__all__ = [
+    "CampaignRecord",
+    "CampaignService",
+    "CampaignState",
+    "Exporter",
+    "ExportPump",
+    "JsonlExporter",
+    "ServiceAPI",
+    "ServiceDrainingError",
+    "ServiceSaturatedError",
+    "TelemetryRing",
+    "UnknownCampaignError",
+]
+
+
+def __getattr__(name):
+    # ServiceAPI pulls in http.server; keep the core service importable
+    # without it (and avoid the import cost on the worker-only path)
+    if name == "ServiceAPI":
+        from repro.service.api import ServiceAPI
+
+        return ServiceAPI
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

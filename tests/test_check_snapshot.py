@@ -32,7 +32,7 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
         "gated": {s: copy.deepcopy(gated_row) for s in cs.REQUIRED_SHARES},
         "campaign_spec_hash": "deadbeef",
     }
-    if schema in ("arches-bench-v2", "arches-bench-v3"):
+    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4"):
         payload["streaming"] = {
             "zero_churn_equal": "bitwise",
             "streaming_slot_ues_per_s": rate,
@@ -40,7 +40,7 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
             "churn_resident_slot_ues_per_s": rate / 2,
             "n_segments": 2,
         }
-    if schema == "arches-bench-v3":
+    if schema in ("arches-bench-v3", "arches-bench-v4"):
         payload["faults"] = {
             "fault_replay_equal": "bitwise",
             "resume_equal": "bitwise",
@@ -48,6 +48,15 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
             "checkpointed_slot_ues_per_s": rate / 2,
             "health_tripped_slot_ues": 8,
             "quarantined_slot_ues": 12,
+        }
+    if schema == "arches-bench-v4":
+        payload["service"] = {
+            "zero_churn_service_equal": "bitwise",
+            "drain_resume_equal": "bitwise",
+            "telemetry_exported": 4,
+            "telemetry_dropped": 0,
+            "service_campaign_wall_s": 1.0,
+            "direct_streaming_slot_ues_per_s": rate,
         }
     return payload
 
@@ -62,9 +71,10 @@ def _write(tmp_path, name: str, payload: dict):
 
 
 def test_validate_schema_accepts_all_supported_schemas():
+    assert cs.validate_schema(_payload("arches-bench-v4"), "x") == []
+    # v1/v2/v3 snapshots predate the later sections and must stay
+    # readable (BENCH_pr6.json is v1)
     assert cs.validate_schema(_payload("arches-bench-v3"), "x") == []
-    # v1/v2 snapshots predate the streaming / faults sections and must
-    # stay readable (BENCH_pr6.json is v2)
     assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
     assert cs.validate_schema(_payload("arches-bench-v1"), "x") == []
 
@@ -84,7 +94,9 @@ def test_validate_schema_missing_top_level_keys():
         assert any(f"missing top-level key {key!r}" in e for e in errs), key
 
 
-@pytest.mark.parametrize("schema", ["arches-bench-v2", "arches-bench-v3"])
+@pytest.mark.parametrize(
+    "schema", ["arches-bench-v2", "arches-bench-v3", "arches-bench-v4"]
+)
 def test_validate_schema_v2_plus_requires_streaming_section(schema):
     payload = _payload(schema)
     del payload["streaming"]
@@ -109,6 +121,20 @@ def test_validate_schema_v3_requires_faults_section():
         assert any(f"faults missing {key!r}" in e for e in errs), key
     # v2 snapshots predate the section: no faults, no complaint
     assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
+
+
+def test_validate_schema_v4_requires_service_section():
+    payload = _payload("arches-bench-v4")
+    del payload["service"]
+    errs = cs.validate_schema(payload, "x")
+    assert any("missing 'service'" in e for e in errs)
+    for key in cs.REQUIRED_SERVICE_KEYS:
+        payload = _payload("arches-bench-v4")
+        del payload["service"][key]
+        errs = cs.validate_schema(payload, "x")
+        assert any(f"service missing {key!r}" in e for e in errs), key
+    # v3 snapshots predate the section: no service, no complaint
+    assert cs.validate_schema(_payload("arches-bench-v3"), "x") == []
 
 
 def test_validate_schema_gated_sweep_holes():
@@ -210,3 +236,15 @@ def test_committed_default_baseline_is_valid():
     assert payload is not None
     assert cs.validate_schema(payload, cs.DEFAULT_BASELINE.name) == []
     assert cs.check(cs.DEFAULT_BASELINE) == 0
+
+
+def test_committed_pr6_snapshot_stays_readable():
+    """Earlier committed snapshots are the perf *trajectory*: moving the
+    default baseline to BENCH_pr9.json must not orphan BENCH_pr6.json."""
+    pr6 = cs.DEFAULT_BASELINE.parent / "BENCH_pr6.json"
+    assert pr6.exists()
+    payload = cs._load(pr6)
+    assert payload is not None
+    assert payload["schema"] == "arches-bench-v1"
+    assert cs.validate_schema(payload, pr6.name) == []
+    assert cs.check(pr6) == 0
