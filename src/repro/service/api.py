@@ -68,7 +68,12 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._send(200, self.service.status(parts[1]))
             if parts == ["telemetry"]:
                 q = parse_qs(url.query)
-                n = int(q["n"][0]) if "n" in q else None
+                try:
+                    n = int(q["n"][0]) if "n" in q else None
+                except ValueError:
+                    return self._send(
+                        400, {"error": "n must be an integer"}
+                    )
                 return self._send(200, self.service.ring.snapshot(n))
             self._send(404, {"error": f"no route {url.path!r}"})
         except UnknownCampaignError as e:

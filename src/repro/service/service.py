@@ -164,7 +164,13 @@ class CampaignService:
         self.pump = ExportPump(self.ring, exporters or [])
         self._ai_params = ai_params
         self._segment_callback = segment_callback
-        self._queue: queue.Queue = queue.Queue(maxsize=queue_size)
+        # The dispatch queue itself is unbounded: recovery must be able to
+        # re-enqueue arbitrarily many non-terminal campaigns (a saturated
+        # service that crashed can have > queue_size of them) without
+        # blocking start().  The submission cap is enforced in submit() by
+        # counting queued records instead.
+        self.queue_size = queue_size
+        self._queue: queue.Queue = queue.Queue()
         self._records: dict[str, CampaignRecord] = {}
         self._lock = threading.Lock()
         self._draining = threading.Event()
@@ -274,7 +280,7 @@ class CampaignService:
                 if rec.state != CampaignState.QUEUED:
                     rec.state = CampaignState.QUEUED
                     self._persist(rec)
-                self._queue.put(rec.campaign_id)
+                self._queue.put_nowait(rec.campaign_id)
 
     # -- submission / control --------------------------------------------------
 
@@ -297,7 +303,19 @@ class CampaignService:
         run_spec = as_streaming_spec(
             spec, max_segment_slots=self.max_segment_slots
         )
+        # Everything from saturation check to enqueue happens under the
+        # lock so the dispatch queue's order always matches submitted_seq
+        # (what recovery reconstructs after a restart) and a rejected
+        # submit leaves no record or state-dir litter.
         with self._lock:
+            pending = sum(
+                1 for r in self._records.values()
+                if r.state == CampaignState.QUEUED
+            )
+            if pending >= self.queue_size:
+                raise ServiceSaturatedError(
+                    f"submission queue is full ({pending} pending)"
+                )
             seq = 1 + max(
                 (r.submitted_seq for r in self._records.values()), default=0
             )
@@ -312,22 +330,19 @@ class CampaignService:
                 ),
             )
             self._records[cid] = rec
-        d = self._dir_for(cid)
-        os.makedirs(d, exist_ok=True)
-        with open(os.path.join(d, "spec.json"), "w") as f:
-            f.write(spec.to_json())
-        with open(os.path.join(d, "run_spec.json"), "w") as f:
-            f.write(run_spec.to_json())
-        self._persist(rec)
-        try:
-            self._queue.put_nowait(cid)
-        except queue.Full:
-            with self._lock:
+            d = self._dir_for(cid)
+            try:
+                os.makedirs(d, exist_ok=True)
+                with open(os.path.join(d, "spec.json"), "w") as f:
+                    f.write(spec.to_json())
+                with open(os.path.join(d, "run_spec.json"), "w") as f:
+                    f.write(run_spec.to_json())
+                self._persist(rec)
+            except BaseException:
                 del self._records[cid]
-            shutil.rmtree(d, ignore_errors=True)
-            raise ServiceSaturatedError(
-                f"submission queue is full ({self._queue.maxsize} pending)"
-            ) from None
+                shutil.rmtree(d, ignore_errors=True)
+                raise
+            self._queue.put_nowait(cid)
         return cid
 
     def cancel(self, campaign_id: str) -> str:

@@ -338,6 +338,25 @@ def test_submit_saturation_is_explicit(tmp_path):
     assert os.listdir(svc.campaigns_dir) == [cid]
 
 
+def test_recovery_exceeds_queue_size_without_blocking(tmp_path):
+    """A restarted service re-enqueues *every* recoverable campaign even
+    when there are more of them than its submission cap — a saturated
+    service that crashed must recover, not deadlock in start()."""
+    state = str(tmp_path / "s")
+    svc = CampaignService(state, queue_size=4)  # not started: all stay queued
+    cids = [svc.submit(_base_spec(seed=s)) for s in range(3, 7)]
+    svc2 = CampaignService(state, queue_size=1)
+    t = threading.Thread(target=svc2._recover, daemon=True)
+    t.start()
+    t.join(10.0)
+    assert not t.is_alive(), "_recover() blocked on the dispatch queue"
+    # all four recovered, in original submission order
+    assert [svc2._queue.get_nowait() for _ in range(4)] == cids
+    # the submission cap still applies to new submits while saturated
+    with pytest.raises(ServiceSaturatedError):
+        svc2.submit(_base_spec(seed=9))
+
+
 def test_cancelled_and_torn_campaigns_not_recovered(tmp_path):
     state = str(tmp_path / "s")
     svc = CampaignService(state)
@@ -436,6 +455,7 @@ def api_run(ref_session, tmp_path_factory):
     _, out["telemetry_all"] = get("/telemetry")
     _, out["health"] = get("/health")
     out["bad_spec"] = post("/campaigns", {"path": "warp"})
+    out["bad_telemetry_n"] = get("/telemetry?n=zap")
     out["unknown_get"] = get("/campaigns/c9999-deadbeef")
     out["unknown_cancel"] = post("/campaigns/c9999-deadbeef/cancel")
     out["no_route"] = get("/nope")
@@ -495,6 +515,7 @@ def test_api_telemetry_and_health(api_run):
 
 def test_api_error_paths(api_run):
     assert api_run["bad_spec"][0] == 400
+    assert api_run["bad_telemetry_n"][0] == 400
     assert api_run["unknown_get"][0] == 404
     assert api_run["unknown_cancel"][0] == 404
     assert api_run["no_route"][0] == 404
