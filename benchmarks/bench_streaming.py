@@ -1,6 +1,6 @@
 """Streaming churn campaigns: zero-churn equivalence + churn-run rates.
 
-Two legs, both doubling as CI smoke checks:
+Three legs, all doubling as CI smoke checks:
 
 * **Zero-churn equivalence** — an epoch-chunked streaming run with every
   bank slot attached and no events must be bitwise-equal to the monolithic
@@ -14,11 +14,22 @@ Two legs, both doubling as CI smoke checks:
   a live bank actually serves) and sanity-checks the sentinel/cost
   accounting (detached slot-UEs carry mode ``-1`` and zero executed
   FLOPs); raises otherwise.
+* **Pipelined executor + delta checkpoints** — the churn campaign run
+  with per-segment durable checkpoints, serial (``pipeline=False``, the
+  bitwise reference) vs pipelined (device scan of segment k+1 dispatched
+  while a host worker assembles/checkpoints segment k).  Reports the
+  checkpointed resident slot-UEs/s both ways, the per-segment wall-time
+  breakdown (dispatch / device wait / host assembly / checkpoint write)
+  from the executor's ``stats`` hook, and the per-segment delta-checkpoint
+  bytes measured at two campaign lengths — raises unless the per-segment
+  bytes are independent of campaign length (the O(segment) contract).
 """
 
 from __future__ import annotations
 
 import argparse
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -116,6 +127,63 @@ def run(n_slots: int = 24, n_ues: int = 4, segment_slots: int = 8) -> dict:
     print(f"churn:       {churn_rate:8.1f} resident slot-UEs/s warm "
           f"({resident_slot_ues}/{n_slots * hist.n_ues} slot-UEs resident, "
           f"{hist.n_ues}-id universe on a {n_ues}-slot bank)")
+
+    # -- pipelined executor + delta checkpoints ------------------------------
+    def _ckpt_run(sess, *, pipeline: bool) -> dict:
+        stats: dict = {}
+        d = tempfile.mkdtemp(prefix="arches-bench-ck-")
+        try:
+            sess.run_streaming(checkpoint_dir=d, pipeline=pipeline,
+                               stats=stats)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        return stats
+
+    def _time_ckpt(sess, *, pipeline: bool, repeats: int = 3):
+        _ckpt_run(sess, pipeline=pipeline)  # warm
+        t0 = time.perf_counter()
+        stats: dict = {}
+        for _ in range(repeats):
+            stats = _ckpt_run(sess, pipeline=pipeline)
+        return (time.perf_counter() - t0) / repeats, stats
+
+    serial_warm, _ = _time_ckpt(churn_sess, pipeline=False)
+    pipe_warm, pipe_stats = _time_ckpt(churn_sess, pipeline=True)
+    serial_ck_rate = resident_slot_ues / serial_warm
+    pipe_ck_rate = resident_slot_ues / pipe_warm
+    segs = max(pipe_stats["segments"], 1)
+    breakdown = {
+        "dispatch": pipe_stats["dispatch_s"] / segs,
+        "wait": pipe_stats["wait_s"] / segs,
+        "assembly": pipe_stats["assembly_s"] / segs,
+        "checkpoint": pipe_stats["checkpoint_s"] / segs,
+    }
+    print(f"checkpointed serial:    {serial_ck_rate:8.1f} resident "
+          "slot-UEs/s warm (assembly+checkpoint on the dispatch thread)")
+    print(f"checkpointed pipelined: {pipe_ck_rate:8.1f} resident "
+          f"slot-UEs/s warm ({pipe_ck_rate / serial_ck_rate:.2f}x; device "
+          "scan of segment k+1 overlaps host assembly of segment k)")
+    print("per-segment wall (pipelined): "
+          + "  ".join(f"{k} {v * 1e3:.2f}ms" for k, v in breakdown.items()))
+
+    # O(segment) checkpoint contract: per-segment delta bytes must not
+    # grow with campaign length (the monolithic format re-writes the whole
+    # horizon every boundary; the delta writes only the segment's rows)
+    zc2_spec = _specs(2 * n_slots, n_ues, segment_slots)[1]
+    zc2_sess = ArchesSession(
+        zc2_spec, ai_params=mono_sess.ai_params, engine=zc_sess.engine
+    )
+    bytes_1 = _ckpt_run(zc_sess, pipeline=True)["checkpoint_bytes"]
+    bytes_2 = _ckpt_run(zc2_sess, pipeline=True)["checkpoint_bytes"]
+    all_bytes = bytes_1 + bytes_2
+    assert max(all_bytes) <= 1.05 * min(all_bytes), (
+        f"per-segment delta-checkpoint bytes vary with campaign length: "
+        f"{bytes_1} at {n_slots} slots vs {bytes_2} at {2 * n_slots}"
+    )
+    delta_bytes = int(np.mean(all_bytes))
+    print(f"delta checkpoints: {delta_bytes} B/segment at {n_slots} and "
+          f"{2 * n_slots} slots (length-independent)")
+
     return {
         "zero_churn_equal": "bitwise",
         "streaming_slot_ues_per_s": zc_rate,
@@ -123,6 +191,12 @@ def run(n_slots: int = 24, n_ues: int = 4, segment_slots: int = 8) -> dict:
         "churn_resident_slot_ues_per_s": churn_rate,
         "resident_slot_ues": resident_slot_ues,
         "n_segments": n_segments,
+        "serial_checkpointed_slot_ues_per_s": serial_ck_rate,
+        "pipelined_checkpointed_slot_ues_per_s": pipe_ck_rate,
+        "pipeline_speedup": pipe_ck_rate / serial_ck_rate,
+        "segment_breakdown_s": breakdown,
+        "delta_ckpt_bytes_per_segment": delta_bytes,
+        "delta_bytes_length_invariant": "yes",
     }
 
 

@@ -5,12 +5,14 @@ Two checks, both against the repo's committed ``BENCH_<tag>.json``:
 1. **Schema compatibility** — the snapshot must parse, declare a
    compatible schema (``arches-bench-v1``; ``arches-bench-v2`` which adds
    the streaming/churn section; ``arches-bench-v3`` which additionally
-   adds the fault-injection/crash-resume section; or ``arches-bench-v4``
-   which additionally adds the campaign-service section), and carry every
-   key current tooling reads (engine/gated/fused/bf16 rates, the campaign
-   provenance hash, the host fingerprint).  A PR that renames a payload field without migrating the
-   committed snapshot fails here, not six PRs later when someone plots the
-   trajectory.
+   adds the fault-injection/crash-resume section; ``arches-bench-v4``
+   which additionally adds the campaign-service section; or
+   ``arches-bench-v5`` which extends the streaming section with the
+   pipelined-executor rates and delta-checkpoint measurements), and carry
+   every key current tooling reads (engine/gated/fused/bf16 rates, the
+   campaign provenance hash, the host fingerprint).  A PR that renames a
+   payload field without migrating the committed snapshot fails here, not
+   six PRs later when someone plots the trajectory.
 
 2. **Regression** — when a freshly measured candidate snapshot is supplied
    (``--candidate``, or automatically by ``benchmarks.run --smoke --json``),
@@ -32,21 +34,22 @@ import sys
 from pathlib import Path
 
 #: the committed snapshot this repo's trajectory is anchored to
-DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr9.json"
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_pr10.json"
 
 #: wall-clock regression tolerance on comparable hosts
 REGRESSION_FRAC = 0.20
 
 #: the schema current tooling writes
-SCHEMA = "arches-bench-v4"
+SCHEMA = "arches-bench-v5"
 
 #: schemas current tooling still reads: v1 snapshots predate the streaming
 #: section (BENCH_pr6.json stays valid); v2 additionally requires it; v3
 #: additionally requires the fault-injection/crash-resume section; v4
-#: additionally requires the campaign-service section
+#: additionally requires the campaign-service section; v5 additionally
+#: requires the pipelined-executor / delta-checkpoint streaming keys
 SCHEMA_COMPAT = (
     "arches-bench-v1", "arches-bench-v2", "arches-bench-v3",
-    "arches-bench-v4",
+    "arches-bench-v4", "arches-bench-v5",
 )
 
 #: top-level keys every snapshot must carry
@@ -64,6 +67,16 @@ REQUIRED_STREAMING_KEYS = (
     "streaming_slot_ues_per_s",
     "monolithic_slot_ues_per_s",
     "churn_resident_slot_ues_per_s",
+)
+
+#: keys the v5 ``streaming`` section must additionally carry (pipelined
+#: executor + O(segment) delta checkpoints)
+REQUIRED_STREAMING_V5_KEYS = (
+    "serial_checkpointed_slot_ues_per_s",
+    "pipelined_checkpointed_slot_ues_per_s",
+    "segment_breakdown_s",
+    "delta_ckpt_bytes_per_segment",
+    "delta_bytes_length_invariant",
 )
 
 #: keys the v3+ ``faults`` section must carry
@@ -121,16 +134,21 @@ def validate_schema(payload: dict, label: str) -> list[str]:
     for key in REQUIRED_KEYS:
         if key not in payload:
             errors.append(f"{label}: missing top-level key {key!r}")
-    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4"):
+    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4",
+                  "arches-bench-v5"):
         streaming = payload.get("streaming")
         if streaming is None:
             errors.append(f"{label}: {schema[-2:]} snapshot missing "
                           "'streaming'")
         else:
-            for key in REQUIRED_STREAMING_KEYS:
+            required = REQUIRED_STREAMING_KEYS + (
+                REQUIRED_STREAMING_V5_KEYS
+                if schema == "arches-bench-v5" else ()
+            )
+            for key in required:
                 if key not in streaming:
                     errors.append(f"{label}: streaming missing {key!r}")
-    if schema in ("arches-bench-v3", "arches-bench-v4"):
+    if schema in ("arches-bench-v3", "arches-bench-v4", "arches-bench-v5"):
         faults = payload.get("faults")
         if faults is None:
             errors.append(f"{label}: {schema[-2:]} snapshot missing "
@@ -139,10 +157,11 @@ def validate_schema(payload: dict, label: str) -> list[str]:
             for key in REQUIRED_FAULTS_KEYS:
                 if key not in faults:
                     errors.append(f"{label}: faults missing {key!r}")
-    if schema == "arches-bench-v4":
+    if schema in ("arches-bench-v4", "arches-bench-v5"):
         service = payload.get("service")
         if service is None:
-            errors.append(f"{label}: v4 snapshot missing 'service'")
+            errors.append(f"{label}: {schema[-2:]} snapshot missing "
+                          "'service'")
         else:
             for key in REQUIRED_SERVICE_KEYS:
                 if key not in service:
@@ -235,7 +254,7 @@ def check(baseline: Path | str, candidate: Path | str | None = None) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
-                    help="committed snapshot (default: BENCH_pr9.json)")
+                    help="committed snapshot (default: BENCH_pr10.json)")
     ap.add_argument("--candidate", default=None,
                     help="freshly measured snapshot to diff against baseline")
     args = ap.parse_args()

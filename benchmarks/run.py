@@ -40,7 +40,7 @@ def _jax_backend() -> str:
 
 def _json_payload(outs: dict) -> dict:
     """Assemble the perf-trajectory snapshot from section outputs."""
-    payload: dict = {"schema": "arches-bench-v4", "time": time.strftime(
+    payload: dict = {"schema": "arches-bench-v5", "time": time.strftime(
         "%Y-%m-%dT%H:%M:%S")}
     # host fingerprint: check_snapshot only compares absolute rates when
     # these match (cross-host wall-clock deltas are meaningless)
@@ -97,7 +97,9 @@ def _json_payload(outs: dict) -> dict:
         }
     streaming = outs.get("streaming")
     if streaming:
-        # v2 schema: the epoch-chunked churn-campaign rates
+        # v2 schema: the epoch-chunked churn-campaign rates; v5 adds the
+        # pipelined-executor rates, the per-segment wall-time breakdown,
+        # and the O(segment) delta-checkpoint byte measurement
         payload["streaming"] = {
             "zero_churn_equal": streaming["zero_churn_equal"],
             "streaming_slot_ues_per_s":
@@ -107,6 +109,16 @@ def _json_payload(outs: dict) -> dict:
             "churn_resident_slot_ues_per_s":
                 streaming["churn_resident_slot_ues_per_s"],
             "n_segments": streaming["n_segments"],
+            "serial_checkpointed_slot_ues_per_s":
+                streaming["serial_checkpointed_slot_ues_per_s"],
+            "pipelined_checkpointed_slot_ues_per_s":
+                streaming["pipelined_checkpointed_slot_ues_per_s"],
+            "pipeline_speedup": streaming["pipeline_speedup"],
+            "segment_breakdown_s": streaming["segment_breakdown_s"],
+            "delta_ckpt_bytes_per_segment":
+                streaming["delta_ckpt_bytes_per_segment"],
+            "delta_bytes_length_invariant":
+                streaming["delta_bytes_length_invariant"],
         }
     faults = outs.get("faults")
     if faults:

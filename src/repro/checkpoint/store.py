@@ -10,9 +10,17 @@ Design for the 1000+-node target (DESIGN.md):
   only (manifest present); the training loop resumes from there after any
   failure, which is the recovery half of the paper's fail-safe principle
   applied to training.
-* **Keep-k** — bounded disk usage under long runs.
+* **Keep-k** — bounded disk usage under long runs (``keep=None`` retains
+  everything, which delta chains require).
 * **bf16-safe** — bfloat16 leaves round-trip as uint16 payloads + dtype tag
   (numpy has no native bf16).
+* **Delta chains** — a step may be tagged (via ``manifest_extra``) as an
+  *incremental* checkpoint carrying only what changed since the previous
+  step.  ``resume_chain`` walks backwards from the latest complete step
+  through the tagged deltas until it reaches either step 1 (the chain
+  covers the whole run) or an untagged *monolithic* checkpoint that anchors
+  the prefix — which is exactly how a directory written by the legacy
+  full-state writer, then continued by the delta writer, stays resumable.
 * At real scale each host writes only its addressable shards; here the
   process is single-host, so the shard index is trivially [0] — the layout
   (per-leaf files + JSON manifest) is the multi-host-ready one.
@@ -31,6 +39,12 @@ import jax.numpy as jnp
 import numpy as np
 
 _MANIFEST = "manifest.json"
+
+#: ``manifest_extra["kind"]`` tag marking a step as an incremental delta in
+#: a manifest-chained sequence (``manifest_extra["prev_step"]`` names its
+#: predecessor).  Untagged checkpoints are monolithic (full-state) — the
+#: legacy streaming format stays loadable as a chain anchor.
+STREAMING_DELTA_KIND = "arches-streaming-delta-v1"
 
 
 class CheckpointMismatchError(ValueError):
@@ -51,8 +65,16 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
     return out
 
 
-def save_pytree(tree: Any, directory: str) -> None:
-    """Atomically write ``tree`` to ``directory``."""
+def save_pytree(
+    tree: Any, directory: str, *, manifest_extra: dict | None = None
+) -> None:
+    """Atomically write ``tree`` to ``directory``.
+
+    ``manifest_extra`` (plain-JSON dict) is merged into the manifest
+    document — the delta-chain writer stores its ``kind``/``prev_step``
+    linkage there so chain membership is part of the same atomic publish
+    as the payload.  ``leaves``/``treedef`` keys are reserved.
+    """
     parent = os.path.dirname(os.path.abspath(directory)) or "."
     os.makedirs(parent, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=os.path.basename(directory) + ".tmp-", dir=parent)
@@ -70,8 +92,12 @@ def save_pytree(tree: Any, directory: str) -> None:
                 os.fsync(f.fileno())
             manifest[key] = {"file": fname, "dtype": dtype_tag, "shape": list(arr.shape)}
         treedef = jax.tree_util.tree_structure(tree)
+        doc = dict(manifest_extra or {})
+        if "leaves" in doc or "treedef" in doc:
+            raise ValueError("manifest_extra may not override leaves/treedef")
+        doc.update({"leaves": manifest, "treedef": str(treedef)})
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
-            json.dump({"leaves": manifest, "treedef": str(treedef)}, f)
+            json.dump(doc, f)
             f.flush()
             os.fsync(f.fileno())
         if os.path.exists(directory):
@@ -157,6 +183,60 @@ def load_pytree(directory: str) -> Any:
     return out
 
 
+def read_manifest_extra(directory: str) -> dict:
+    """The non-payload fields of a checkpoint's manifest document.
+
+    Everything ``save_pytree`` was handed as ``manifest_extra`` (empty for
+    checkpoints written without one, including every pre-delta legacy
+    checkpoint).
+    """
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        doc = json.load(f)
+    return {k: v for k, v in doc.items() if k not in ("leaves", "treedef")}
+
+
+def checkpoint_kind(directory: str) -> str | None:
+    """A checkpoint's ``kind`` tag (None == untagged, i.e. monolithic)."""
+    return read_manifest_extra(directory).get("kind")
+
+
+def resume_chain(root: str) -> tuple[int | None, list[int]]:
+    """Resolve the restore path for a delta-chained checkpoint directory.
+
+    Returns ``(anchor, deltas)``: ``deltas`` is the ascending run of
+    ``STREAMING_DELTA_KIND`` steps ending at the latest complete step, and
+    ``anchor`` is the monolithic checkpoint the chain builds on (``None``
+    when the chain reaches back to step 1 and therefore replays from the
+    initial state — or when the directory is empty).  A directory whose
+    latest step is monolithic returns ``(latest, [])``: the legacy
+    restore path, unchanged.
+
+    Raises ``CheckpointMismatchError`` on a broken chain — a delta whose
+    recorded ``prev_step`` is missing from disk (e.g. garbage-collected):
+    an incremental checkpoint without its prefix restores nothing.
+    """
+    steps = list_steps(root)
+    if not steps:
+        return None, []
+    present = set(steps)
+    deltas: list[int] = []
+    s = steps[-1]
+    while s >= 1 and s in present:
+        d = os.path.join(root, f"step_{s:08d}")
+        if checkpoint_kind(d) != STREAMING_DELTA_KIND:
+            return s, deltas[::-1]
+        prev = read_manifest_extra(d).get("prev_step")
+        prev = s - 1 if prev is None else int(prev)
+        deltas.append(s)
+        s = prev
+    if s >= 1:
+        raise CheckpointMismatchError(
+            f"delta chain in {root} is broken: step {deltas[-1]}'s "
+            f"predecessor {s} is missing (complete steps: {steps})"
+        )
+    return None, deltas[::-1]
+
+
 def list_steps(root: str) -> list[int]:
     """All *complete* checkpoint steps under ``root``, ascending.
 
@@ -185,9 +265,15 @@ def latest_step(root: str) -> int | None:
 
 
 class CheckpointManager:
-    """save-every / keep-k / restore-latest policy around the atomic store."""
+    """save-every / keep-k / restore-latest policy around the atomic store.
 
-    def __init__(self, root: str, *, save_every: int = 100, keep: int = 3):
+    ``keep=None`` disables garbage collection entirely — required for delta
+    chains, where pruning an early step would orphan every later delta.
+    """
+
+    def __init__(
+        self, root: str, *, save_every: int = 100, keep: int | None = 3
+    ):
         self.root = root
         self.save_every = save_every
         self.keep = keep
@@ -196,10 +282,17 @@ class CheckpointManager:
     def dir_for(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:08d}")
 
-    def maybe_save(self, step: int, tree: Any, *, force: bool = False) -> bool:
+    def maybe_save(
+        self,
+        step: int,
+        tree: Any,
+        *,
+        force: bool = False,
+        manifest_extra: dict | None = None,
+    ) -> bool:
         if not force and (step == 0 or step % self.save_every):
             return False
-        save_pytree(tree, self.dir_for(step))
+        save_pytree(tree, self.dir_for(step), manifest_extra=manifest_extra)
         self._gc()
         return True
 
@@ -214,6 +307,8 @@ class CheckpointManager:
         return list_steps(self.root)
 
     def _gc(self) -> None:
+        if self.keep is None:
+            return
         steps = sorted(
             int(n.split("_")[1])
             for n in os.listdir(self.root)

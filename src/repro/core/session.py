@@ -966,6 +966,9 @@ class ArchesSession:
         resume_from=None,
         max_segments=None,
         on_segment=None,
+        pipeline=True,
+        checkpoint_format="delta",
+        stats=None,
     ) -> BatchedRunHistory:
         """Epoch-chunked streaming campaign: attach/detach under churn.
 
@@ -978,16 +981,23 @@ class ArchesSession:
         components (AI params, engine, trained policies) — the compiled
         segment program depends only on shapes, not on the schedule.
 
-        Crash resumability: ``checkpoint_dir`` snapshots the scan carry +
-        UE bank + host accumulators atomically after every completed
-        segment; ``resume_from`` restarts from the latest complete
-        checkpoint in that directory, bitwise-equal to the uninterrupted
-        run.  ``max_segments`` stops early after that many segments (the
-        deterministic kill hook the resume tests use).  ``on_segment``
-        receives a ``repro.core.streaming.SegmentEvent`` after every
-        completed (and, when armed, checkpointed) segment; returning
-        truthy stops the drive loop at that boundary — the graceful-drain
-        primitive ``repro.service.CampaignService`` builds on.
+        Crash resumability: ``checkpoint_dir`` snapshots the loop state
+        atomically after every completed segment — as O(segment)
+        manifest-chained deltas by default, or the legacy O(campaign)
+        full snapshot with ``checkpoint_format="monolithic"``;
+        ``resume_from`` restarts from the latest complete checkpoint in
+        that directory (delta chains replayed, legacy monolithic
+        directories loadable unchanged), bitwise-equal to the
+        uninterrupted run.  ``max_segments`` stops early after that many
+        segments (the deterministic kill hook the resume tests use).
+        ``on_segment`` receives a ``repro.core.streaming.SegmentEvent``
+        after every completed (and, when armed, checkpointed) segment;
+        returning truthy stops the drive loop at that boundary — the
+        graceful-drain primitive ``repro.service.CampaignService`` builds
+        on.  ``pipeline=False`` selects the serial reference executor
+        (default: device scans overlap host assembly/checkpointing,
+        bitwise-identical either way); ``stats`` (a dict) receives the
+        per-phase wall-time breakdown.
 
         Returns a ``BatchedRunHistory`` on the *stable-id* axis: detached
         slot-UEs carry the ``-1`` mode sentinel and zeroed KPMs/outputs,
@@ -1001,6 +1011,9 @@ class ArchesSession:
             resume_from=resume_from,
             max_segments=max_segments,
             on_segment=on_segment,
+            pipeline=pipeline,
+            checkpoint_format=checkpoint_format,
+            stats=stats,
         )
         if churn is not None:
             if not isinstance(churn, streaming.ChurnSchedule):

@@ -27,11 +27,39 @@ The correctness currency is the repo's standing one, extended to churn:
 ``ChurnSchedule`` is the declarative (JSON-round-trippable) form, hashed
 into ``CampaignSpec`` like ``TopologySpec``; ``run_streaming`` is the
 driver ``ArchesSession.run_streaming`` dispatches to.
+
+**Pipelined execution** (the default): JAX dispatch is asynchronous, so the
+driver's main thread only *launches* segment scans — gather the carry,
+enqueue the compiled program, hand the un-materialized trajectory to a
+single assembly worker — while the worker synchronizes segment k
+(``block_until_ready``), scatters it into the id-axis accumulators, writes
+its checkpoint and fires ``on_segment``, all under segment k+1's device
+compute.  The scan carries are *donated*
+(``jax.jit(..., donate_argnums=...)``) so the steady-state loop re-uses one
+carry allocation; anything the worker still needs past the donation point
+(the carry snapshot for checkpointing, the pre/post switch counters) is
+explicitly ``jnp.copy``'d before the next launch.  Segments are assembled
+strictly in order, and a stop (``on_segment`` truthy / worker exception)
+discards any speculatively launched segments un-assembled and
+un-checkpointed — so the pipelined driver is observably identical
+(bitwise, on every history leaf and every checkpoint) to ``pipeline=False``.
+
+**Incremental checkpoints** (the default ``checkpoint_format="delta"``):
+instead of re-writing the whole campaign history each boundary
+(O(n_slots x n_ids) bytes per segment, quadratic total I/O), each segment
+persists only its own ``[t0, t1)`` history rows plus the O(capacity) scan
+carry, manifest-chained via ``repro.checkpoint.store.STREAMING_DELTA_KIND``;
+``resume_from=`` replays the chain (anchored on a legacy monolithic
+checkpoint when one starts it), bitwise-equal to the uninterrupted run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import queue
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -256,14 +284,36 @@ def gather_permutation(
     )
 
 
+#: test hook — set True to disable the identity fast path so the gathered
+#: path can be asserted bitwise-equal to it (tests/test_streaming.py)
+_FORCE_GATHER = False
+
+
+def is_identity_permutation(perm: np.ndarray) -> bool:
+    """True iff every bank slot keeps its occupant (no cold rows, no moves).
+
+    This is the zero-churn boundary: ``gather_state_rows`` is then the
+    identity and can be skipped entirely.
+    """
+    perm = np.asarray(perm)
+    return perm.size > 0 and bool(
+        np.array_equal(perm, np.arange(perm.shape[0]))
+    )
+
+
 def gather_state_rows(state, perm: np.ndarray, cold_state):
     """Re-pack a per-UE device-state pytree along its leading bank axis.
 
     Survivor rows gather from their previous slot; ``perm < 0`` rows take
     the cold-start value from ``cold_state``.  An identity permutation with
     no cold rows returns every leaf value bitwise-unchanged (the zero-churn
-    contract rides on this).
+    contract rides on this) — and is detected up front so a zero-churn
+    boundary pays no gather at all: ``state`` is returned as-is, which is
+    also what lets the donated carry buffer flow straight into the next
+    segment's scan.
     """
+    if not _FORCE_GATHER and is_identity_permutation(perm):
+        return state
     take = jnp.asarray(np.maximum(perm, 0))
     cold = jnp.asarray(perm < 0)
 
@@ -318,6 +368,55 @@ def _streaming_ckpt_state(
     return state
 
 
+def _delta_ckpt_state(
+    *, next_seg, spec_fp, t0, t1, occupant, link, sw, modes_full,
+    bank_slot_full, decisions_full, n_switches_id, kpms_full, outputs_full,
+):
+    """One segment's incremental snapshot (all-dict, checkpoint-stable).
+
+    O(seg x n_ids) bytes — the segment's own ``[t0, t1)`` history rows —
+    plus the O(capacity) scan carry and bank occupancy, independent of how
+    long the campaign has been running.  ``resume_from`` rebuilds the full
+    accumulators by replaying every delta's row band in chain order; the
+    carry/occupancy/counters in the *last* delta are the live loop state.
+    """
+    state = {
+        "meta": {
+            "next_seg": np.int32(next_seg),
+            "spec_fp_hi": np.uint32(spec_fp >> 32),
+            "spec_fp_lo": np.uint32(spec_fp & 0xFFFFFFFF),
+            "t0": np.int32(t0),
+            "t1": np.int32(t1),
+        },
+        "occupant": np.asarray(occupant),
+        "link": dict(link._asdict()),
+        "rows": {
+            "modes": modes_full[t0:t1],
+            "bank_slot": bank_slot_full[t0:t1],
+            "kpms": {k: v[t0:t1] for k, v in kpms_full.items()},
+            "outputs": {k: v[t0:t1] for k, v in outputs_full.items()},
+        },
+    }
+    if sw is not None:
+        sw_d = dict(sw._asdict())
+        sw_d["rings"] = dict(sw.rings._asdict())
+        state["sw"] = sw_d
+        state["rows"]["decisions"] = decisions_full[t0:t1]
+        # cumulative per-id counter: O(n_ids), cheap enough to ship whole
+        state["n_switches_id"] = n_switches_id
+    return state
+
+
+def _dir_bytes(directory: str) -> int:
+    """Total payload bytes of one checkpoint directory (bench/stats)."""
+    total = 0
+    for name in os.listdir(directory):
+        p = os.path.join(directory, name)
+        if os.path.isfile(p):
+            total += os.path.getsize(p)
+    return total
+
+
 def _spec_fingerprint(spec) -> int:
     """64-bit view of ``spec_hash`` (checkpointable as a uint64 leaf)."""
     from repro.core.session import spec_hash
@@ -331,12 +430,20 @@ class SegmentEvent:
 
     Fired once per *completed* segment, after the checkpoint (when armed)
     has been durably written — so anything the callback observes is also
-    recoverable.  ``history`` is a ``BatchedRunHistory`` view over the
-    driver's live accumulators: slots ``[0, t1)`` are populated, later
-    slots still carry their detached fill values.  The arrays are reused
-    by subsequent segments — consumers that retain data past the callback
-    must copy (``repro.core.telemetry.segment_telemetry`` reduces the
-    ``[t0, t1)`` span to plain floats, which is the intended use).
+    recoverable.  Under the pipelined executor the callback runs on the
+    assembly worker thread, still strictly in segment order.
+
+    ``history`` is a ``BatchedRunHistory`` view over the driver's live
+    full-campaign accumulators: slots ``[0, t1)`` are populated, later
+    slots still carry their detached fill values.  ``segment_history`` is
+    the O(segment) view of the same accumulators restricted to this
+    segment's ``[t0, t1)`` rows (every 2-D leaf has leading dim
+    ``t1 - t0``; the cumulative ``n_switches`` stays per-id) — telemetry
+    consumers should reduce *it*, so per-boundary cost never grows with
+    ``t0``.  Both are views into reused arrays — consumers that retain
+    data past the callback must copy
+    (``repro.core.telemetry.segment_telemetry`` reduces the span to plain
+    floats, which is the intended use).
     """
 
     seg_idx: int  # 0-based index of the segment that just completed
@@ -344,7 +451,8 @@ class SegmentEvent:
     t0: int  # first slot of the segment
     t1: int  # one past the segment's last slot
     occupant: np.ndarray  # (capacity,) bank occupancy after this segment
-    history: "object"  # BatchedRunHistory view (see above)
+    history: "object"  # full-campaign BatchedRunHistory view (see above)
+    segment_history: "object" = None  # [t0, t1) span view (see above)
 
 
 def run_streaming(
@@ -354,37 +462,62 @@ def run_streaming(
     resume_from: str | None = None,
     max_segments: int | None = None,
     on_segment=None,
+    pipeline: bool = True,
+    checkpoint_format: str = "delta",
+    stats: dict | None = None,
 ) -> "object":
     """Execute an epoch-chunked streaming campaign; one compiled segment.
 
     The driver: validate churn -> resolve the scenario over the *stable-id*
-    axis -> loop segments (admission re-pack, state gather/cold-init,
+    axis -> loop segments (admission re-pack, state gather/cold-init —
+    skipped entirely at zero-churn boundaries via the identity fast path —
     per-occupant param/mode/key gather, one cached scan call with the
-    active mask and the global ``slot0``) -> assemble the full
-    ``BatchedRunHistory`` on the id axis (detached slot-UEs carry the
+    active mask and the global ``slot0``, carries donated) -> assemble the
+    full ``BatchedRunHistory`` on the id axis (detached slot-UEs carry the
     ``-1`` mode sentinel, zeroed KPMs/outputs, ``attached=False`` and
     ``bank_slot=-1``).
 
     Because segment shapes are fixed and ``slot0``/``active`` are traced,
     every segment reuses one compiled program per execution path.
 
+    ``pipeline=True`` (default) overlaps segment k's host-side assembly,
+    telemetry and checkpoint write with segment k+1's device scan: the
+    main thread only launches async scans, a single worker thread
+    synchronizes and assembles strictly in order behind a bounded
+    double-buffer queue (see the module docstring).  ``pipeline=False``
+    is the serial reference; both produce bitwise-identical histories,
+    checkpoints and event streams.
+
     Crash resumability: with ``checkpoint_dir`` the driver snapshots the
-    scan carry + UE bank + host accumulators through the atomic
-    ``repro.checkpoint.store`` after *every completed segment*;
-    ``resume_from`` restarts from the latest complete checkpoint in that
-    directory and — because each segment is a pure function of the
-    checkpointed state and the (deterministic) schedule — the resumed run
-    is bitwise-equal to the uninterrupted one on every history leaf.
-    ``max_segments`` stops after that many segments this call (the
-    deterministic kill hook: the returned history covers only the slots
-    run so far; later segments keep their detached fill values).
+    loop state through the atomic ``repro.checkpoint.store`` after *every
+    completed segment* — as an O(segment) incremental delta chained in the
+    manifest (``checkpoint_format="delta"``, default) or the legacy
+    O(campaign) full snapshot (``"monolithic"``).  ``resume_from``
+    restarts from the latest complete checkpoint in that directory (delta
+    chains are replayed, anchored on a monolithic step when one starts
+    them — so legacy directories resume unchanged and a legacy directory
+    continued in delta format stays resumable) and — because each segment
+    is a pure function of the checkpointed state and the (deterministic)
+    schedule — the resumed run is bitwise-equal to the uninterrupted one
+    on every history leaf.  ``max_segments`` stops after that many
+    segments this call (the deterministic kill hook: the returned history
+    covers only the slots run so far; later segments keep their detached
+    fill values).
 
     ``on_segment`` is the long-running-service hook: called with a
     ``SegmentEvent`` after every completed segment (after its checkpoint,
     when one is armed, has been durably written).  A truthy return stops
     the drive loop there — the graceful-drain primitive: the segment in
-    flight finishes, its checkpoint lands, and a later ``resume_from``
-    continues bitwise from exactly that boundary.
+    flight finishes, its checkpoint lands, speculatively launched segments
+    are discarded un-assembled, and a later ``resume_from`` continues
+    bitwise from exactly that boundary.
+
+    ``stats`` (optional dict) is filled with the per-phase wall-time
+    breakdown — ``dispatch_s`` (main-thread launch work), ``wait_s``
+    (assembly blocked on device compute), ``assembly_s`` (host scatter),
+    ``checkpoint_s`` (durable writes), ``checkpoint_bytes`` (per-segment
+    checkpoint payload sizes) — which is what
+    ``benchmarks/bench_streaming.py`` reports.
     """
     from repro.core.closed_loop import init_device_switch
     from repro.core.runtime import BatchedRunHistory
@@ -396,6 +529,12 @@ def run_streaming(
         normalize_modes,
         resolve_schedule,
     )
+
+    if checkpoint_format not in ("delta", "monolithic"):
+        raise ValueError(
+            f"checkpoint_format {checkpoint_format!r}: expected 'delta' "
+            "or 'monolithic'"
+        )
 
     spec = session.spec
     churn = spec.churn
@@ -457,21 +596,27 @@ def run_streaming(
             streaming_open_loop_fn,
         )
 
+        # the streaming programs donate their carry args (link0 [, sw0]) —
+        # the "donate" key marker keeps them cached apart from any
+        # non-donating build of the same program
         if closed:
             scan_fn = _cached_jit(
                 topo,
                 (engine, "streaming_closed", profile, sw_cfg,
-                 jax.tree.structure(policy), faults),
+                 jax.tree.structure(policy), faults, "donate"),
                 lambda: streaming_closed_loop_fn(
                     engine, topo, profile, sw_cfg, policy, faults=faults
                 ),
+                donate_argnums=(0, 1),
             )
         else:
             scan_fn = _cached_jit(
-                topo, (engine, "streaming_open", profile, faults),
+                topo,
+                (engine, "streaming_open", profile, faults, "donate"),
                 lambda: streaming_open_loop_fn(
                     engine, topo, profile, faults=faults
                 ),
+                donate_argnums=(0,),
             )
         cell_of_slot = jnp.asarray(topo.cell_of_ue)
         cell_params = topo.cell_params
@@ -497,35 +642,24 @@ def run_streaming(
     outputs_full: dict[str, np.ndarray] = {}
 
     # -- crash resume: restore the whole loop state from the latest
-    # complete checkpoint, then continue exactly where it left off -------
+    # complete checkpoint, then continue exactly where it left off.
+    # ``resume_chain`` resolves the restore path: a monolithic anchor
+    # (possibly legacy PR-8/9 format) plus the ascending delta steps
+    # layered on top of it -----------------------------------------------
     spec_fp = _spec_fingerprint(spec)
     start_seg = 0
     mgr = None
     if checkpoint_dir is not None or resume_from is not None:
         from repro.checkpoint.store import (
+            STREAMING_DELTA_KIND,
             CheckpointManager,
             CheckpointMismatchError,
-            latest_step,
             load_pytree,
+            resume_chain,
         )
-    if resume_from is not None:
-        step = latest_step(resume_from)
-        if step is None:
-            raise FileNotFoundError(
-                f"resume_from={resume_from!r} holds no complete checkpoint"
-            )
-        saved = load_pytree(
-            CheckpointManager(resume_from, save_every=1).dir_for(step)
-        )
-        saved_fp = (int(saved["meta"]["spec_fp_hi"]) << 32) | int(
-            saved["meta"]["spec_fp_lo"]
-        )
-        if saved_fp != spec_fp:
-            raise CheckpointMismatchError(
-                f"checkpoint in {resume_from!r} was written by a different "
-                "campaign spec — refusing to resume"
-            )
-        start_seg = int(saved["meta"]["next_seg"])
+
+    def _restore_carry(saved):
+        nonlocal occupant, link, sw
         occupant = np.asarray(saved["occupant"])
         link = type(link)(
             **{k: jnp.asarray(v) for k, v in saved["link"].items()}
@@ -539,87 +673,131 @@ def run_streaming(
                 rings=rings,
                 **{k: jnp.asarray(v) for k, v in sw_saved.items()},
             )
-            decisions_full = np.array(saved["decisions_full"])
-            n_switches_id = np.array(saved["n_switches_id"])
-        modes_full = np.array(saved["modes_full"])
-        bank_slot_full = np.array(saved["bank_slot_full"])
-        kpms_full = {k: np.array(v) for k, v in saved["kpms_full"].items()}
-        outputs_full = {
-            k: np.array(v) for k, v in saved["outputs_full"].items()
-        }
-    if checkpoint_dir is not None:
-        mgr = CheckpointManager(checkpoint_dir, save_every=1)
 
-    segs_run = 0
-    for t0 in range(start_seg * seg, n_slots, seg):
-        new_occupant = repack_bank(occupant, res[t0], n_cells=n_cells)
-        perm = gather_permutation(occupant, new_occupant)
-        link = gather_state_rows(link, perm, init_device_link(capacity))
-        if closed:
-            sw = gather_state_rows(sw, perm, cold_switch())
-            nsw_base = np.asarray(sw.n_switches)
-        occupant = new_occupant
-        occ_c = np.maximum(occupant, 0)
-        occupied = occupant >= 0
-        slots_b = np.nonzero(occupied)[0]
-        ids_b = occupant[slots_b]
-
-        keys_seg = jnp.take(id_keys, jnp.asarray(occ_c), axis=0)
-        params_seg = jax.tree.map(
-            (lambda x: jnp.take(x[t0:t0 + seg], jnp.asarray(occ_c), axis=1))
-            if per_ue_params
-            else (lambda x: x[t0:t0 + seg]),
-            params,
+    def _check_fp(saved, step):
+        saved_fp = (int(saved["meta"]["spec_fp_hi"]) << 32) | int(
+            saved["meta"]["spec_fp_lo"]
         )
-        active = jnp.asarray(occupied)
-        slot0 = jnp.int32(t0)
-        if rf is not None:
-            # a segment's fault masks follow occupant identity into slots
-            fault_seg = tuple(
-                jnp.asarray(m[t0:t0 + seg][:, occ_c])
-                for m in (rf.decision_valid, rf.corrupt, rf.telemetry_valid)
+        if saved_fp != spec_fp:
+            raise CheckpointMismatchError(
+                f"checkpoint step {step} in {resume_from!r} was written by "
+                "a different campaign spec — refusing to resume"
             )
-            corrupt_seg = fault_seg[1]
 
-        if closed:
-            if topo is None:
-                link, sw, traj = engine._run_closed_scan(
-                    profile, sw_cfg, link, sw, keys_seg, params_seg,
-                    policy, slot0=slot0, active=active,
-                    faults=faults,
-                    fault_masks=None if rf is None else fault_seg,
-                )
-            elif rf is None:
-                link, sw, traj = scan_fn(
-                    link, sw, keys_seg, params_seg, policy,
-                    cell_of_slot, cell_params, slot0, active,
-                )
-            else:
-                link, sw, traj = scan_fn(
-                    link, sw, keys_seg, params_seg, policy,
-                    cell_of_slot, cell_params, slot0, active, fault_seg,
-                )
-        else:
-            modes_seg = jnp.asarray(modes_grid[t0:t0 + seg][:, occ_c])
-            if topo is None:
-                link, traj = engine._run_scan(
-                    profile, link, keys_seg, modes_seg, params_seg,
-                    slot0=slot0, active=active,
-                    faults=faults,
-                    corrupt=None if rf is None else corrupt_seg,
-                )
-            elif rf is None:
-                link, traj = scan_fn(
-                    link, keys_seg, modes_seg, params_seg,
-                    cell_of_slot, cell_params, slot0, active,
-                )
-            else:
-                link, traj = scan_fn(
-                    link, keys_seg, modes_seg, params_seg,
-                    cell_of_slot, cell_params, slot0, active, corrupt_seg,
-                )
+    if resume_from is not None:
+        anchor, delta_steps = resume_chain(resume_from)
+        if anchor is None and not delta_steps:
+            raise FileNotFoundError(
+                f"resume_from={resume_from!r} holds no complete checkpoint"
+            )
+        rmgr = CheckpointManager(resume_from, save_every=1, keep=None)
+        if anchor is not None:
+            saved = load_pytree(rmgr.dir_for(anchor))
+            _check_fp(saved, anchor)
+            start_seg = int(saved["meta"]["next_seg"])
+            _restore_carry(saved)
+            if closed:
+                decisions_full = np.array(saved["decisions_full"])
+                n_switches_id = np.array(saved["n_switches_id"])
+            modes_full = np.array(saved["modes_full"])
+            bank_slot_full = np.array(saved["bank_slot_full"])
+            kpms_full = {
+                k: np.array(v) for k, v in saved["kpms_full"].items()
+            }
+            outputs_full = {
+                k: np.array(v) for k, v in saved["outputs_full"].items()
+            }
+        for dstep in delta_steps:
+            d = load_pytree(rmgr.dir_for(dstep))
+            _check_fp(d, dstep)
+            td0 = int(d["meta"]["t0"])
+            td1 = int(d["meta"]["t1"])
+            rows = d["rows"]
+            if not kpms_full:
+                kpms_full.update({
+                    k: np.zeros((n_slots, n_ids), np.asarray(v).dtype)
+                    for k, v in rows["kpms"].items()
+                })
+                outputs_full.update({
+                    k: np.zeros((n_slots, n_ids), np.asarray(v).dtype)
+                    for k, v in rows["outputs"].items()
+                })
+            modes_full[td0:td1] = np.asarray(rows["modes"])
+            bank_slot_full[td0:td1] = np.asarray(rows["bank_slot"])
+            for k in kpms_full:
+                kpms_full[k][td0:td1] = np.asarray(rows["kpms"][k])
+            for k in outputs_full:
+                outputs_full[k][td0:td1] = np.asarray(rows["outputs"][k])
+            if closed:
+                decisions_full[td0:td1] = np.asarray(rows["decisions"])
+        if delta_steps:
+            # the last delta holds the live loop state
+            start_seg = int(d["meta"]["next_seg"])
+            _restore_carry(d)
+            if closed:
+                n_switches_id = np.array(d["n_switches_id"])
+    if checkpoint_dir is not None:
+        mgr = CheckpointManager(
+            checkpoint_dir,
+            save_every=1,
+            # delta chains need every predecessor on disk; the legacy
+            # monolithic format keeps its bounded keep-k policy
+            keep=None if checkpoint_format == "delta" else 3,
+        )
 
-        # -- host-side assembly on the stable-id axis ---------------------
+    # -- pipelined segment executor ---------------------------------------
+    # The main thread below only *launches* work: admission re-pack, carry
+    # gather (identity fast path at zero-churn boundaries), async scan
+    # dispatch.  ``_assemble_segment`` — run strictly in segment order on
+    # the worker thread (``pipeline=True``) or inline (``pipeline=False``)
+    # — synchronizes, scatters into the id-axis accumulators, writes the
+    # durable checkpoint and fires ``on_segment``.  The bounded queue is
+    # the double buffer: at most 2 segments are ever in flight beyond the
+    # one being assembled, bounding speculative device/trajectory memory.
+    n_segments = n_slots // seg
+    home = None if topo is None else home_cells(n_ids, n_cells)
+    st = {
+        "dispatch_s": 0.0,
+        "wait_s": 0.0,
+        "assembly_s": 0.0,
+        "checkpoint_s": 0.0,
+        "checkpoint_bytes": [],
+    }
+    n_assembled = [0]  # worker-owned; read by the main thread post-join
+
+    # a delta must chain to its predecessor *on disk*: when this call
+    # resumes into a directory that lacks step ``start_seg`` (e.g. resumed
+    # from elsewhere), its first checkpoint is written monolithic so the
+    # chain stays anchored
+    need_anchor = (
+        mgr is not None
+        and checkpoint_format == "delta"
+        and start_seg > 0
+        and start_seg not in set(mgr.steps())
+    )
+
+    def _full_history(attached):
+        return BatchedRunHistory(
+            modes=modes_full,
+            kpms=kpms_full,
+            outputs=outputs_full,
+            decisions=decisions_full,
+            n_switches=n_switches_id,
+            cell_of_ue=home,
+            attached=attached,
+            bank_slot=bank_slot_full,
+        )
+
+    def _assemble_segment(item) -> bool:
+        """Sync + scatter + checkpoint + notify for one completed segment."""
+        seg_idx, t0 = item["seg_idx"], item["t0"]
+        t1 = t0 + seg
+        ids_b, slots_b = item["ids_b"], item["slots_b"]
+        t_a = time.perf_counter()
+        traj = jax.block_until_ready(item["traj"])
+        t_b = time.perf_counter()
+        st["wait_s"] += t_b - t_a
+
         flat_kpms = {
             k: np.asarray(v)
             for k, v in flatten_kpm_sources(traj["kpms"]).items()
@@ -644,66 +822,235 @@ def run_streaming(
             _scatter_segment(
                 decisions_full, traj["raw_decision"], t0, ids_b, slots_b
             )
-            delta = np.asarray(sw.n_switches) - nsw_base
+            delta = np.asarray(item["nsw_after"]) - np.asarray(
+                item["nsw_base"]
+            )
             n_switches_id[ids_b] += delta[slots_b]
         else:
-            _scatter_segment(modes_full, modes_seg, t0, ids_b, slots_b)
-        bank_slot_full[t0:t0 + seg, ids_b] = slots_b[None, :]
+            _scatter_segment(modes_full, item["modes_seg"], t0, ids_b, slots_b)
+        bank_slot_full[t0:t1, ids_b] = slots_b[None, :]
+        t_c = time.perf_counter()
+        st["assembly_s"] += t_c - t_b
 
-        seg_idx = t0 // seg
         if mgr is not None:
-            mgr.maybe_save(
-                seg_idx + 1,
-                _streaming_ckpt_state(
-                    next_seg=seg_idx + 1,
-                    spec_fp=spec_fp,
-                    occupant=occupant,
-                    link=link,
-                    sw=sw,
-                    modes_full=modes_full,
-                    bank_slot_full=bank_slot_full,
-                    decisions_full=decisions_full,
-                    n_switches_id=n_switches_id,
-                    kpms_full=kpms_full,
-                    outputs_full=outputs_full,
-                ),
-                force=True,
+            step = seg_idx + 1
+            as_delta = checkpoint_format == "delta" and not (
+                need_anchor and seg_idx == start_seg
             )
-        segs_run += 1
-        if on_segment is not None:
-            stop = on_segment(SegmentEvent(
-                seg_idx=seg_idx,
-                n_segments=n_slots // seg,
-                t0=t0,
-                t1=t0 + seg,
-                occupant=occupant.copy(),
-                history=BatchedRunHistory(
-                    modes=modes_full,
-                    kpms=kpms_full,
-                    outputs=outputs_full,
-                    decisions=decisions_full,
-                    n_switches=n_switches_id,
-                    cell_of_ue=(
-                        None if topo is None else home_cells(n_ids, n_cells)
-                    ),
-                    attached=res,
-                    bank_slot=bank_slot_full,
-                ),
-            ))
-            if stop:
-                break
-        if max_segments is not None and segs_run >= max_segments:
-            break
+            common = dict(
+                next_seg=step,
+                spec_fp=spec_fp,
+                occupant=item["occupant"],
+                link=item["ck_link"],
+                sw=item["ck_sw"],
+                modes_full=modes_full,
+                bank_slot_full=bank_slot_full,
+                decisions_full=decisions_full,
+                n_switches_id=n_switches_id,
+                kpms_full=kpms_full,
+                outputs_full=outputs_full,
+            )
+            if as_delta:
+                mgr.maybe_save(
+                    step,
+                    _delta_ckpt_state(t0=t0, t1=t1, **common),
+                    force=True,
+                    manifest_extra={
+                        "kind": STREAMING_DELTA_KIND,
+                        "prev_step": step - 1,
+                    },
+                )
+            else:
+                mgr.maybe_save(
+                    step, _streaming_ckpt_state(**common), force=True
+                )
+            st["checkpoint_s"] += time.perf_counter() - t_c
+            st["checkpoint_bytes"].append(_dir_bytes(mgr.dir_for(step)))
+        n_assembled[0] += 1
 
-    return BatchedRunHistory(
-        modes=modes_full,
-        kpms=kpms_full,
-        outputs=outputs_full,
-        decisions=decisions_full,
-        n_switches=n_switches_id,
-        cell_of_ue=(
-            None if topo is None else home_cells(n_ids, n_cells)
-        ),
-        attached=res.copy(),
-        bank_slot=bank_slot_full,
-    )
+        if on_segment is not None:
+            return bool(on_segment(SegmentEvent(
+                seg_idx=seg_idx,
+                n_segments=n_segments,
+                t0=t0,
+                t1=t1,
+                occupant=item["occupant"].copy(),
+                history=_full_history(res),
+                segment_history=BatchedRunHistory(
+                    modes=modes_full[t0:t1],
+                    kpms={k: v[t0:t1] for k, v in kpms_full.items()},
+                    outputs={k: v[t0:t1] for k, v in outputs_full.items()},
+                    decisions=(
+                        None if decisions_full is None
+                        else decisions_full[t0:t1]
+                    ),
+                    n_switches=n_switches_id,
+                    cell_of_ue=home,
+                    attached=res[t0:t1],
+                    bank_slot=bank_slot_full[t0:t1],
+                ),
+            )))
+        return False
+
+    _done = object()
+    stop_event = threading.Event()
+    worker_error: list = [None]
+    work_q: queue.Queue = queue.Queue(maxsize=2)
+
+    def _assembly_worker():
+        while True:
+            item = work_q.get()
+            if item is _done:
+                return
+            if stop_event.is_set():
+                continue  # speculative launch after a stop: never assembled
+            try:
+                if _assemble_segment(item):
+                    stop_event.set()
+            except BaseException as e:  # re-raised in the caller post-join
+                worker_error[0] = e
+                stop_event.set()
+
+    worker = None
+    if pipeline:
+        worker = threading.Thread(
+            target=_assembly_worker,
+            name="arches-streaming-assembly",
+            daemon=True,
+        )
+        worker.start()
+
+    dispatched = 0
+    try:
+        for t0 in range(start_seg * seg, n_slots, seg):
+            if stop_event.is_set():
+                break
+            t_d = time.perf_counter()
+            new_occupant = repack_bank(occupant, res[t0], n_cells=n_cells)
+            perm = gather_permutation(occupant, new_occupant)
+            link = gather_state_rows(link, perm, init_device_link(capacity))
+            if closed:
+                sw = gather_state_rows(sw, perm, cold_switch())
+                # the carry is donated into the scan below — copy the
+                # pre-segment switch counter out first
+                nsw_base = jnp.copy(sw.n_switches)
+            occupant = new_occupant
+            occ_c = np.maximum(occupant, 0)
+            occupied = occupant >= 0
+            slots_b = np.nonzero(occupied)[0]
+            ids_b = occupant[slots_b]
+
+            keys_seg = jnp.take(id_keys, jnp.asarray(occ_c), axis=0)
+            params_seg = jax.tree.map(
+                (lambda x: jnp.take(
+                    x[t0:t0 + seg], jnp.asarray(occ_c), axis=1
+                ))
+                if per_ue_params
+                else (lambda x: x[t0:t0 + seg]),
+                params,
+            )
+            active = jnp.asarray(occupied)
+            slot0 = jnp.int32(t0)
+            if rf is not None:
+                # a segment's fault masks follow occupant identity into slots
+                fault_seg = tuple(
+                    jnp.asarray(m[t0:t0 + seg][:, occ_c])
+                    for m in (
+                        rf.decision_valid, rf.corrupt, rf.telemetry_valid
+                    )
+                )
+                corrupt_seg = fault_seg[1]
+
+            modes_seg = None
+            if closed:
+                if topo is None:
+                    link, sw, traj = engine._run_closed_scan_streaming(
+                        profile, sw_cfg, link, sw, keys_seg, params_seg,
+                        policy, slot0=slot0, active=active,
+                        faults=faults,
+                        fault_masks=None if rf is None else fault_seg,
+                    )
+                elif rf is None:
+                    link, sw, traj = scan_fn(
+                        link, sw, keys_seg, params_seg, policy,
+                        cell_of_slot, cell_params, slot0, active,
+                    )
+                else:
+                    link, sw, traj = scan_fn(
+                        link, sw, keys_seg, params_seg, policy,
+                        cell_of_slot, cell_params, slot0, active, fault_seg,
+                    )
+            else:
+                modes_seg = jnp.asarray(modes_grid[t0:t0 + seg][:, occ_c])
+                if topo is None:
+                    link, traj = engine._run_scan_streaming(
+                        profile, link, keys_seg, modes_seg, params_seg,
+                        slot0=slot0, active=active,
+                        faults=faults,
+                        corrupt=None if rf is None else corrupt_seg,
+                    )
+                elif rf is None:
+                    link, traj = scan_fn(
+                        link, keys_seg, modes_seg, params_seg,
+                        cell_of_slot, cell_params, slot0, active,
+                    )
+                else:
+                    link, traj = scan_fn(
+                        link, keys_seg, modes_seg, params_seg,
+                        cell_of_slot, cell_params, slot0, active,
+                        corrupt_seg,
+                    )
+
+            item = {
+                "seg_idx": t0 // seg,
+                "t0": t0,
+                "traj": traj,
+                "ids_b": ids_b,
+                "slots_b": slots_b,
+                "occupant": occupant,
+                "modes_seg": modes_seg,
+            }
+            if closed:
+                item["nsw_base"] = nsw_base
+                # post-segment counter: copied because the carry may be
+                # donated into the *next* scan before assembly reads it
+                item["nsw_after"] = jnp.copy(sw.n_switches)
+            if mgr is not None:
+                # checkpoint snapshot of the carry — same donation-liveness
+                # rule; O(capacity), dispatched async like everything else
+                item["ck_link"] = jax.tree.map(jnp.copy, link)
+                item["ck_sw"] = (
+                    None if sw is None else jax.tree.map(jnp.copy, sw)
+                )
+            st["dispatch_s"] += time.perf_counter() - t_d
+            dispatched += 1
+
+            if pipeline:
+                while True:
+                    try:
+                        work_q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        if stop_event.is_set():
+                            break  # stop landed mid-wait: discard the launch
+            else:
+                if _assemble_segment(item):
+                    break
+            if max_segments is not None and dispatched >= max_segments:
+                break
+    finally:
+        if pipeline:
+            work_q.put(_done)
+            worker.join()
+    if worker_error[0] is not None:
+        raise worker_error[0]
+
+    if stats is not None:
+        stats.update(st)
+        stats["segments"] = n_assembled[0]
+        stats["pipeline"] = pipeline
+        stats["checkpoint_format"] = (
+            checkpoint_format if mgr is not None else None
+        )
+
+    return _full_history(res.copy())

@@ -141,7 +141,7 @@ _FALLBACK_LEAVES = (
 )
 
 
-def segment_telemetry(history, t0: int, t1: int) -> dict:
+def segment_telemetry(history, t0: int, t1: int, *, local: bool = False) -> dict:
     """Reduce one slot span of a ``BatchedRunHistory`` to flat scalars.
 
     The campaign service calls this at segment boundaries (slots
@@ -152,22 +152,41 @@ def segment_telemetry(history, t0: int, t1: int) -> dict:
     vector.  Everything is copied out as plain Python scalars/lists, so the
     result stays valid after the driver reuses its accumulators for the
     next segment (and serializes straight to JSON).
+
+    ``local=True`` says ``history`` is a span-local view — every 2-D
+    leaf's rows are already exactly ``[t0, t1)``, as in the streaming
+    driver's ``SegmentEvent.segment_history`` — the O(segment) input that
+    keeps per-boundary telemetry cost independent of how deep into the
+    campaign the segment sits.  ``t0``/``t1`` always name the *global*
+    slot span and are echoed in the result either way.
     """
-    if not 0 <= t0 < t1 <= history.modes.shape[0]:
+    if t0 < 0 or t1 <= t0:
+        raise ValueError(f"slot span [{t0}, {t1}) is empty or negative")
+    n_rows = int(np.shape(history.modes)[0])
+    if local:
+        if n_rows != t1 - t0:
+            raise ValueError(
+                f"local span view holds {n_rows} slot rows but the span "
+                f"[{t0}, {t1}) covers {t1 - t0}"
+            )
+        lo, hi = 0, n_rows
+    elif t1 <= n_rows:
+        lo, hi = t0, t1
+    else:
         raise ValueError(
             f"slot span [{t0}, {t1}) outside the campaign horizon "
-            f"[0, {history.modes.shape[0]})"
+            f"[0, {n_rows})"
         )
-    modes = np.asarray(history.modes)[t0:t1]
+    modes = np.asarray(history.modes)[lo:hi]
     resident = (
         np.ones(modes.shape, bool)
         if history.attached is None
-        else np.asarray(history.attached, bool)[t0:t1]
+        else np.asarray(history.attached, bool)[lo:hi]
     )
     served = (modes == 0) & resident
     for k in _FALLBACK_LEAVES:
         if k in history.outputs:
-            served &= np.asarray(history.outputs[k])[t0:t1] == 0
+            served &= np.asarray(history.outputs[k])[lo:hi] == 0
     n_resident = int(resident.sum())
     out: dict = {
         "t0": int(t0),
@@ -178,7 +197,7 @@ def segment_telemetry(history, t0: int, t1: int) -> dict:
         ),
     }
     if "phy_throughput" in history.kpms:
-        tput = np.asarray(history.kpms["phy_throughput"])[t0:t1]
+        tput = np.asarray(history.kpms["phy_throughput"])[lo:hi]
         out["throughput_bps"] = (
             float(tput[resident].mean()) if n_resident else 0.0
         )
@@ -195,12 +214,12 @@ def segment_telemetry(history, t0: int, t1: int) -> dict:
     if "executed_flops" in history.outputs:
         out["executed_flops"] = float(
             np.asarray(history.outputs["executed_flops"], np.float64)
-            [t0:t1].sum()
+            [lo:hi].sum()
         )
     for k in _FALLBACK_LEAVES:
         if k in history.outputs:
             out[f"{k}_slot_ues"] = int(
-                (np.asarray(history.outputs[k])[t0:t1] > 0).sum()
+                (np.asarray(history.outputs[k])[lo:hi] > 0).sum()
             )
     return out
 

@@ -253,11 +253,21 @@ def _prepare(engine, topo: CellTopology, schedule, n_slots: int, key, ue_keys):
     return profile, params, ue_keys, link0
 
 
-def _cached_jit(topo: CellTopology, key: tuple, build) -> Any:
-    """One jitted callable per (engine, program kind, statics) per topology."""
+def _cached_jit(
+    topo: CellTopology, key: tuple, build, *, donate_argnums: tuple = ()
+) -> Any:
+    """One jitted callable per (engine, program kind, statics) per topology.
+
+    ``donate_argnums`` configures carry donation on the cached executable
+    (streaming drivers donate their scan carries); callers that donate must
+    put a marker in ``key`` so donating and non-donating programs cache
+    separately.
+    """
     fn = topo._fn_cache.get(key)
     if fn is None:
-        fn = topo._fn_cache[key] = jax.jit(build())
+        fn = topo._fn_cache[key] = jax.jit(
+            build(), donate_argnums=tuple(donate_argnums)
+        )
     return fn
 
 

@@ -901,6 +901,28 @@ class BatchedPuschPipeline:
         (link, _), traj = jax.lax.scan(step, (link0, start), xs)
         return link, traj
 
+    @partial(
+        jax.jit,
+        static_argnames=("self", "profile", "cell_axis", "faults"),
+        donate_argnames=("link0",),
+    )
+    def _run_scan_streaming(
+        self, profile, link0, ue_keys, modes, params,
+        cell_of_ue=None, cell_params=None, *, cell_axis=None,
+        slot0=None, active=None, faults=None, corrupt=None,
+    ):
+        # Streaming-only entry: identical program to ``_run_scan`` but the
+        # carry buffer is donated — segment k's post-scan link state is dead
+        # the moment it has been (copied for checkpointing and) gathered
+        # into segment k+1's carry, so the steady-state loop reuses one
+        # allocation instead of growing one per segment.  Callers that need
+        # the pre-donation value must ``jnp.copy`` it first.
+        return self._run_scan(
+            profile, link0, ue_keys, modes, params,
+            cell_of_ue, cell_params, cell_axis=cell_axis,
+            slot0=slot0, active=active, faults=faults, corrupt=corrupt,
+        )
+
     @partial(jax.jit, static_argnames=("self", "profile", "cell_axis"))
     def _run_perturbed_scan(
         self, profile, link0, ue_keys, rho, params,
@@ -1075,6 +1097,26 @@ class BatchedPuschPipeline:
         xs = params if fault_masks is None else (params, fault_masks)
         (link, sw, _), traj = jax.lax.scan(step, (link0, sw0, start), xs)
         return link, sw, traj
+
+    @partial(
+        jax.jit,
+        static_argnames=("self", "profile", "sw_cfg", "cell_axis", "faults"),
+        donate_argnames=("link0", "sw0"),
+    )
+    def _run_closed_scan_streaming(
+        self, profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+        cell_of_ue=None, cell_params=None, *, cell_axis=None,
+        slot0=None, active=None, faults=None, fault_masks=None,
+    ):
+        # Streaming-only entry mirroring ``_run_scan_streaming``: donates
+        # both carries (link + switch state).  See that method's note on
+        # liveness — copy before donating if the old value is still needed.
+        return self._run_closed_scan(
+            profile, sw_cfg, link0, sw0, ue_keys, params, policy,
+            cell_of_ue, cell_params, cell_axis=cell_axis,
+            slot0=slot0, active=active, faults=faults,
+            fault_masks=fault_masks,
+        )
 
     @partial(jax.jit, static_argnames=("self", "profile", "sw_cfg", "faults"))
     def _closed_slot_step(

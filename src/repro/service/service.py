@@ -466,12 +466,19 @@ class CampaignService:
             )
 
             def on_segment(ev) -> bool:
+                # reduce the O(segment) span view, not the full-campaign
+                # accumulators — per-boundary telemetry cost stays flat as
+                # the campaign ages
+                local = ev.segment_history is not None
                 sample = {
                     "campaign_id": rec.campaign_id,
                     "spec_hash": rec.spec_hash,
                     "seg_idx": ev.seg_idx,
                     "n_segments": ev.n_segments,
-                    **segment_telemetry(ev.history, ev.t0, ev.t1),
+                    **segment_telemetry(
+                        ev.segment_history if local else ev.history,
+                        ev.t0, ev.t1, local=local,
+                    ),
                 }
                 self.ring.push(sample)
                 rec.segments_done = ev.seg_idx + 1

@@ -32,7 +32,8 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
         "gated": {s: copy.deepcopy(gated_row) for s in cs.REQUIRED_SHARES},
         "campaign_spec_hash": "deadbeef",
     }
-    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4"):
+    if schema in ("arches-bench-v2", "arches-bench-v3", "arches-bench-v4",
+                  "arches-bench-v5"):
         payload["streaming"] = {
             "zero_churn_equal": "bitwise",
             "streaming_slot_ues_per_s": rate,
@@ -40,7 +41,19 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
             "churn_resident_slot_ues_per_s": rate / 2,
             "n_segments": 2,
         }
-    if schema in ("arches-bench-v3", "arches-bench-v4"):
+    if schema == "arches-bench-v5":
+        payload["streaming"].update({
+            "serial_checkpointed_slot_ues_per_s": rate / 3,
+            "pipelined_checkpointed_slot_ues_per_s": rate / 2,
+            "pipeline_speedup": 1.5,
+            "segment_breakdown_s": {
+                "dispatch": 0.001, "wait": 0.01,
+                "assembly": 0.002, "checkpoint": 0.003,
+            },
+            "delta_ckpt_bytes_per_segment": 4096,
+            "delta_bytes_length_invariant": "yes",
+        })
+    if schema in ("arches-bench-v3", "arches-bench-v4", "arches-bench-v5"):
         payload["faults"] = {
             "fault_replay_equal": "bitwise",
             "resume_equal": "bitwise",
@@ -49,7 +62,7 @@ def _payload(schema: str = cs.SCHEMA, rate: float = 100.0) -> dict:
             "health_tripped_slot_ues": 8,
             "quarantined_slot_ues": 12,
         }
-    if schema == "arches-bench-v4":
+    if schema in ("arches-bench-v4", "arches-bench-v5"):
         payload["service"] = {
             "zero_churn_service_equal": "bitwise",
             "drain_resume_equal": "bitwise",
@@ -71,9 +84,10 @@ def _write(tmp_path, name: str, payload: dict):
 
 
 def test_validate_schema_accepts_all_supported_schemas():
+    assert cs.validate_schema(_payload("arches-bench-v5"), "x") == []
+    # v1..v4 snapshots predate the later sections and must stay
+    # readable (BENCH_pr6.json is v1, BENCH_pr9.json is v4)
     assert cs.validate_schema(_payload("arches-bench-v4"), "x") == []
-    # v1/v2/v3 snapshots predate the later sections and must stay
-    # readable (BENCH_pr6.json is v1)
     assert cs.validate_schema(_payload("arches-bench-v3"), "x") == []
     assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
     assert cs.validate_schema(_payload("arches-bench-v1"), "x") == []
@@ -95,7 +109,9 @@ def test_validate_schema_missing_top_level_keys():
 
 
 @pytest.mark.parametrize(
-    "schema", ["arches-bench-v2", "arches-bench-v3", "arches-bench-v4"]
+    "schema",
+    ["arches-bench-v2", "arches-bench-v3", "arches-bench-v4",
+     "arches-bench-v5"],
 )
 def test_validate_schema_v2_plus_requires_streaming_section(schema):
     payload = _payload(schema)
@@ -121,6 +137,19 @@ def test_validate_schema_v3_requires_faults_section():
         assert any(f"faults missing {key!r}" in e for e in errs), key
     # v2 snapshots predate the section: no faults, no complaint
     assert cs.validate_schema(_payload("arches-bench-v2"), "x") == []
+
+
+def test_validate_schema_v5_requires_pipelined_streaming_keys():
+    """v5 extends the streaming section: the pipelined-executor rates and
+    delta-checkpoint measurements are mandatory for v5 snapshots only."""
+    for key in cs.REQUIRED_STREAMING_V5_KEYS:
+        payload = _payload("arches-bench-v5")
+        del payload["streaming"][key]
+        errs = cs.validate_schema(payload, "x")
+        assert any(f"streaming missing {key!r}" in e for e in errs), key
+    # v4 snapshots predate the keys: stripping them is no violation
+    payload = _payload("arches-bench-v4")
+    assert cs.validate_schema(payload, "x") == []
 
 
 def test_validate_schema_v4_requires_service_section():
@@ -238,13 +267,18 @@ def test_committed_default_baseline_is_valid():
     assert cs.check(cs.DEFAULT_BASELINE) == 0
 
 
-def test_committed_pr6_snapshot_stays_readable():
+@pytest.mark.parametrize(
+    "name,schema",
+    [("BENCH_pr6.json", "arches-bench-v1"),
+     ("BENCH_pr9.json", "arches-bench-v4")],
+)
+def test_committed_older_snapshots_stay_readable(name, schema):
     """Earlier committed snapshots are the perf *trajectory*: moving the
-    default baseline to BENCH_pr9.json must not orphan BENCH_pr6.json."""
-    pr6 = cs.DEFAULT_BASELINE.parent / "BENCH_pr6.json"
-    assert pr6.exists()
-    payload = cs._load(pr6)
+    default baseline to BENCH_pr10.json must not orphan them."""
+    path = cs.DEFAULT_BASELINE.parent / name
+    assert path.exists()
+    payload = cs._load(path)
     assert payload is not None
-    assert payload["schema"] == "arches-bench-v1"
-    assert cs.validate_schema(payload, pr6.name) == []
-    assert cs.check(pr6) == 0
+    assert payload["schema"] == schema
+    assert cs.validate_schema(payload, path.name) == []
+    assert cs.check(path) == 0

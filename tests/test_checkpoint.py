@@ -187,3 +187,118 @@ def test_latest_step_ignores_tmp_and_incomplete(tmp_path):
     os.makedirs(tmp_path / "step_00000009.tmp-zz")
     os.makedirs(tmp_path / "step_00000007")
     assert latest_step(str(tmp_path)) == 4
+
+
+# -- delta chains (manifest_extra + resume_chain) ------------------------------
+
+
+from repro.checkpoint.store import (  # noqa: E402
+    STREAMING_DELTA_KIND,
+    checkpoint_kind,
+    read_manifest_extra,
+    resume_chain,
+)
+
+
+def _delta_extra(step):
+    return {"kind": STREAMING_DELTA_KIND, "prev_step": step - 1}
+
+
+def test_manifest_extra_roundtrip_and_kind(tmp_path):
+    d = str(tmp_path / "ck")
+    save_pytree(_tree(), d, manifest_extra=_delta_extra(5))
+    assert checkpoint_kind(d) == STREAMING_DELTA_KIND
+    assert read_manifest_extra(d) == {
+        "kind": STREAMING_DELTA_KIND, "prev_step": 4
+    }
+    # untagged checkpoints read back as monolithic (kind None) — the
+    # legacy format needs no migration
+    d2 = str(tmp_path / "legacy")
+    save_pytree(_tree(), d2)
+    assert checkpoint_kind(d2) is None
+    assert read_manifest_extra(d2) == {}
+    # the payload is untouched by the extra fields
+    r = restore_pytree(jax.tree.map(jnp.zeros_like, _tree()), d)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(_tree()["w"]))
+
+
+def test_manifest_extra_reserved_keys_rejected(tmp_path):
+    with pytest.raises(ValueError, match="leaves/treedef"):
+        save_pytree(_tree(), str(tmp_path / "ck"),
+                    manifest_extra={"leaves": 1})
+
+
+def test_resume_chain_empty_and_monolithic(tmp_path):
+    assert resume_chain(str(tmp_path)) == (None, [])
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    mgr.maybe_save(3, _tree())
+    # latest step monolithic: the legacy restore path, no deltas
+    assert resume_chain(str(tmp_path)) == (3, [])
+
+
+def test_resume_chain_full_delta_to_step_one(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    for s in (1, 2, 3):
+        mgr.maybe_save(s, _tree(s), manifest_extra=_delta_extra(s))
+    # chain reaches step 1: replay from initial state, no anchor
+    assert resume_chain(str(tmp_path)) == (None, [1, 2, 3])
+
+
+def test_resume_chain_anchored_on_monolithic(tmp_path):
+    """A legacy (monolithic) directory continued in delta format resumes
+    through the mixed chain: monolithic anchor + delta suffix."""
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    mgr.maybe_save(1, _tree(1))
+    mgr.maybe_save(2, _tree(2))
+    for s in (3, 4):
+        mgr.maybe_save(s, _tree(s), manifest_extra=_delta_extra(s))
+    assert resume_chain(str(tmp_path)) == (2, [3, 4])
+
+
+def test_resume_chain_broken_predecessor_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    for s in (2, 3):  # step 1 never written: 2's predecessor is missing
+        mgr.maybe_save(s, _tree(s), manifest_extra=_delta_extra(s))
+    with pytest.raises(CheckpointMismatchError, match="broken"):
+        resume_chain(str(tmp_path))
+
+
+def test_keep_none_disables_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    for s in range(1, 8):
+        mgr.maybe_save(s, _tree(s), manifest_extra=_delta_extra(s))
+    assert mgr.steps() == list(range(1, 8))
+
+
+def test_crash_mid_write_resumes_from_last_complete_delta(tmp_path,
+                                                          monkeypatch):
+    """The crash-mid-rename property extended to the delta chain: a crash
+    publishing delta k leaves the chain ending at k-1, complete and
+    restorable; retrying k afterwards heals the chain."""
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=None)
+    trees = {s: _tree(s) for s in (1, 2, 3)}
+    mgr.maybe_save(1, trees[1], manifest_extra=_delta_extra(1))
+    mgr.maybe_save(2, trees[2], manifest_extra=_delta_extra(2))
+
+    real_rename = os.rename
+
+    def exploding_rename(src, dst):
+        raise OSError("simulated crash at publish time")
+
+    monkeypatch.setattr(os, "rename", exploding_rename)
+    with pytest.raises(OSError, match="simulated crash"):
+        mgr.maybe_save(3, trees[3], manifest_extra=_delta_extra(3))
+    monkeypatch.setattr(os, "rename", real_rename)
+
+    # chain ends at the last complete manifest entry, fully restorable
+    assert resume_chain(str(tmp_path)) == (None, [1, 2])
+    for s in (1, 2):
+        r = load_pytree(mgr.dir_for(s))
+        np.testing.assert_array_equal(
+            np.asarray(r["w"]), np.asarray(trees[s]["w"])
+        )
+    assert all(".tmp-" not in e for e in os.listdir(tmp_path))
+
+    # the retried write heals the chain
+    mgr.maybe_save(3, trees[3], manifest_extra=_delta_extra(3))
+    assert resume_chain(str(tmp_path)) == (None, [1, 2, 3])

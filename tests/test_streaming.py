@@ -897,3 +897,358 @@ def test_resume_from_empty_dir_raises(ref_session, tmp_path):
     sess = ArchesSession(spec, ai_params=ref_session.ai_params)
     with pytest.raises(FileNotFoundError):
         sess.run_streaming(resume_from=str(tmp_path / "nope"))
+
+
+# -- PR 10: pipelined executor, identity fast path, delta checkpoints ----------
+#
+# The pipelined segment executor overlaps segment k's host assembly /
+# checkpoint write with segment k+1's device scan (donated carries, bounded
+# double-buffer queue).  Its contract is the repo's standing one: bitwise
+# equality to the serial reference on every history leaf, every checkpoint
+# and every `on_segment` event, across open-loop/gated/closed-loop/faulted/
+# sharded paths (the forced-8-shard subprocess above runs the pipelined
+# default).  Incremental delta checkpoints are O(segment): per-step bytes
+# must not grow with campaign length, chains must anchor on monolithic
+# steps, and a failure inside assembly must never lose a durable prefix.
+
+import repro.core.streaming as streaming_mod
+from repro.checkpoint.store import (
+    STREAMING_DELTA_KIND,
+    checkpoint_kind,
+    latest_step,
+    list_steps,
+)
+from repro.core.streaming import is_identity_permutation
+from repro.core.telemetry import segment_telemetry
+
+
+@pytest.fixture(scope="module")
+def churn_closed_session(ref_session):
+    """One closed-loop churn session shared by the PR-10 suite (the scan
+    program compiles once; every run of it is deterministic)."""
+    spec = _closed_spec(CAPACITY, N_SLOTS, churn=_RESUME_CHURN)
+    return ArchesSession(spec, ai_params=ref_session.ai_params)
+
+
+def _stream_events(sess, **kw):
+    """Run streaming and record the on_segment event stream as plain data."""
+    events = []
+
+    def on_segment(ev):
+        events.append({
+            "seg_idx": ev.seg_idx,
+            "n_segments": ev.n_segments,
+            "t0": ev.t0,
+            "t1": ev.t1,
+            "occupant": tuple(int(x) for x in ev.occupant),
+            **segment_telemetry(
+                ev.segment_history, ev.t0, ev.t1, local=True
+            ),
+        })
+        return False
+
+    hist = sess.run_streaming(on_segment=on_segment, **kw)
+    return hist, events
+
+
+@pytest.mark.parametrize("case", ["closed", "batched", "gated", "faulted"])
+def test_pipelined_equals_serial_bitwise(
+    ref_session, churn_closed_session, case
+):
+    if case == "closed":
+        sess = churn_closed_session
+    elif case == "faulted":
+        spec = _closed_spec(
+            CAPACITY, N_SLOTS, churn=_RESUME_CHURN,
+            faults=FaultSpec(
+                decision_outages=((5, 9),), corruption_spans=((2, 8),),
+                corruption_kind="nan", telemetry_drop_prob=0.15, seed=3,
+                breaker_trips=2, breaker_window=4, breaker_cooldown=4,
+            ),
+        )
+        sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    else:
+        spec = dataclasses.replace(
+            ref_session.spec, path=case, n_ues=CAPACITY,
+            modes=_modes_grid(N_SLOTS, N_IDS), churn=_RESUME_CHURN,
+        )
+        sess = ArchesSession(spec, ai_params=ref_session.ai_params)
+    pipe, ev_pipe = _stream_events(sess, pipeline=True)
+    ser, ev_ser = _stream_events(sess, pipeline=False)
+    assert_history_equal(pipe, ser)
+    np.testing.assert_array_equal(pipe.attached, ser.attached)
+    np.testing.assert_array_equal(pipe.bank_slot, ser.bank_slot)
+    # identical event streams, telemetry included
+    assert ev_pipe == ev_ser
+    assert [e["seg_idx"] for e in ev_pipe] == list(range(N_SLOTS // SEG))
+
+
+def test_pipelined_equals_serial_under_topology(ref_session):
+    base = CampaignSpec(
+        path="batched", scenario="churn_cell", n_ues=4, n_slots=8,
+        n_prb=N_PRB, seed=3, modes=_modes_grid(8, 4),
+        topology=TopologySpec(n_cells=2, coupling=0.5,
+                              cell_noise_offsets_db=(0.0, 3.0)),
+        churn=ChurnSchedule(
+            n_ue_ids=4, segment_slots=4, initial=(0, 1, 2),
+            events=((4, 3, "attach"),),
+        ),
+    )
+    sess = ArchesSession(base, ai_params=ref_session.ai_params)
+    pipe, ev_pipe = _stream_events(sess, pipeline=True)
+    ser, ev_ser = _stream_events(sess, pipeline=False)
+    assert_history_equal(pipe, ser)
+    np.testing.assert_array_equal(pipe.bank_slot, ser.bank_slot)
+    assert ev_pipe == ev_ser
+
+
+# -- identity fast path (zero-churn boundaries skip the re-pack gather) --------
+
+
+def test_identity_permutation_detection():
+    assert is_identity_permutation(np.arange(4))
+    assert not is_identity_permutation(np.array([1, 0, 2, 3]))
+    assert not is_identity_permutation(np.array([0, 1, -1, 3]))  # cold row
+    assert not is_identity_permutation(np.array([], np.int64))
+
+
+def test_identity_fast_path_returns_state_unchanged(monkeypatch):
+    state = {"a": jnp.arange(6.0).reshape(3, 2), "b": jnp.ones(3)}
+    cold = jax.tree.map(jnp.zeros_like, state)
+    perm = np.arange(3)
+    out = gather_state_rows(state, perm, cold)
+    assert out is state  # no gather dispatched at all
+    # forced gather takes the device path and must agree bitwise
+    monkeypatch.setattr(streaming_mod, "_FORCE_GATHER", True)
+    forced = gather_state_rows(state, perm, cold)
+    assert forced is not state
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)
+        ),
+        state, forced,
+    )
+
+
+def test_zero_churn_fast_path_bitwise_equals_forced_gather(
+    ref_session, monkeypatch
+):
+    spec = dataclasses.replace(
+        ref_session.spec, churn=_full_residency(N_IDS, SEG)
+    )
+    sess = ArchesSession(
+        spec, ai_params=ref_session.ai_params, engine=ref_session.engine
+    )
+    fast = sess.run_streaming()
+    monkeypatch.setattr(streaming_mod, "_FORCE_GATHER", True)
+    gathered = sess.run_streaming()
+    assert_history_equal(fast, gathered)
+    np.testing.assert_array_equal(fast.bank_slot, gathered.bank_slot)
+    np.testing.assert_array_equal(fast.attached, gathered.attached)
+
+
+# -- O(segment) telemetry (SegmentEvent.segment_history) -----------------------
+
+
+def test_segment_history_is_span_local(churn_closed_session):
+    """Per-boundary telemetry reduces an O(segment) input: every slot-axis
+    leaf of ``segment_history`` covers exactly [t0, t1) no matter how deep
+    into the campaign the segment sits — and reduces to the same telemetry
+    as the full-campaign view."""
+    rows = []
+
+    def on_segment(ev):
+        sh = ev.segment_history
+        shapes = (
+            {np.shape(v)[0] for v in sh.kpms.values()}
+            | {np.shape(v)[0] for v in sh.outputs.values()}
+            | {
+                np.shape(sh.modes)[0], np.shape(sh.attached)[0],
+                np.shape(sh.bank_slot)[0], np.shape(sh.decisions)[0],
+            }
+        )
+        rows.append({
+            "t0": ev.t0,
+            "shapes": shapes,
+            "local": segment_telemetry(sh, ev.t0, ev.t1, local=True),
+            "full": segment_telemetry(ev.history, ev.t0, ev.t1),
+        })
+        return False
+
+    churn_closed_session.run_streaming(on_segment=on_segment)
+    assert [r["t0"] for r in rows] == [0, SEG, 2 * SEG]
+    for r in rows:
+        # the structural cost pin: input size is SEG rows, independent of t0
+        assert r["shapes"] == {SEG}
+        assert r["local"] == r["full"]
+
+
+def test_segment_telemetry_local_span_mismatch_raises():
+    from repro.core.runtime import BatchedRunHistory
+
+    hist = BatchedRunHistory(
+        modes=np.zeros((SEG, 2), np.int32), kpms={}, outputs={}
+    )
+    with pytest.raises(ValueError, match="local span"):
+        segment_telemetry(hist, 0, SEG + 1, local=True)
+
+
+# -- delta checkpoints: O(segment) bytes, chains, failure durability -----------
+
+
+def test_delta_checkpoint_bytes_independent_of_campaign_length(
+    ref_session, churn_closed_session, tmp_path
+):
+    st12 = {}
+    d12 = str(tmp_path / "d12")
+    churn_closed_session.run_streaming(checkpoint_dir=d12, stats=st12)
+    sess24 = ArchesSession(
+        _closed_spec(CAPACITY, 2 * N_SLOTS, churn=_RESUME_CHURN),
+        ai_params=ref_session.ai_params, engine=churn_closed_session.engine,
+    )
+    st24 = {}
+    d24 = str(tmp_path / "d24")
+    sess24.run_streaming(checkpoint_dir=d24, stats=st24)
+    b12, b24 = st12["checkpoint_bytes"], st24["checkpoint_bytes"]
+    assert len(b12) == 3 and len(b24) == 6
+    # O(seg): per-segment checkpoint bytes never grow with campaign length
+    # or with how late in the campaign the segment sits
+    assert max(b12 + b24) <= 1.05 * min(b12 + b24)
+    # every delta is retained (keep=None) and manifest-tagged
+    assert list_steps(d24) == list(range(1, 7))
+    for s in list_steps(d24):
+        assert checkpoint_kind(
+            os.path.join(d24, f"step_{s:08d}")
+        ) == STREAMING_DELTA_KIND
+    # the legacy monolithic snapshot re-writes the whole horizon: bytes
+    # scale with n_slots (and dominate the delta)
+    m12, m24 = {}, {}
+    churn_closed_session.run_streaming(
+        checkpoint_dir=str(tmp_path / "m12"),
+        checkpoint_format="monolithic", stats=m12,
+    )
+    sess24.run_streaming(
+        checkpoint_dir=str(tmp_path / "m24"),
+        checkpoint_format="monolithic", stats=m24,
+    )
+    mono_growth = np.mean(m24["checkpoint_bytes"]) - np.mean(
+        m12["checkpoint_bytes"]
+    )
+    delta_growth = abs(np.mean(b24) - np.mean(b12))
+    assert mono_growth > 10 * max(delta_growth, 1.0)
+    assert max(b12) < min(m12["checkpoint_bytes"])
+    assert st12["segments"] == 3 and st12["pipeline"]
+    assert st12["checkpoint_format"] == "delta"
+
+
+def test_monolithic_format_resume_roundtrip(churn_closed_session, tmp_path):
+    sess = churn_closed_session
+    ref = sess.run_streaming()
+    d = str(tmp_path / "mono")
+    sess.run_streaming(
+        checkpoint_dir=d, checkpoint_format="monolithic", max_segments=2
+    )
+    # untagged (legacy-format) steps
+    assert [
+        checkpoint_kind(os.path.join(d, f"step_{s:08d}"))
+        for s in list_steps(d)
+    ] == [None, None]
+    resumed = sess.run_streaming(resume_from=d)
+    assert_history_equal(resumed, ref)
+
+
+def test_mixed_monolithic_then_delta_chain_resumes(
+    churn_closed_session, tmp_path
+):
+    """A directory written by the legacy monolithic writer and continued by
+    the delta writer resumes bitwise through the mixed chain."""
+    from repro.checkpoint.store import resume_chain
+
+    sess = churn_closed_session
+    ref = sess.run_streaming()
+    d = str(tmp_path / "mixed")
+    sess.run_streaming(
+        checkpoint_dir=d, checkpoint_format="monolithic", max_segments=1
+    )
+    sess.run_streaming(resume_from=d, checkpoint_dir=d, max_segments=1)
+    assert resume_chain(d) == (1, [2])
+    resumed = sess.run_streaming(resume_from=d)
+    assert_history_equal(resumed, ref)
+
+
+def test_resume_into_fresh_dir_writes_anchor(churn_closed_session, tmp_path):
+    """Resuming from one directory while checkpointing into a fresh one
+    must anchor the fresh chain with a monolithic step — a delta with no
+    on-disk predecessor restores nothing."""
+    sess = churn_closed_session
+    ref = sess.run_streaming()
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    sess.run_streaming(checkpoint_dir=d1, max_segments=1)
+    sess.run_streaming(resume_from=d1, checkpoint_dir=d2, max_segments=1)
+    assert list_steps(d2) == [2]
+    assert checkpoint_kind(os.path.join(d2, "step_00000002")) is None
+    sess.run_streaming(resume_from=d2, checkpoint_dir=d2, max_segments=1)
+    assert checkpoint_kind(
+        os.path.join(d2, "step_00000003")
+    ) == STREAMING_DELTA_KIND
+    resumed = sess.run_streaming(resume_from=d2)
+    assert_history_equal(resumed, ref)
+
+
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_assembly_failure_preserves_prior_checkpoint(
+    churn_closed_session, tmp_path, monkeypatch, pipeline
+):
+    """An exception inside segment k's host assembly must not lose segment
+    k-1's durable checkpoint: the write landed before k's assembly began,
+    and the run resumes bitwise from it."""
+    sess = churn_closed_session
+    ref = sess.run_streaming()
+    d = str(tmp_path / "ck")
+    real_scatter = streaming_mod._scatter_segment
+
+    def exploding_scatter(full, seg_arr, t0, ids, slots):
+        if t0 == SEG:  # first scatter of segment 1
+            raise RuntimeError("assembly boom")
+        return real_scatter(full, seg_arr, t0, ids, slots)
+
+    monkeypatch.setattr(streaming_mod, "_scatter_segment", exploding_scatter)
+    with pytest.raises(RuntimeError, match="assembly boom"):
+        sess.run_streaming(checkpoint_dir=d, pipeline=pipeline)
+    monkeypatch.setattr(streaming_mod, "_scatter_segment", real_scatter)
+
+    # segment 0's checkpoint survived; nothing for the failed segment
+    assert latest_step(d) == 1
+    resumed = sess.run_streaming(resume_from=d)
+    assert_history_equal(resumed, ref)
+
+
+def test_on_segment_stop_discards_speculative_segments(
+    churn_closed_session, tmp_path
+):
+    """Graceful drain under the pipelined executor: a truthy on_segment
+    stops at that boundary; speculatively launched segments are never
+    assembled or checkpointed."""
+    sess = churn_closed_session
+    ref = sess.run_streaming()
+    d = str(tmp_path / "ck")
+    seen = []
+
+    def stop_after_two(ev):
+        seen.append(ev.seg_idx)
+        return ev.seg_idx >= 1
+
+    hist = sess.run_streaming(checkpoint_dir=d, on_segment=stop_after_two)
+    assert seen == [0, 1]
+    assert list_steps(d) == [1, 2]  # no checkpoint for the discarded launch
+    np.testing.assert_array_equal(
+        hist.modes[: 2 * SEG], ref.modes[: 2 * SEG]
+    )
+    assert (np.asarray(hist.modes[2 * SEG:]) == -1).all()
+    resumed = sess.run_streaming(resume_from=d)
+    assert_history_equal(resumed, ref)
+
+
+def test_checkpoint_format_validated(churn_closed_session):
+    with pytest.raises(ValueError, match="checkpoint_format"):
+        churn_closed_session.run_streaming(checkpoint_format="nope")
